@@ -1,0 +1,44 @@
+"""Shared benchmark utilities: timed sections, the full simulated
+population, CSV emission (name,us_per_call,derived)."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+
+from repro.core.calibration import (CALIBRATED_CONSTANTS,
+                                    CALIBRATED_VARIATION)
+from repro.core.profiler import Profiler
+from repro.core.variation import sample_population
+
+_POP_CACHE = {}
+
+
+def population(fast: bool = False, seed: int = 0):
+    key = (fast, seed)
+    if key not in _POP_CACHE:
+        cfg = CALIBRATED_VARIATION
+        if fast:
+            cfg = dataclasses.replace(cfg, n_modules=24, n_cells=8)
+        _POP_CACHE[key] = sample_population(jax.random.PRNGKey(seed), cfg)
+    return _POP_CACHE[key]
+
+
+def profiler(fast: bool = False) -> Profiler:
+    return Profiler(constants=CALIBRATED_CONSTANTS,
+                    grid_step=2.5 if fast else 1.25)
+
+
+class timed:
+    def __enter__(self):
+        self.t0 = time.monotonic()
+        return self
+
+    def __exit__(self, *a):
+        self.us = (time.monotonic() - self.t0) * 1e6
+
+
+def emit(name: str, us: float, derived: str):
+    print(f"{name},{us:.0f},{derived}", flush=True)

@@ -1,0 +1,39 @@
+"""Fig. 2a: maximum error-free refresh interval of a representative
+module at 85C (per bank / chip / module, read & write).
+
+Paper: read 208 ms, write 160 ms at module level; banks up to
+352/256 ms; DDR3 standard 64 ms.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, population, profiler, timed
+
+
+def run(fast: bool = False) -> dict:
+    pop = population(fast)
+    prof = profiler(fast)
+    out = {}
+    with timed() as t:
+        for op in ("read", "write"):
+            rp = prof.refresh_profile(pop, 85.0, op)
+            med = int(np.argsort(rp.per_module)[len(rp.per_module) // 2])
+            out[op] = {
+                "module_ms": float(rp.per_module[med]),
+                "best_bank_ms": float(rp.per_bank[med].max()),
+                "best_chip_ms": float(rp.per_chip[med].max()),
+                "population_median_ms": float(np.median(rp.per_module)),
+                "population_min_ms": float(rp.per_module.min()),
+                "safe_ms": float(rp.safe[med]),
+            }
+    emit("fig2a_refresh_envelope", t.us,
+         f"read={out['read']['module_ms']:.0f}ms(paper 208)|"
+         f"write={out['write']['module_ms']:.0f}ms(paper 160)|std=64ms")
+    return out
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(), indent=1))

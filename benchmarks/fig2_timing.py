@@ -1,0 +1,47 @@
+"""Fig. 2b/2c: error-free timing-parameter combinations for the
+representative module at its safe refresh interval, 55C vs 85C.
+
+Paper: read latency sum reducible 24% @85C / 36% @55C; write 35% / 47%.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, population, profiler, timed
+from repro.core import timing as T
+
+
+def run(fast: bool = False) -> dict:
+    pop = population(fast)
+    prof = profiler(fast)
+    out = {}
+    with timed() as t:
+        rp = {op: prof.refresh_profile(pop, 85.0, op)
+              for op in ("read", "write")}
+        med = int(np.argsort(rp["read"].per_module)
+                  [pop.n_modules // 2])
+        for op, base in (("read", T.DDR3_1600.read_sum()),
+                         ("write", T.DDR3_1600.write_sum())):
+            for temp in (85.0, 55.0):
+                tp = prof.timing_profile(pop, temp, op, rp[op].safe)
+                red = 1 - tp.latency_sum[med] / base
+                n_pass = int(tp.pass_per_module[med].sum())
+                out[f"{op}_{int(temp)}"] = {
+                    "latency_reduction": float(red),
+                    "passing_combos": n_pass,
+                    "chosen": tp.combos[med, :4].tolist(),
+                }
+    emit("fig2bc_timing_combos", t.us,
+         "read 85/55C={:.0%}/{:.0%}(paper 24/36%)|write={:.0%}/{:.0%}"
+         "(paper 35/47%)".format(
+             out["read_85"]["latency_reduction"],
+             out["read_55"]["latency_reduction"],
+             out["write_85"]["latency_reduction"],
+             out["write_55"]["latency_reduction"]))
+    return out
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(), indent=1))

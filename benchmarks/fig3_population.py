@@ -1,0 +1,59 @@
+"""Fig. 3 + Sec. 5.2: the 115-module population analysis.
+
+Paper targets:
+  3a/3b refresh envelopes: most modules far above 64 ms.
+  3c read  latency: -21.1% @85C, -32.7% @55C on average.
+  3d write latency: -34.4% @85C, -55.1% @55C on average.
+  per-parameter averages @55C: tRCD 17.3 / tRAS 37.7 / tWR 54.8 /
+  tRP 35.2 %; @85C: 15.6 / 20.4 / 20.6 / 28.5 %.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, population, profiler, timed
+
+
+def run(fast: bool = False) -> dict:
+    pop = population(fast)
+    prof = profiler(fast)
+    out: dict = {}
+    with timed() as t:
+        rp = {op: prof.refresh_profile(pop, 85.0, op)
+              for op in ("read", "write")}
+        out["refresh"] = {
+            "read_min_ms": float(rp["read"].per_module.min()),
+            "read_median_ms": float(sorted(rp["read"].per_module)
+                                    [pop.n_modules // 2]),
+            "write_median_ms": float(sorted(rp["write"].per_module)
+                                     [pop.n_modules // 2]),
+        }
+        for temp in (85.0, 55.0):
+            tp_r = prof.timing_profile(pop, temp, "read", rp["read"].safe)
+            tp_w = prof.timing_profile(pop, temp, "write", rp["write"].safe)
+            red_r = prof.reductions(tp_r, "read")
+            red_w = prof.reductions(tp_w, "write")
+            out[f"t{int(temp)}"] = {
+                "read_sum": red_r["latency_sum"],
+                "write_sum": red_w["latency_sum"],
+                "trcd": red_r["trcd"], "tras": red_r["tras"],
+                "twr": red_w["twr"], "trp": red_r["trp"],
+                "allsafe": {k: red_r[f"{k}_allsafe"]
+                            for k in ("trcd", "tras", "trp")}
+                | {"twr": red_w["twr_allsafe"]},
+            }
+    emit("fig3_population", t.us,
+         "read55={:.1%}(paper 32.7%)|write55={:.1%}(paper 55.1%)|"
+         "read85={:.1%}(21.1%)|write85={:.1%}(34.4%)".format(
+             out["t55"]["read_sum"], out["t55"]["write_sum"],
+             out["t85"]["read_sum"], out["t85"]["write_sum"]))
+    emit("sec52_param_reductions_55C", t.us,
+         "tRCD={:.1%}(17.3)|tRAS={:.1%}(37.7)|tWR={:.1%}(54.8)|"
+         "tRP={:.1%}(35.2)".format(
+             out["t55"]["trcd"], out["t55"]["tras"],
+             out["t55"]["twr"], out["t55"]["trp"]))
+    return out
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(), indent=1))

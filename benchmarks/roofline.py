@@ -1,0 +1,119 @@
+"""Roofline analysis from the dry-run artifacts (deliverable g).
+
+Per (arch x shape) on the single-pod mesh:
+    compute    = flops / peak_FLOPs        (per device, scan-aware)
+    memory     = hbm_bytes / HBM_bw        (upper bound: CPU-backend
+                                            fusion boundaries; TPU
+                                            fusion is tighter)
+    collective = collective_bytes / link_bw (per-device op-result bytes)
+
+plus MODEL_FLOPS (6*N_active*D [+ attention]) and the useful-compute
+ratio MODEL_FLOPS / HLO_FLOPs, which exposes remat/dispatch overhead.
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (DESIGN.md §8).
+"""
+
+from __future__ import annotations
+
+import json
+
+from repro.configs import get_config
+from repro.configs.registry import SHAPES
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+CHIPS = 256
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """Useful model flops per device per step (forward [+backward])."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        per_tok = cfg.flops_per_token(shape.seq_len)   # forward only
+        return 3.0 * per_tok * tokens / CHIPS          # fwd + bwd = 3x fwd
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return cfg.flops_per_token(shape.seq_len) * tokens / CHIPS
+    # decode: one token per sequence; attention reads the whole cache
+    return cfg.flops_per_token(shape.seq_len) * shape.global_batch / CHIPS
+
+
+def analyze_cell(rec: dict) -> dict | None:
+    if not rec.get("ok") or rec.get("skipped"):
+        return None
+    cost = rec.get("cost") or {}
+    flops = cost.get("flops") or 0.0
+    hbm = cost.get("hbm_bytes") or 0.0
+    coll = cost.get("collective_bytes", 0.0) or sum(
+        rec.get("collectives", {}).values())
+    t_c = flops / PEAK_FLOPS
+    t_m = hbm / HBM_BW
+    t_x = coll / LINK_BW
+    dominant = max((("compute", t_c), ("memory", t_m),
+                    ("collective", t_x)), key=lambda kv: kv[1])[0]
+    mf = model_flops(rec["arch"], rec["shape"])
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+        "dominant": dominant,
+        "model_flops": mf,
+        "useful_ratio": (mf / flops) if flops else 0.0,
+        "peak_gb": (rec.get("memory", {}).get("peak_bytes") or 0) / 2**30,
+        "roofline_fraction": t_c / max(t_c, t_m, t_x) if max(
+            t_c, t_m, t_x) > 0 else 0.0,
+    }
+
+
+def table(results_path: str = "dryrun_results.json",
+          mesh: str = "16x16") -> list[dict]:
+    rows = []
+    with open(results_path) as f:
+        for rec in json.load(f):
+            if rec.get("mesh") != mesh:
+                continue
+            row = analyze_cell(rec)
+            if row:
+                rows.append(row)
+            elif rec.get("skipped"):
+                rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                             "mesh": rec["mesh"], "skipped": True})
+    return rows
+
+
+def markdown(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | "
+           "dominant | useful ratio | peak GB |\n|---|---|---|---|---|"
+           "---|---|---|")
+    lines = [hdr]
+    for r in rows:
+        if r.get("skipped"):
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"skipped (full attention) | — | — |")
+            continue
+        lines.append(
+            "| {arch} | {shape} | {compute_s:.3f} | {memory_s:.3f} | "
+            "{collective_s:.3f} | {dominant} | {useful_ratio:.2f} | "
+            "{peak_gb:.1f} |".format(**r))
+    return "\n".join(lines)
+
+
+def run(fast: bool = False):
+    from benchmarks.common import emit, timed
+    with timed() as t:
+        rows = table()
+    analyzed = [r for r in rows if not r.get("skipped")]
+    dom = {}
+    for r in analyzed:
+        dom[r["dominant"]] = dom.get(r["dominant"], 0) + 1
+    emit("roofline_table", t.us,
+         f"cells={len(rows)}|dominant:{dom}|"
+         f"worst_useful_ratio={min((r['useful_ratio'] for r in analyzed), default=0):.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    print(markdown(run()))

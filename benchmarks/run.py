@@ -1,0 +1,52 @@
+"""Benchmark harness: one function per paper table/figure plus the
+framework/roofline benches.  Prints ``name,us_per_call,derived`` CSV.
+
+  python -m benchmarks.run [--fast]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced population / fewer samples")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (fig2_refresh, fig2_timing, fig3_population,
+                            fig4_system, framework, multi_timing,
+                            power_bench, repeatability, roofline)
+
+    benches = {
+        "fig2_refresh": fig2_refresh.run,
+        "fig2_timing": fig2_timing.run,
+        "fig3_population": fig3_population.run,
+        "fig4_system": fig4_system.run,
+        "power": power_bench.run,
+        "repeatability": repeatability.run,
+        "multi_timing": multi_timing.run,
+        "framework": framework.run,
+        "roofline": roofline.run,
+    }
+    print("name,us_per_call,derived")
+    failed = []
+    for name, fn in benches.items():
+        if args.only and name != args.only:
+            continue
+        try:
+            fn(fast=args.fast)
+        except Exception as e:  # noqa: BLE001
+            failed.append(name)
+            print(f"{name},0,ERROR:{type(e).__name__}:{e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        raise SystemExit(f"failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

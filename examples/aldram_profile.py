@@ -1,0 +1,29 @@
+"""Full AL-DRAM reproduction pipeline on the 115-module population:
+refresh envelopes -> safe intervals -> timing sweeps at 55/85C ->
+per-parameter reductions vs the paper's measured numbers -> system
+speedup (Fig. 4).
+
+    PYTHONPATH=src python examples/aldram_profile.py [--fast]
+"""
+
+import argparse
+import json
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+
+    from benchmarks import fig2_refresh, fig3_population, fig4_system
+    print("== refresh envelopes (Fig 2a) ==")
+    print(json.dumps(fig2_refresh.run(fast=args.fast), indent=1))
+    print("== population analysis (Fig 3 / Sec 5.2) ==")
+    print(json.dumps(fig3_population.run(fast=args.fast), indent=1))
+    print("== system evaluation (Fig 4) ==")
+    print(json.dumps(fig4_system.run(fast=args.fast)["summary"],
+                     indent=1, default=str))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.configs.base import LayerSpec, ModelConfig, reduced  # noqa: F401
+from repro.configs.registry import ARCHS, get_config, input_shapes  # noqa: F401

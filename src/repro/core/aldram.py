@@ -1,0 +1,126 @@
+"""Adaptive-Latency DRAM: the mechanism (paper Sec. 4).
+
+The controller holds one timing table per (module, temperature bin),
+built by the profiler, and at runtime selects the table for the
+module's *current* operating temperature — always rounding the
+temperature UP to the next profiled bin (conservative).  The paper's
+reliability argument is enforced as an invariant: every selected table
+must be error-free for the whole module at the bin's maximum
+temperature, with the profiling guardband included.
+
+No DRAM-chip or interface changes: this is exactly the multiple-
+timing-register scheme the paper proposes for the memory controller.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import timing as T
+from repro.core.charge import ChargeConstants
+from repro.core.profiler import Profiler
+from repro.core.variation import Population
+
+DEFAULT_TEMP_BINS = (45.0, 55.0, 65.0, 75.0, 85.0)
+
+
+@dataclasses.dataclass
+class TimingTable:
+    """Per-module timing parameters for each temperature bin."""
+
+    temp_bins: tuple[float, ...]
+    # [modules, bins, 4] -> (trcd, tras, twr, trp) in ns
+    params: np.ndarray
+    safe_trefi_read: np.ndarray     # [modules] ms
+    safe_trefi_write: np.ndarray    # [modules] ms
+
+    def lookup(self, module: int, temp_c: float) -> T.TimingParams:
+        """Conservative selection: smallest profiled bin >= temp; above
+        the hottest bin fall back to standard JEDEC timings."""
+        for i, b in enumerate(self.temp_bins):
+            if temp_c <= b:
+                p = self.params[module, i]
+                return T.TimingParams(trcd=float(p[0]), tras=float(p[1]),
+                                      twr=float(p[2]), trp=float(p[3]))
+        return T.DDR3_1600
+
+
+class ALDRAMController:
+    """Profile once; select per (module, temperature) at runtime."""
+
+    def __init__(self, profiler: Profiler | None = None,
+                 temp_bins: tuple[float, ...] = DEFAULT_TEMP_BINS):
+        self.profiler = profiler or Profiler()
+        self.temp_bins = temp_bins
+        self.table: TimingTable | None = None
+
+    # ------------------------------------------------------------ profile
+    def profile(self, pop: Population) -> TimingTable:
+        prof = self.profiler
+        rp_read = prof.refresh_profile(pop, 85.0, "read")
+        rp_write = prof.refresh_profile(pop, 85.0, "write")
+
+        n = pop.n_modules
+        params = np.zeros((n, len(self.temp_bins), 4), np.float32)
+        for bi, temp in enumerate(self.temp_bins):
+            tp_r = prof.timing_profile(pop, temp, "read", rp_read.safe)
+            tp_w = prof.timing_profile(pop, temp, "write", rp_write.safe)
+            # one register set must satisfy both tests: take the safer
+            # (larger) of the read/write choices per parameter
+            params[:, bi, 0] = np.maximum(tp_r.combos[:, 0], tp_w.combos[:, 0])
+            params[:, bi, 1] = tp_r.combos[:, 1]          # tRAS: read test
+            params[:, bi, 2] = tp_w.combos[:, 2]          # tWR: write test
+            params[:, bi, 3] = np.maximum(tp_r.combos[:, 3], tp_w.combos[:, 3])
+        self.table = TimingTable(self.temp_bins, params,
+                                 rp_read.safe, rp_write.safe)
+        return self.table
+
+    # ------------------------------------------------------------- select
+    def select(self, module: int, temp_c: float) -> T.TimingParams:
+        assert self.table is not None, "profile() first"
+        return self.table.lookup(module, temp_c)
+
+    # -------------------------------------------------------------- verify
+    def verify(self, pop: Population, n_temps: int = 3) -> bool:
+        """The zero-error invariant (the paper's 33-day stress test,
+        Sec. 6): for every module and every bin, the selected timings
+        must be error-free at the bin's max temperature with the safe
+        refresh interval.  Returns True iff no margin is negative."""
+        assert self.table is not None
+        import jax.numpy as jnp
+        from repro.kernels.charge_sim import ops as charge_ops
+
+        tbl = self.table
+        for bi, temp in enumerate(tbl.temp_bins):
+            for m in range(pop.n_modules):
+                p = tbl.params[m, bi]
+                combo_r = np.array([[p[0], p[1], p[2], p[3],
+                                     tbl.safe_trefi_read[m]]], np.float32)
+                combo_w = combo_r.copy()
+                combo_w[0, 4] = tbl.safe_trefi_write[m]
+                cells = jnp.asarray(pop.module(m))
+                r, _ = charge_ops.combo_margins(
+                    cells, jnp.asarray(combo_r), temp,
+                    self.profiler.constants, impl=self.profiler.impl)
+                _, w = charge_ops.combo_margins(
+                    cells, jnp.asarray(combo_w), temp,
+                    self.profiler.constants, impl=self.profiler.impl)
+                if float(np.asarray(r).min()) < 0 or float(np.asarray(w).min()) < 0:
+                    return False
+        return True
+
+    # ----------------------------------------------------------- reporting
+    def average_reductions(self, temp_c: float,
+                           std: T.TimingParams = T.DDR3_1600) -> dict:
+        assert self.table is not None
+        bi = next(i for i, b in enumerate(self.table.temp_bins)
+                  if temp_c <= b)
+        p = self.table.params[:, bi, :]
+        return {
+            "trcd": float(1 - (p[:, 0] / std.trcd).mean()),
+            "tras": float(1 - (p[:, 1] / std.tras).mean()),
+            "twr": float(1 - (p[:, 2] / std.twr).mean()),
+            "trp": float(1 - (p[:, 3] / std.trp).mean()),
+        }

@@ -1,0 +1,281 @@
+"""Charge <-> latency interdependence model (paper Sec. 3), in pure JAX.
+
+The paper's SPICE analysis is summarised by three observations:
+
+  1. more initial cell charge -> faster *sensing*      (tRCD, tRAS)
+  2. restore is asymptotic -> partial restore suffices (tRAS, tWR)
+  3. precharge is asymptotic -> partial precharge OK   (tRP)
+
+We express the same physics as closed-form RC dynamics.  All voltages
+are normalised to VDD = 1; the bitline is precharged to 0.5; a cell's
+state `q` is its voltage in [0, 1] (logical "1" stored as high).  By
+symmetry, a "0" behaves identically around 0.5, so we model the "1"
+polarity and treat the bitline residual with worst-case sign.
+
+Every map below is affine in `q`, so the steady state of the
+refresh/access loop is the fixed point of an affine contraction; we
+iterate it a few times inside the margin computation (it converges
+geometrically with rate << 1).
+
+This module is the *mathematical oracle* shared by the Pallas kernel
+(`repro.kernels.charge_sim`) and its reference implementation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CellParams(NamedTuple):
+    """Per-cell electrical parameters (arrays broadcast together).
+
+    tau_r    : sense-path RC constant (ns)   -- wordline/charge-share
+    xfer     : charge-transfer ratio         -- C_cell / (C_cell + C_bl)
+    tau_ret85: retention time constant at 85C (ms)
+    tau_p    : bitline precharge RC constant (ns)
+    tau_w    : cell *charging* RC constant (ns) -- restore & write drive.
+               Independent of tau_r with a much wider spread: the cells
+               that limit tWR/tRAS cuts (slow chargers) are not the
+               cells that limit the refresh envelope (weak retainers),
+               which is exactly why the paper finds large tWR margin at
+               the module's own safe refresh interval.
+    """
+
+    tau_r: jnp.ndarray
+    xfer: jnp.ndarray
+    tau_ret85: jnp.ndarray
+    tau_p: jnp.ndarray
+    tau_w: jnp.ndarray
+
+    def stack(self) -> jnp.ndarray:
+        return jnp.stack([self.tau_r, self.xfer, self.tau_ret85, self.tau_p,
+                          self.tau_w], axis=-1)
+
+    @staticmethod
+    def unstack(arr: jnp.ndarray) -> "CellParams":
+        return CellParams(arr[..., 0], arr[..., 1], arr[..., 2],
+                          arr[..., 3], arr[..., 4])
+
+
+@dataclasses.dataclass(frozen=True)
+class ChargeConstants:
+    """Global (non-varying) physics constants; calibrated in
+    `repro.core.calibration` against the paper's population statistics."""
+
+    t_wl: float = 1.3          # wordline rise + command overhead (ns)
+    alpha_share: float = 0.55  # charge-share time as multiple of tau_r
+    tau_s: float = 1.85        # sense-amp regeneration time constant (ns)
+    dv_full: float = 0.26      # bitline swing the sense amp must develop
+    dv_min: float = 0.035      # minimum differential for correct sensing
+    t_p0: float = 1.1          # precharge driver dead time (ns)
+    t_wr_base: float = 7.5     # write drive time outside tWR (tCWL+burst, ns)
+    t_wr_floor: float = 6.5    # bitline write-driver swing floor (ns):
+                               # a hard circuit minimum for tWR that no
+                               # charge slack can buy back (this is what
+                               # stops the 55C tWR cut at ~55 %)
+    kappa_w: float = 0.77      # write-test retention derating: write
+                               # patterns exercise worst-case coupling /
+                               # disturb (paper Sec. 9.1 methodology), so
+                               # the write envelope sits below the read
+                               # envelope even though the written charge
+                               # is near-full
+    beta_w: float = 0.60       # write-path RC as multiple of tau_r
+    dv_full_w: float = 0.055   # row-open swing needed before a WRITE
+    k_ret: float = 0.0693      # retention ~halves per +10C  (ln 2 / 10)
+    k_rc: float = 0.0020       # RC slowdown per +C above 55C
+    v_precharge: float = 0.5
+
+    def as_tuple(self) -> tuple:
+        return dataclasses.astuple(self)
+
+
+# Register as a pytree so jitted functions retrace on *structure*, not on
+# every new constants value (the calibration search sweeps these).
+jax.tree_util.register_dataclass(
+    ChargeConstants,
+    data_fields=[f.name for f in dataclasses.fields(ChargeConstants)],
+    meta_fields=[])
+
+DEFAULT_CONSTANTS = ChargeConstants()
+
+
+def retention_tau(tau_ret85_ms: jnp.ndarray, temp_c: jnp.ndarray,
+                  c: ChargeConstants = DEFAULT_CONSTANTS) -> jnp.ndarray:
+    """Retention time constant at `temp_c`; leakage accelerates with
+    temperature (paper Sec. 1: cells lose more charge when hot)."""
+    return tau_ret85_ms * jnp.exp(c.k_ret * (85.0 - temp_c))
+
+
+def rc_at_temp(tau_r: jnp.ndarray, temp_c: jnp.ndarray,
+               c: ChargeConstants = DEFAULT_CONSTANTS) -> jnp.ndarray:
+    """Cell RC grows mildly with temperature (mobility degradation)."""
+    return tau_r * (1.0 + c.k_rc * jnp.maximum(temp_c - 55.0, 0.0))
+
+
+def bitline_residual(trp_ns: jnp.ndarray, tau_p: jnp.ndarray,
+                     c: ChargeConstants = DEFAULT_CONSTANTS) -> jnp.ndarray:
+    """Residual bitline differential left after an (possibly shortened)
+    precharge of tRP ns.  Observation 3: the final part of precharge is
+    asymptotic, so the residual decays exponentially in tRP."""
+    t = jnp.maximum(trp_ns - c.t_p0, 0.0)
+    return c.v_precharge * jnp.exp(-t / tau_p)
+
+
+def sense_delta_v(q: jnp.ndarray, xfer: jnp.ndarray) -> jnp.ndarray:
+    """Initial bitline perturbation produced by charge-sharing with a
+    cell at voltage q.  Observation 1: proportional to stored charge."""
+    return (q - 0.5) * xfer
+
+
+def sense_time(q: jnp.ndarray, residual: jnp.ndarray, tau_r_t: jnp.ndarray,
+               xfer: jnp.ndarray,
+               c: ChargeConstants = DEFAULT_CONSTANTS) -> jnp.ndarray:
+    """Time for the sense amplifier to develop the full bitline swing,
+    starting from the charge-share perturbation minus the worst-case
+    precharge residual.  Regeneration is exponential, so the time is
+    logarithmic in the initial differential."""
+    dv_eff = sense_delta_v(q, xfer) - residual
+    dv_eff = jnp.maximum(dv_eff, 1e-6)
+    return (c.t_wl + c.alpha_share * tau_r_t
+            + c.tau_s * jnp.log(c.dv_full / dv_eff))
+
+
+def row_open_time(residual: jnp.ndarray, q: jnp.ndarray,
+                  tau_r_t: jnp.ndarray, xfer: jnp.ndarray,
+                  c: ChargeConstants = DEFAULT_CONSTANTS) -> jnp.ndarray:
+    """Weaker sensing requirement before a WRITE: the write driver
+    overpowers the bitline, so only a small swing (dv_full_w) is needed
+    for the row to be safely open."""
+    dv_eff = jnp.maximum(sense_delta_v(q, xfer) - residual, 1e-6)
+    return (c.t_wl + c.alpha_share * tau_r_t
+            + c.tau_s * jnp.log(jnp.maximum(c.dv_full_w / dv_eff, 1e-6)))
+
+
+# ---------------------------------------------------------------------------
+# Steady-state margins for a timing combo.
+# combo layout (see repro.core.timing): [trcd, tras, twr, trp, trefi_ms]
+# ---------------------------------------------------------------------------
+
+_FIXED_POINT_ITERS = 8
+
+
+def read_margin(cell: CellParams, combo: jnp.ndarray, temp_c: jnp.ndarray,
+                c: ChargeConstants = DEFAULT_CONSTANTS,
+                trefi: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Margin (>=0 means error-free) of the read/refresh steady state.
+
+    The refresh loop: every tREFI the row is activated (sensing) and
+    restored for (tRAS - t_sense); between refreshes the cell leaks.
+    The worst-case access is the one just before the next refresh.
+    Two failure modes:
+      * sensing: effective differential below dv_min  -> wrong data
+      * tRCD: column access issued before sensing completes
+    Restore inadequacy (tRAS too small) shows up through the fixed
+    point: the steady-state charge collapses and the sense margin goes
+    negative.
+    """
+    trcd, tras, trp = combo[..., 0], combo[..., 1], combo[..., 3]
+    trefi = combo[..., 4] if trefi is None else trefi
+    tau_r_t = rc_at_temp(cell.tau_r, temp_c, c)
+    tau_w_t = rc_at_temp(cell.tau_w, temp_c, c)
+    tau_ret = retention_tau(cell.tau_ret85, temp_c, c)
+    leak = jnp.exp(-trefi / tau_ret)
+    residual = bitline_residual(trp, cell.tau_p, c)
+
+    def body(_, q_r):
+        q_acc = 0.5 + (q_r - 0.5) * leak
+        ts = sense_time(q_acc, residual, tau_r_t, cell.xfer, c)
+        t_rest = jnp.maximum(tras - ts, 0.0)
+        # the activation itself dumps the cell's charge onto the bitline
+        # (paper Fig. 1): restore starts from the charge-shared level,
+        # NOT from the pre-access level — this is what keeps tRAS from
+        # collapsing at low temperature.
+        q_shared = 0.5 + (q_acc - 0.5) * cell.xfer
+        return 1.0 - (1.0 - q_shared) * jnp.exp(-t_rest / tau_w_t)
+
+    q_r = jax.lax.fori_loop(0, _FIXED_POINT_ITERS, body,
+                            0.95 + 0.0 * (leak + tras))  # broadcast carry
+    q_acc = 0.5 + (q_r - 0.5) * leak
+    ts = sense_time(q_acc, residual, tau_r_t, cell.xfer, c)
+
+    m_sense = (sense_delta_v(q_acc, cell.xfer) - residual - c.dv_min) / c.dv_min
+    m_rcd = (trcd - ts) / 1.0   # ns-scale margin
+    return jnp.minimum(m_sense, m_rcd)
+
+
+def write_margin(cell: CellParams, combo: jnp.ndarray, temp_c: jnp.ndarray,
+                 c: ChargeConstants = DEFAULT_CONSTANTS,
+                 trefi: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Margin of the write/refresh steady state.
+
+    Worst case: a write flips the data of a fully-leaked cell right
+    after a refresh boundary, is cut short by a reduced tWR, and the
+    written value must then survive a full tREFI of leakage before
+    being sensed.  Observation 2: the tail of the restore is
+    asymptotic, so tWR tolerates large cuts when cells are typical.
+    """
+    trcd, twr, trp = combo[..., 0], combo[..., 2], combo[..., 3]
+    trefi = combo[..., 4] if trefi is None else trefi
+    tau_r_t = rc_at_temp(cell.tau_r, temp_c, c)
+    tau_w = rc_at_temp(cell.tau_w, temp_c, c) * c.beta_w   # write driver
+    tau_ret = retention_tau(cell.tau_ret85, temp_c, c) * c.kappa_w
+    leak = jnp.exp(-trefi / tau_ret)
+    residual = bitline_residual(trp, cell.tau_p, c)
+
+    # Worst case for the write *duration*: the cell holds a freshly
+    # written opposite value (leakage toward V/2 would only make the
+    # flip easier), so the drive starts from the far rail.
+    q_low = 0.05 + 0.0 * leak
+    t_drive = jnp.maximum(twr + c.t_wr_base, 0.0)
+    q_written = 1.0 - (1.0 - q_low) * jnp.exp(-t_drive / tau_w)
+    q_at_sense = 0.5 + (q_written - 0.5) * leak
+
+    t_open = row_open_time(residual, q_at_sense, tau_r_t, cell.xfer, c)
+    m_sense = (sense_delta_v(q_at_sense, cell.xfer) - residual - c.dv_min) / c.dv_min
+    m_rcd = (trcd - t_open) / 1.0
+    # hard circuit floor: the write driver must complete its bitline
+    # swing within tWR regardless of how much charge slack exists
+    m_floor = twr - c.t_wr_floor * (tau_r_t / 4.5)
+    return jnp.minimum(jnp.minimum(m_sense, m_rcd), m_floor)
+
+
+def combo_margins(cell_stack: jnp.ndarray, combos: jnp.ndarray,
+                  temp_c: float,
+                  c: ChargeConstants = DEFAULT_CONSTANTS,
+                  trefi_cells: jnp.ndarray | None = None
+                  ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Dense (cells x combos) margin grids for read and write tests.
+
+    cell_stack: [n_cells, 4] stacked CellParams
+    combos:     [n_combos, 5]
+    trefi_cells: optional [n_cells] per-cell refresh interval override
+        (used to fold per-module safe refresh intervals into one batched
+        sweep over the whole population)
+    returns (read_margins, write_margins): each [n_cells, n_combos]
+
+    This is the profiler's hot spot (the FPGA campaign, Sec. 5) and the
+    compute the Pallas kernel `charge_sim` implements.
+    """
+    cell = CellParams.unstack(cell_stack[:, None, :])       # [n, 1, 4]
+    cm = combos[None, :, :]                                  # [1, m, 5]
+    t = jnp.asarray(temp_c, dtype=cell_stack.dtype)
+    trefi = None if trefi_cells is None else trefi_cells[:, None]
+    return (read_margin(cell, cm, t, c, trefi),
+            write_margin(cell, cm, t, c, trefi))
+
+
+def refresh_margin(cell_stack: jnp.ndarray, trefi_ms: jnp.ndarray,
+                   std_combo: jnp.ndarray, temp_c: float, op: str,
+                   c: ChargeConstants = DEFAULT_CONSTANTS) -> jnp.ndarray:
+    """Margins over a refresh-interval sweep at standard timings
+    (Fig. 2a).  trefi_ms: [k]; returns [n_cells, k]."""
+    combos = jnp.broadcast_to(std_combo, (trefi_ms.shape[0], 5))
+    combos = combos.at[:, 4].set(trefi_ms)
+    cell = CellParams.unstack(cell_stack[:, None, :])
+    t = jnp.asarray(temp_c, dtype=cell_stack.dtype)
+    fn = read_margin if op == "read" else write_margin
+    return fn(cell, combos[None, :, :], t, c)

@@ -1,0 +1,54 @@
+"""Guardband semantics shared by the profiler and the controller.
+
+The paper's procedure (Sec. 5.1): the *safe* operating point is the
+maximum error-free point minus one sweep step (8 ms for the refresh
+interval, one timing step for timing parameters).  The reliability
+invariant (Sec. 4): the charge at the chosen operating point must never
+be below the worst-case-cell-at-85C reference level — AL-DRAM only
+gives up the slack *above* the manufacturer's own worst case.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import timing as T
+from repro.core.charge import ChargeConstants
+from repro.core.variation import worst_case_reference
+
+
+def safe_refresh(max_passing_ms: np.ndarray,
+                 step_ms: float = T.REFRESH_STEP_MS) -> np.ndarray:
+    return np.maximum(max_passing_ms - step_ms, step_ms)
+
+
+def reference_margin(constants: ChargeConstants,
+                     std: T.TimingParams = T.DDR3_1600,
+                     quantile: float = 4.0) -> float:
+    """Margin of a `quantile`-sigma compound worst-case cell at 85C
+    under standard JEDEC timings."""
+    from repro.kernels.charge_sim import ops as charge_ops
+    import jax.numpy as jnp
+
+    wc = worst_case_reference(quantile=quantile)
+    combo = np.asarray(std.as_array())[None, :]
+    r, w = charge_ops.combo_margins(jnp.asarray(wc), jnp.asarray(combo),
+                                    85.0, constants, impl="ref")
+    return float(min(np.asarray(r).min(), np.asarray(w).min()))
+
+
+def design_quantile(constants: ChargeConstants,
+                    std: T.TimingParams = T.DDR3_1600) -> float:
+    """The implied JEDEC design point: the largest compound-sigma
+    worst-case cell that still passes standard timings at 85C.  The
+    manufacturer guarantee AL-DRAM preserves is 'cells up to this
+    quantile are safe'; it must comfortably exceed the realised
+    population (every sampled cell passes — tested separately)."""
+    lo, hi = 0.0, 8.0
+    for _ in range(24):
+        mid = (lo + hi) / 2
+        if reference_margin(constants, std, quantile=mid) >= 0:
+            lo = mid
+        else:
+            hi = mid
+    return lo

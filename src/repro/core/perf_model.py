@@ -1,0 +1,131 @@
+"""Real-system evaluation model (paper Sec. 6, Fig. 4).
+
+35 workloads spanning the paper's pool (SPEC-like, STREAM, GUPS-like),
+each characterised by (MPKI, row-buffer hit rate, write fraction,
+memory-level parallelism).  A simple miss-overlap CPU model converts the
+DRAM simulator's average access latency into IPC:
+
+    CPI = CPI_exe + (MPKI/1000) * lat_mem * (1 - overlap)
+
+Single-core runs replay each workload's trace alone; multi-core runs
+interleave four instances (destroying row locality and adding queueing
+pressure, which is why the paper sees larger multi-core gains).
+AL-DRAM's speedup comes ONLY from swapping the timing parameters —
+the paper-faithful evaluation set (tRCD/tRAS/tWR/tRP reduced by
+27/32/33/18 %, Sec. 6) vs DDR3 standard.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dram_sim
+from repro.core.timing import ALDRAM_55C_EVAL, DDR3_1600, TimingParams
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    name: str
+    mpki: float
+    row_hit: float
+    write_frac: float
+    overlap: float = 0.50       # memory-level parallelism factor
+    cpi_exe: float = 0.7
+    intensive: bool = True
+
+
+# The paper's pool: SPEC CPU2006 + STREAM variants + GUPS (35 workloads).
+WORKLOADS: list[Workload] = [
+    # memory-intensive (MPKI >= 10 per the paper's classification)
+    Workload("mcf", 67.7, 0.45, 0.25),
+    Workload("lbm", 31.9, 0.70, 0.40),
+    Workload("milc", 25.8, 0.55, 0.25),
+    Workload("libquantum", 25.4, 0.90, 0.15),
+    Workload("soplex", 26.8, 0.55, 0.25),
+    Workload("gems", 24.9, 0.50, 0.30),
+    Workload("omnetpp", 21.6, 0.40, 0.30),
+    Workload("leslie3d", 20.9, 0.65, 0.30),
+    Workload("bwaves", 18.7, 0.70, 0.25),
+    Workload("sphinx3", 17.1, 0.60, 0.20),
+    Workload("zeusmp", 4.9, 0.60, 0.30),
+    Workload("cactusADM", 5.3, 0.55, 0.35),
+    Workload("xalancbmk", 23.9, 0.45, 0.25),
+    Workload("astar", 10.2, 0.45, 0.30),
+    Workload("wrf", 8.1, 0.65, 0.30),
+    # STREAM kernels (very memory-bandwidth-intensive)
+    Workload("s.copy", 52.0, 0.88, 0.50, overlap=0.45),
+    Workload("s.scale", 51.0, 0.88, 0.50, overlap=0.45),
+    Workload("s.add", 55.0, 0.90, 0.34, overlap=0.45),
+    Workload("s.triad", 56.0, 0.90, 0.34, overlap=0.45),
+    # GUPS-like random access
+    Workload("gups", 48.0, 0.10, 0.50, overlap=0.50),
+    # non-intensive
+    Workload("perlbench", 2.0, 0.60, 0.25, intensive=False),
+    Workload("bzip2", 3.6, 0.55, 0.30, intensive=False),
+    Workload("gcc", 4.2, 0.55, 0.30, intensive=False),
+    Workload("gobmk", 1.5, 0.50, 0.25, intensive=False),
+    Workload("hmmer", 2.2, 0.75, 0.20, intensive=False),
+    Workload("sjeng", 1.2, 0.45, 0.25, intensive=False),
+    Workload("h264ref", 2.8, 0.70, 0.20, intensive=False),
+    Workload("tonto", 1.3, 0.65, 0.25, intensive=False),
+    Workload("namd", 1.0, 0.70, 0.20, intensive=False),
+    Workload("dealII", 3.2, 0.65, 0.25, intensive=False),
+    Workload("povray", 0.7, 0.60, 0.20, intensive=False),
+    Workload("calculix", 2.6, 0.70, 0.25, intensive=False),
+    Workload("gromacs", 1.8, 0.65, 0.25, intensive=False),
+    Workload("sixtrack", 1.1, 0.70, 0.20, intensive=False),
+    Workload("gamess", 0.8, 0.65, 0.20, intensive=False),
+]
+
+
+def _trace_for(w: Workload, key, n: int, multi_core: bool):
+    """Multi-core: 4 instances share the channel — locality drops and
+    arrival pressure quadruples."""
+    row_hit = w.row_hit * (0.55 if multi_core else 1.0)
+    # arrival rate ~ mpki * issue rate; multi-core stacks four cores
+    inter = max(4.0, 400.0 / w.mpki) / (4.0 if multi_core else 1.0)
+    return dram_sim.synth_trace(key, n, row_hit=row_hit,
+                                write_frac=w.write_frac,
+                                inter_arrival_ns=inter)
+
+
+def workload_speedup(w: Workload, std: TimingParams, fast: TimingParams,
+                     key, n: int = 8192, multi_core: bool = True) -> float:
+    trace = _trace_for(w, key, n, multi_core)
+    lat_std = float(dram_sim.simulate(trace, std)["mean_latency_ns"])
+    lat_fast = float(dram_sim.simulate(trace, fast)["mean_latency_ns"])
+    cpi_std = w.cpi_exe + w.mpki / 1000.0 * lat_std * (1 - w.overlap)
+    cpi_fast = w.cpi_exe + w.mpki / 1000.0 * lat_fast * (1 - w.overlap)
+    return cpi_std / cpi_fast - 1.0
+
+
+def evaluate(std: TimingParams = DDR3_1600,
+             fast: TimingParams = ALDRAM_55C_EVAL,
+             n: int = 8192, seed: int = 0) -> dict:
+    """Reproduces Fig. 4's aggregate numbers."""
+    key = jax.random.PRNGKey(seed)
+    out: dict = {"single": {}, "multi": {}}
+    for multi in (False, True):
+        tag = "multi" if multi else "single"
+        for i, w in enumerate(WORKLOADS):
+            k = jax.random.fold_in(key, i + (1000 if multi else 0))
+            out[tag][w.name] = workload_speedup(w, std, fast, k, n, multi)
+
+    def gmean(vals):
+        return float(np.exp(np.mean(np.log1p(list(vals)))) - 1.0)
+
+    mi = [out["multi"][w.name] for w in WORKLOADS if w.intensive]
+    mn = [out["multi"][w.name] for w in WORKLOADS if not w.intensive]
+    out["summary"] = {
+        "multi_intensive_gmean": gmean(mi),
+        "multi_nonintensive_gmean": gmean(mn),
+        "multi_all_gmean": gmean(mi + mn),
+        "single_intensive_gmean": gmean(
+            [out["single"][w.name] for w in WORKLOADS if w.intensive]),
+        "best_multi": max(out["multi"].items(), key=lambda kv: kv[1]),
+    }
+    return out

@@ -1,0 +1,148 @@
+"""DRAM latency profiler — the SoftMC/FPGA campaign analogue (Sec. 5).
+
+Given a (simulated) module population, the profiler:
+
+  1. sweeps the refresh interval at standard timings to find the
+     maximum error-free interval per bank/chip/module (Fig. 2a, 3a/b),
+  2. derives the *safe refresh interval* (max passing − 8 ms guardband),
+  3. sweeps all timing-parameter combinations at the safe interval and
+     at each temperature, finding each module's error-free envelope
+     (Fig. 2b/c, 3c/d),
+  4. selects, per module, the acceptable combo (minimum latency sum,
+     min-tRCD tie-break) -> per-parameter reductions.
+
+Everything is vectorised: cells x combos margin grids come from
+`repro.kernels.charge_sim` (Pallas on TPU; jnp reference on CPU); the
+per-module safe refresh interval is folded into the cell side so the
+whole 115-module campaign is ONE batched sweep.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import timing as T
+from repro.core.charge import ChargeConstants, DEFAULT_CONSTANTS
+from repro.core.variation import Population
+
+
+class RefreshProfile(NamedTuple):
+    """Maximum error-free refresh intervals (ms) at standard timings."""
+
+    per_module: np.ndarray        # [modules]
+    per_chip: np.ndarray          # [modules, chips]
+    per_bank: np.ndarray          # [modules, banks]
+    safe: np.ndarray              # [modules] = per_module − guardband
+
+
+class TimingProfile(NamedTuple):
+    """Chosen error-free timing combo per module at one temperature."""
+
+    combos: np.ndarray            # [modules, 5]  (trcd, tras, twr, trp, trefi)
+    latency_sum: np.ndarray       # [modules]
+    pass_per_module: np.ndarray   # [modules, n_combos] bool
+
+
+@dataclasses.dataclass(frozen=True)
+class Profiler:
+    constants: ChargeConstants = DEFAULT_CONSTANTS
+    std: T.TimingParams = T.DDR3_1600
+    refresh_guardband_ms: float = T.REFRESH_STEP_MS
+    impl: str = "auto"
+    grid_step: float = T.TIMING_STEP_NS   # coarsen for calibration search
+
+    # ---------------------------------------------------------------- margins
+    def _margins(self, cells: jnp.ndarray, combos: np.ndarray, temp: float,
+                 op: str, trefi_cells: np.ndarray | None = None
+                 ) -> np.ndarray:
+        from repro.kernels.charge_sim import ops as charge_ops
+        tr = None if trefi_cells is None else jnp.asarray(trefi_cells)
+        read_m, write_m = charge_ops.combo_margins(
+            cells, jnp.asarray(combos), temp, self.constants,
+            impl=self.impl, trefi_cells=tr)
+        return np.asarray(read_m if op == "read" else write_m)
+
+    # ---------------------------------------------------- refresh sweep (2a)
+    def refresh_profile(self, pop: Population, temp: float, op: str,
+                        grid_ms: np.ndarray | None = None) -> RefreshProfile:
+        grid = grid_ms if grid_ms is not None else T.refresh_grid()
+        std_combo = np.asarray(self.std.as_array())
+        combos = np.repeat(std_combo[None, :], len(grid), axis=0)
+        combos[:, 4] = grid
+        m, ch, bk, k = pop.cells.shape[:4]
+        margins = self._margins(pop.flat_cells(), combos, temp, op)
+        margins = margins.reshape(m, ch, bk, k, len(grid))
+        ok = margins >= 0.0                                     # pass/fail
+
+        def max_passing(mask: np.ndarray) -> np.ndarray:
+            # mask: [..., n_grid]; the envelope is monotone (longer
+            # refresh interval = more leakage = less safe), so take the
+            # last grid value before the first failure.
+            any_fail = ~mask
+            idx = np.where(any_fail.any(-1), any_fail.argmax(-1), len(grid))
+            idx = np.maximum(idx - 1, 0)
+            return grid[idx]
+
+        per_cellmin = ok.all(3)                                 # [m,ch,bk,g]
+        per_bank = max_passing(per_cellmin.all(1))              # worst chip
+        per_chip = max_passing(per_cellmin.all(2))              # worst bank
+        per_module = max_passing(per_cellmin.all(1).all(1))
+        safe = np.maximum(per_module - self.refresh_guardband_ms, grid[0])
+        return RefreshProfile(per_module, per_chip, per_bank, safe)
+
+    # ------------------------------------------------- timing sweep (2b/2c)
+    def timing_profile(self, pop: Population, temp: float, op: str,
+                       safe_trefi_ms: np.ndarray | None = None
+                       ) -> TimingProfile:
+        """Sweep timing combos for every module at its safe refresh
+        interval, in one batched margin-grid evaluation."""
+        combos = (T.read_combo_grid(self.std, self.grid_step) if op == "read"
+                  else T.write_combo_grid(self.std, self.grid_step))
+        m, ch, bk, k = pop.cells.shape[:4]
+        cells_per_mod = ch * bk * k
+        trefi = (safe_trefi_ms if safe_trefi_ms is not None
+                 else np.full((m,), self.std.trefi, np.float32))
+        trefi_cells = np.repeat(trefi.astype(np.float32), cells_per_mod)
+
+        margins = self._margins(pop.flat_cells(), combos, temp, op,
+                                trefi_cells)
+        margins = margins.reshape(m, cells_per_mod, combos.shape[0])
+        ok = (margins >= 0.0).all(1)                     # [modules, combos]
+
+        lat_cols = (0, 1, 3) if op == "read" else (0, 2, 3)
+        lat_sum = combos[:, lat_cols].sum(-1)
+        order = np.lexsort((combos[:, 0], lat_sum))      # min sum, min tRCD
+
+        chosen = np.zeros((m, 5), dtype=np.float32)
+        sums = np.zeros((m,), dtype=np.float32)
+        for i in range(m):
+            ok_idx = order[ok[i][order]]
+            pick = int(ok_idx[0]) if ok_idx.size else int(np.argmax(lat_sum))
+            chosen[i] = combos[pick]
+            chosen[i, 4] = trefi[i]
+            sums[i] = lat_sum[pick]
+        return TimingProfile(chosen, sums, ok)
+
+    # ----------------------------------------------------------- reductions
+    def reductions(self, prof: TimingProfile, op: str) -> dict[str, float]:
+        """Average per-parameter and latency-sum reductions vs standard."""
+        std = self.std
+        r = {
+            "trcd": float(1 - (prof.combos[:, 0] / std.trcd).mean()),
+            "tras": float(1 - (prof.combos[:, 1] / std.tras).mean()),
+            "twr": float(1 - (prof.combos[:, 2] / std.twr).mean()),
+            "trp": float(1 - (prof.combos[:, 3] / std.trp).mean()),
+        }
+        base = std.read_sum() if op == "read" else std.write_sum()
+        r["latency_sum"] = float(1 - (prof.latency_sum / base).mean())
+        # the paper's real-system evaluation uses reductions that are safe
+        # for ALL modules (Sec. 6)
+        r["trcd_allsafe"] = float(1 - prof.combos[:, 0].max() / std.trcd)
+        r["tras_allsafe"] = float(1 - prof.combos[:, 1].max() / std.tras)
+        r["twr_allsafe"] = float(1 - prof.combos[:, 2].max() / std.twr)
+        r["trp_allsafe"] = float(1 - prof.combos[:, 3].max() / std.trp)
+        return r

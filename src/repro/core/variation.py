@@ -1,0 +1,152 @@
+"""Process-variation population model (paper Sec. 2, 5.2).
+
+The paper profiles 115 DIMMs x 8 chips = 920 chips.  Pass/fail of a
+timing combo is decided by the *worst* cell of the relevant unit, so we
+do not simulate billions of cells: we sample, for every
+(module, chip, bank) triple, K "tail cells" representing the weak end
+of that unit's cell distribution.  Each electrical parameter is
+hierarchical-lognormal:
+
+    ln x = ln mu + N(0, s_module) + N(0, s_chip) + N(0, s_bank) + tail
+
+with `tail` a one-sided half-normal pushing sampled cells toward the
+weak side (slower RC, shorter retention, weaker transfer).  The
+module-level component is the paper's inter-DIMM process variation;
+chip/bank components reproduce Fig. 2a/3's intra-DIMM spread.
+
+Constants are calibrated in `repro.core.calibration` so the simulated
+population reproduces the paper's measured margin statistics.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.charge import CellParams
+
+N_MODULES = 115
+N_CHIPS = 8
+N_BANKS = 8
+N_TAIL_CELLS = 24      # tail cells sampled per (module, chip, bank)
+
+
+@dataclasses.dataclass(frozen=True)
+class VariationConfig:
+    """Population hyper-parameters (medians + spreads, lognormal).
+
+    Spreads differ per field: retention varies over ~5x across the
+    population (refresh envelopes 72..352 ms, Fig. 3a) while the
+    RC/sense path varies only ~15 % (tRCD margin is the smallest of the
+    four parameters, Sec. 5.2) — the per-field `k_*` factors scale the
+    shared hierarchical sigmas accordingly."""
+
+    # medians of the WORST-CELL distribution per unit
+    mu_tau_r: float = 4.7          # ns     (sense-path RC constant)
+    mu_xfer: float = 0.185         # -      (charge transfer ratio)
+    mu_tau_ret85: float = 650.0    # ms     (retention tau at 85C)
+    mu_tau_p: float = 0.28         # ns     (precharge RC)
+    mu_tau_w: float = 2.0          # ns     (cell charging RC: restore/write)
+
+    # hierarchical spreads (sigma of ln-value), scaled per field below
+    s_module: float = 0.16
+    s_chip: float = 0.065
+    s_bank: float = 0.055
+    s_cell: float = 0.12           # one-sided tail spread
+
+    # per-field sigma scale factors
+    k_tau_r: float = 0.04
+    k_xfer: float = 0.03
+    k_tau_ret: float = 2.0
+    k_tau_p: float = 0.45
+    k_tau_w: float = 1.5           # wide: slow chargers are a distinct tail
+
+    # correlated-weakness: a slow cell also retains worse
+    rc_ret_corr: float = 0.15
+
+    n_modules: int = N_MODULES
+    n_chips: int = N_CHIPS
+    n_banks: int = N_BANKS
+    n_cells: int = N_TAIL_CELLS
+
+
+class Population(NamedTuple):
+    """cells: [modules, chips, banks, K, 4] stacked CellParams."""
+
+    cells: jnp.ndarray
+
+    @property
+    def n_modules(self) -> int:
+        return self.cells.shape[0]
+
+    def flat_cells(self) -> jnp.ndarray:
+        return self.cells.reshape(-1, self.cells.shape[-1])
+
+    def module(self, i: int) -> jnp.ndarray:
+        return self.cells[i].reshape(-1, self.cells.shape[-1])
+
+    def params(self) -> CellParams:
+        return CellParams.unstack(self.cells)
+
+
+def _hier_field(key, cfg: VariationConfig, mu: float, weak_sign: float,
+                k_field: float,
+                extra_cell: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Sample one lognormal field over the full population hierarchy.
+
+    weak_sign: +1 if larger is weaker (tau_r, tau_p), -1 if smaller is
+    weaker (xfer, tau_ret).  The one-sided cell tail always pushes the
+    value toward the weak side.  k_field scales all sigmas.
+    """
+    km, kc, kb, kx = jax.random.split(key, 4)
+    shape = (cfg.n_modules, cfg.n_chips, cfg.n_banks, cfg.n_cells)
+    z = (jax.random.normal(km, (cfg.n_modules, 1, 1, 1)) * cfg.s_module
+         + jax.random.normal(kc, (cfg.n_modules, cfg.n_chips, 1, 1)) * cfg.s_chip
+         + jax.random.normal(kb, (cfg.n_modules, cfg.n_chips, cfg.n_banks, 1))
+         * cfg.s_bank)
+    tail = jnp.abs(jax.random.normal(kx, shape)) * cfg.s_cell
+    if extra_cell is not None:
+        tail = tail + extra_cell * cfg.s_cell
+    return mu * jnp.exp(k_field * (z + weak_sign * tail))
+
+
+def sample_population(key: jax.Array,
+                      cfg: VariationConfig = VariationConfig()) -> Population:
+    """Draw the simulated 115-module population."""
+    k_r, k_x, k_t, k_p, k_w, k_c = jax.random.split(key, 6)
+    shape = (cfg.n_modules, cfg.n_chips, cfg.n_banks, cfg.n_cells)
+    # shared weakness component: correlates slow-RC with short retention
+    shared = jnp.abs(jax.random.normal(k_c, shape)) * cfg.rc_ret_corr
+
+    tau_r = _hier_field(k_r, cfg, cfg.mu_tau_r, +1.0, cfg.k_tau_r, shared)
+    xfer = _hier_field(k_x, cfg, cfg.mu_xfer, -1.0, cfg.k_xfer)
+    tau_ret = _hier_field(k_t, cfg, cfg.mu_tau_ret85, -1.0, cfg.k_tau_ret,
+                          shared)
+    tau_p = _hier_field(k_p, cfg, cfg.mu_tau_p, +1.0, cfg.k_tau_p)
+    tau_w = _hier_field(k_w, cfg, cfg.mu_tau_w, +1.0, cfg.k_tau_w)
+
+    cells = jnp.stack([tau_r, xfer, tau_ret, tau_p, tau_w], axis=-1)
+    return Population(cells=cells.astype(jnp.float32))
+
+
+def worst_case_reference(cfg: VariationConfig = VariationConfig(),
+                         quantile: float = 4.0) -> jnp.ndarray:
+    """The manufacturer's worst-case design cell: `quantile` sigmas out
+    on every parameter simultaneously.  JEDEC timings must keep THIS
+    cell at 85C error-free -- the reliability guarantee AL-DRAM
+    preserves (paper Sec. 4: we only give up charge down to the
+    worst-case level)."""
+    s_tot = cfg.s_module + cfg.s_chip + cfg.s_bank + cfg.s_cell
+
+    def f(k):
+        return float(jnp.exp(quantile * s_tot * k))
+
+    return jnp.array([cfg.mu_tau_r * f(cfg.k_tau_r),
+                      cfg.mu_xfer / f(cfg.k_xfer),
+                      cfg.mu_tau_ret85 / f(cfg.k_tau_ret),
+                      cfg.mu_tau_p * f(cfg.k_tau_p),
+                      cfg.mu_tau_w * f(cfg.k_tau_w)],
+                     dtype=jnp.float32)[None, :]

@@ -1,0 +1,1 @@
+from repro.kernels.charge_sim import ops, ref  # noqa: F401

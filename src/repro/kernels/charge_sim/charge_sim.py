@@ -1,0 +1,136 @@
+"""Pallas TPU kernel: dense (cells x combos) steady-state margin grid.
+
+This is the hot spot of the DRAM profiling campaign (paper Sec. 5): for
+every tail cell and every timing combo we iterate the affine
+refresh/restore fixed point and evaluate the read/write margins.  The
+computation is purely elementwise over a [n_cells, n_combos] grid —
+VPU-bound on TPU — so the kernel tiles the grid into VMEM blocks with
+cells on the sublane axis and combos on the lane axis.
+
+Layout: the small per-cell (4) and per-combo (6, incl. temperature)
+parameter vectors are passed *transposed* ([4, n_cells], [6, n_combos])
+so the long axis is the 128-lane minor dimension and BlockSpecs stay
+hardware-aligned.  VMEM per grid step with the default blocks:
+4*256*4 + 6*256*4 + 2*256*256*4 B ≈ 0.53 MB — far under the ~16 MB
+budget; the grid is compute-(VPU-)bound, which is the point: one kernel
+launch replaces the week-long FPGA sweep loop.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.charge import ChargeConstants
+
+# Block sizes: cells on sublanes (8-aligned), combos on lanes (128-aligned).
+BLOCK_CELLS = 256
+BLOCK_COMBOS = 256
+
+_FIXED_POINT_ITERS = 8
+
+
+def _margin_block(tau_r, xfer, tau_ret85, tau_p, tau_w_c, trcd, tras, twr,
+                  trp, trefi, temp_c, c: ChargeConstants):
+    """Elementwise margin math on a [BC, BM] block.  Mirrors
+    repro.core.charge but written block-wise for the kernel body."""
+    hot = 1.0 + c.k_rc * jnp.maximum(temp_c - 55.0, 0.0)
+    tau_r_t = tau_r * hot
+    tau_w_t = tau_w_c * hot
+    tau_ret = tau_ret85 * jnp.exp(c.k_ret * (85.0 - temp_c))
+    leak = jnp.exp(-trefi / tau_ret)
+    residual = c.v_precharge * jnp.exp(-jnp.maximum(trp - c.t_p0, 0.0) / tau_p)
+
+    def sense_t(q):
+        dv_eff = jnp.maximum((q - 0.5) * xfer - residual, 1e-6)
+        return c.t_wl + c.alpha_share * tau_r_t + c.tau_s * jnp.log(c.dv_full / dv_eff)
+
+    # read steady state: affine fixed point of the refresh/restore loop
+    def body(_, q_r):
+        q_acc = 0.5 + (q_r - 0.5) * leak
+        ts = sense_t(q_acc)
+        t_rest = jnp.maximum(tras - ts, 0.0)
+        # restore starts from the charge-shared level (paper Fig. 1)
+        q_shared = 0.5 + (q_acc - 0.5) * xfer
+        return 1.0 - (1.0 - q_shared) * jnp.exp(-t_rest / tau_w_t)
+
+    q_r = jax.lax.fori_loop(0, _FIXED_POINT_ITERS, body,
+                            jnp.full_like(leak + tras, 0.95))
+    q_acc = 0.5 + (q_r - 0.5) * leak
+    ts = sense_t(q_acc)
+    m_sense = ((q_acc - 0.5) * xfer - residual - c.dv_min) / c.dv_min
+    read_m = jnp.minimum(m_sense, trcd - ts)
+
+    # write steady state (worst case: flip of a freshly-written value);
+    # write tests exercise worst-case coupling -> derated retention
+    tau_w = tau_w_t * c.beta_w
+    leak_w = jnp.exp(-trefi / (tau_ret * c.kappa_w))
+    q_low = 0.05 + 0.0 * leak
+    q_written = 1.0 - (1.0 - q_low) * jnp.exp(
+        -jnp.maximum(twr + c.t_wr_base, 0.0) / tau_w)
+    q_s = 0.5 + (q_written - 0.5) * leak_w
+    dv_eff_w = jnp.maximum((q_s - 0.5) * xfer - residual, 1e-6)
+    t_open = (c.t_wl + c.alpha_share * tau_r_t
+              + c.tau_s * jnp.log(jnp.maximum(c.dv_full_w / dv_eff_w, 1e-6)))
+    m_sense_w = ((q_s - 0.5) * xfer - residual - c.dv_min) / c.dv_min
+    m_floor = twr - c.t_wr_floor * (tau_r_t / 4.5)
+    write_m = jnp.minimum(jnp.minimum(m_sense_w, trcd - t_open), m_floor)
+    return read_m, write_m
+
+
+def _kernel(cells_t_ref, combos_t_ref, read_ref, write_ref,
+            *, constants: ChargeConstants):
+    cells = cells_t_ref[...]          # [6, BC]  (5 params + trefi override)
+    combos = combos_t_ref[...]        # [6, BM]
+
+    def cell(i):                      # [BC, 1] column vector
+        return cells[i, :][:, None]
+
+    def combo(i):                     # [1, BM] row vector
+        return combos[i, :][None, :]
+
+    # per-cell refresh-interval override: row 5 of cells (< 0 => use combo's)
+    trefi_cell = cell(5)
+    trefi = jnp.where(trefi_cell > 0.0, trefi_cell, combo(4))
+
+    read_m, write_m = _margin_block(
+        cell(0), cell(1), cell(2), cell(3), cell(4),
+        combo(0), combo(1), combo(2), combo(3), trefi, combo(5),
+        constants)
+    read_ref[...] = read_m
+    write_ref[...] = write_m
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("constants", "interpret", "bc", "bm"))
+def margin_grid(cells_t: jnp.ndarray, combos_t: jnp.ndarray,
+                constants: ChargeConstants,
+                interpret: bool = False,
+                bc: int = BLOCK_CELLS, bm: int = BLOCK_COMBOS
+                ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """cells_t: [6, N] (N % bc == 0), rows = (tau_r, xfer, tau_ret85,
+    tau_p, tau_w, trefi_override_or_-1); combos_t: [6, M] (M % bm == 0),
+    rows = (trcd, tras, twr, trp, trefi, temp_c).
+    Returns (read, write) margins, each [N, M]."""
+    n, m = cells_t.shape[1], combos_t.shape[1]
+    assert n % bc == 0 and m % bm == 0, (n, m, bc, bm)
+    grid = (n // bc, m // bm)
+
+    out_shape = [jax.ShapeDtypeStruct((n, m), cells_t.dtype)] * 2
+    return pl.pallas_call(
+        functools.partial(_kernel, constants=constants),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((6, bc), lambda i, j: (0, i)),       # cells tile
+            pl.BlockSpec((6, bm), lambda i, j: (0, j)),       # combos tile
+        ],
+        out_specs=[
+            pl.BlockSpec((bc, bm), lambda i, j: (i, j)),
+            pl.BlockSpec((bc, bm), lambda i, j: (i, j)),
+        ],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(cells_t, combos_t)

@@ -1,0 +1,74 @@
+"""Jitted public wrapper for the charge_sim kernel.
+
+Pads the (cells, combos) grid to block multiples, transposes the small
+parameter vectors into lane-aligned layout, dispatches to the Pallas
+kernel on TPU (or `interpret=True` when requested) and to the pure-jnp
+oracle on CPU, then unpads.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.charge import ChargeConstants, DEFAULT_CONSTANTS
+from repro.kernels.charge_sim import charge_sim, ref
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int, value: float) -> jnp.ndarray:
+    n = x.shape[axis]
+    rem = (-n) % mult
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad, constant_values=value)
+
+
+def combo_margins(cells: jnp.ndarray, combos: jnp.ndarray, temp_c: float,
+                  constants: ChargeConstants = DEFAULT_CONSTANTS,
+                  impl: str = "auto", trefi_cells: jnp.ndarray | None = None,
+                  bc: int | None = None, bm: int | None = None
+                  ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """cells: [n, 5]; combos: [m, 5] -> (read, write) margins [n, m].
+
+    trefi_cells: optional [n] per-cell refresh-interval override (folds
+    per-module safe refresh intervals into one batched sweep).
+    impl: 'auto' (pallas on TPU, ref elsewhere), 'pallas' (compiled),
+    'pallas_interpret' (kernel body on CPU — used by kernel tests),
+    'ref'.
+    """
+    if impl == "auto":
+        impl = ("pallas" if jax.default_backend() == "tpu" else "ref")
+    if impl == "ref":
+        return ref.combo_margins(cells, combos, temp_c, constants,
+                                 trefi_cells)
+
+    bc = bc or charge_sim.BLOCK_CELLS
+    bm = bm or charge_sim.BLOCK_COMBOS
+    n, m = cells.shape[0], combos.shape[0]
+
+    trefi_col = (jnp.full((n, 1), -1.0, jnp.float32) if trefi_cells is None
+                 else trefi_cells.reshape(n, 1).astype(jnp.float32))
+    cells6 = jnp.concatenate([cells.astype(jnp.float32), trefi_col], axis=1)
+    cells_t = _pad_to(cells6, 0, bc, 1.0).T
+    combos6 = jnp.concatenate(
+        [combos.astype(jnp.float32),
+         jnp.full((combos.shape[0], 1), float(temp_c), jnp.float32)], axis=1)
+    # pad combos with the standard (always-safe) combo to avoid NaNs
+    combos_t = _pad_to(combos6, 0, bm, 100.0).T
+
+    read_m, write_m = charge_sim.margin_grid(
+        cells_t, combos_t, constants,
+        interpret=(impl == "pallas_interpret"), bc=bc, bm=bm)
+    return read_m[:n, :m], write_m[:n, :m]
+
+
+def margin_grid_flops(n_cells: int, n_combos: int) -> int:
+    """Roofline helper: approximate flops of one margin grid."""
+    per_elem = 30 * charge_sim._FIXED_POINT_ITERS + 80
+    return int(n_cells) * int(n_combos) * per_elem
+
+
+__all__ = ["combo_margins", "margin_grid_flops"]

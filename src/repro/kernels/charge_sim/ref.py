@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the charge_sim kernel: the margin-grid math from
+`repro.core.charge` evaluated densely.  Used for CPU execution and as
+the allclose reference for the Pallas kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import charge
+
+
+@functools.partial(jax.jit, static_argnames=("temp_c",))
+def _jitted(cells, combos, temp_c, constants, trefi_cells):
+    return charge.combo_margins(cells, combos, temp_c, constants,
+                                trefi_cells)
+
+
+def combo_margins(cells: jnp.ndarray, combos: jnp.ndarray, temp_c: float,
+                  constants: charge.ChargeConstants = charge.DEFAULT_CONSTANTS,
+                  trefi_cells: jnp.ndarray | None = None
+                  ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """cells: [n, 4]; combos: [m, 5] -> (read, write) margins [n, m]."""
+    return _jitted(cells, combos, float(temp_c), constants, trefi_cells)

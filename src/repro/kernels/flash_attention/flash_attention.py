@@ -1,0 +1,135 @@
+"""Pallas TPU flash attention: causal GQA with optional sliding window.
+
+Layout: [B, H, S, D] (ops.py transposes from the model's [B, S, H, D]).
+Grid: (batch, q_head, q_blocks, k_blocks) — the k-block axis is the
+innermost, sequential on TPU, so the online-softmax state (running max
+m, normaliser l, accumulator acc) lives in VMEM scratch across k-block
+iterations and the output block is written once on the last visited
+k block.
+
+Causality / sliding windows are handled at two levels:
+  * whole k blocks outside [q_lo - window, q_hi] are skipped via
+    pl.when (no MXU work issued),
+  * the diagonal blocks apply an elementwise iota mask.
+
+Block sizes default to (128, 512): VMEM footprint per step =
+q(128xD) + k,v(512xD) + scores(128x512) + acc(128xD) in f32 —
+about 1.3 MB at D=128, comfortably under the ~16 MB VMEM budget, with
+the MXU contraction dims (D, block_k) hardware-aligned.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 512
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+            *, scale: float, causal: bool, window: int | None,
+            block_q: int, block_k: int, nk: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    q_lo = iq * block_q
+    k_lo = ik * block_k
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # does this k block intersect the allowed range for this q block?
+    q_hi = q_lo + block_q - 1
+    needed = True
+    if causal:
+        needed = k_lo <= q_hi
+    if window is not None:
+        # smallest allowed k for the newest query in the block
+        needed = needed & (k_lo + block_k > q_lo - (window - 1))
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)              # [bq, D]
+        k = k_ref[0, 0].astype(jnp.float32)              # [bk, D]
+        v = v_ref[0, 0].astype(jnp.float32)              # [bk, D]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * scale                                     # [bq, bk]
+
+        qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = jnp.ones((block_q, block_k), jnp.bool_)
+        if causal:
+            mask = mask & (kpos <= qpos)
+        if window is not None:
+            mask = mask & (kpos > qpos - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]                               # [bq, 1]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        palpha = jnp.exp(s - m_new)                       # [bq, bk]
+        l_new = l_scr[...] * alpha + palpha.sum(axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            palpha, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "interpret"))
+def flash_attention_bhsd(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                         causal: bool = True, window: int | None = None,
+                         block_q: int = DEFAULT_BLOCK_Q,
+                         block_k: int = DEFAULT_BLOCK_K,
+                         interpret: bool = False) -> jnp.ndarray:
+    """q: [B, Hq, Sq, D]; k/v: [B, Hkv, Sk, D] (GQA: Hq % Hkv == 0).
+    Sq % block_q == 0 and Sk % block_k == 0 (ops.py pads)."""
+    b, hq, sq, d = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    g = hq // hkv
+    nq, nk = sq // block_q, sk // block_k
+    scale = d ** -0.5
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, nk=nk)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(b, hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda b_, h, i, j: (b_, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b_, h, i, j, g=g: (b_, h // g, j, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b_, h, i, j, g=g: (b_, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda b_, h, i, j: (b_, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # m (running max)
+            pltpu.VMEM((block_q, 1), jnp.float32),   # l (normaliser)
+            pltpu.VMEM((block_q, d), jnp.float32),   # acc
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,50 @@
+"""Jitted public wrapper: [B,S,H,D] model layout -> kernel layout,
+padding to block multiples, backend dispatch (Pallas on TPU /
+interpret or jnp reference on CPU)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention as FA
+from repro.kernels.flash_attention import ref
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True, window: int | None = None,
+                    impl: str = "auto",
+                    block_q: int | None = None,
+                    block_k: int | None = None) -> jnp.ndarray:
+    """q: [B, Sq, Hq, D]; k/v: [B, Sk, Hkv, D] -> [B, Sq, Hq, D]."""
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return ref.flash_attention(q, k, v, causal=causal, window=window)
+
+    bq = block_q or min(FA.DEFAULT_BLOCK_Q, max(q.shape[1], 8))
+    bk = block_k or min(FA.DEFAULT_BLOCK_K, max(k.shape[1], 128))
+
+    b, sq, hq, d = q.shape
+    sk = k.shape[1]
+    pad_q = (-sq) % bq
+    pad_k = (-sk) % bk
+    qt = jnp.moveaxis(q, 2, 1)
+    kt = jnp.moveaxis(k, 2, 1)
+    vt = jnp.moveaxis(v, 2, 1)
+    if pad_q:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+
+    out = FA.flash_attention_bhsd(qt, kt, vt, causal=causal, window=window,
+                                  block_q=bq, block_k=bk,
+                                  interpret=(impl == "pallas_interpret"))
+    return jnp.moveaxis(out[:, :, :sq], 1, 2)
+
+
+def attention_flops(b, sq, sk, hq, d, causal=True) -> int:
+    """Roofline helper."""
+    full = 4 * b * hq * sq * sk * d
+    return full // 2 if causal else full

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the flash attention kernel: the reference GQA
+attention from repro.models.layers (identical math, materialised
+scores)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.layers import sdpa_ref
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True,
+                    window: int | None = None) -> jnp.ndarray:
+    """q: [B, Sq, Hq, D]; k/v: [B, Sk, Hkv, D] -> [B, Sq, Hq, D]."""
+    return sdpa_ref(q, k, v, causal=causal, window=window,
+                    q_block=1 << 30)

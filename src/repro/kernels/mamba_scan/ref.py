@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the mamba selective-scan kernel (the same
+recurrence repro.models.ssm.mamba_apply runs via lax.scan)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mamba_scan(x, dt, bmat, cmat, a):
+    """x, dt: [B, T, di]; bmat, cmat: [B, T, ds]; a: [di, ds] ->
+    y [B, T, di] (f32 math)."""
+    def step(h, inp):
+        x_t, d_t, b_t, c_t = inp
+        da = jnp.exp(d_t.astype(jnp.float32)[..., None] * a)
+        dbx = (d_t * x_t).astype(jnp.float32)[..., None] \
+            * b_t.astype(jnp.float32)[:, None, :]
+        h = da * h + dbx
+        y = jnp.einsum("bds,bs->bd", h, c_t.astype(jnp.float32))
+        return h, y
+
+    b, t, di = x.shape
+    ds = bmat.shape[-1]
+    h0 = jnp.zeros((b, di, ds), jnp.float32)
+    xs = (x.swapaxes(0, 1), dt.swapaxes(0, 1),
+          bmat.swapaxes(0, 1), cmat.swapaxes(0, 1))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return ys.swapaxes(0, 1).astype(x.dtype)

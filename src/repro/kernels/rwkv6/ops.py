@@ -1,0 +1,47 @@
+"""Jitted public wrapper for the RWKV6 WKV kernel: [B,T,H,D] model
+layout -> [B,H,T,D] kernel layout, chunk padding (pad steps get
+log-decay 0 and k=0, which leave state and outputs untouched), backend
+dispatch."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rwkv6 import ref
+from repro.kernels.rwkv6 import rwkv6 as RW
+
+
+def wkv(r, k, v, w_log, u, impl: str = "auto",
+        chunk: int | None = None):
+    """r/k/v/w_log: [B, T, H, D]; u: [H, D] -> o [B, T, H, D]."""
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return ref.wkv(r, k, v, w_log, u)
+
+    c = chunk or RW.DEFAULT_CHUNK
+    b, t, h, d = r.shape
+    pad = (-t) % c
+    def tr(x):
+        return jnp.moveaxis(x, 2, 1)
+    rt, kt, vt = tr(r), tr(k), tr(v)
+    wt = tr(w_log)
+    if pad:
+        rt = jnp.pad(rt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        wt = jnp.pad(wt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    o = RW.wkv_bhtd(rt, kt, vt, wt, u, chunk=c,
+                    interpret=(impl == "pallas_interpret"))
+    return jnp.moveaxis(o[:, :, :t], 1, 2)
+
+
+def wkv_flops(b, t, h, d, chunk: int = RW.DEFAULT_CHUNK) -> int:
+    """Roofline helper: dots + pairwise tensor work per call."""
+    nc = t // chunk
+    per_chunk = (2 * chunk * d * d            # inter
+                 + 3 * chunk * chunk * d      # pairwise tensor
+                 + 2 * chunk * chunk * d      # amat @ v
+                 + 2 * chunk * d * d)         # state update
+    return b * h * nc * per_chunk

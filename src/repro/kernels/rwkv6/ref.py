@@ -1,0 +1,18 @@
+"""Pure-jnp oracle: the chunked WKV scan from repro.models.ssm."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.ssm import wkv_chunked
+
+
+def wkv(r, k, v, w_log, u, chunk: int = 16):
+    """r/k/v/w_log: [B, T, H, D]; u: [H, D] -> o [B, T, H, D] (f32)."""
+    t = r.shape[1]
+    pad = (-t) % chunk
+    if pad:
+        pad4 = ((0, 0), (0, pad), (0, 0), (0, 0))
+        r, k, v, w_log = (jnp.pad(a, pad4) for a in (r, k, v, w_log))
+    o, _ = wkv_chunked(r, k, v, w_log, u, chunk=chunk)
+    return o[:, :t]

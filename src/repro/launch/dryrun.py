@@ -1,0 +1,328 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the
+# device count at first init).  Everything else follows.
+
+import argparse          # noqa: E402
+import dataclasses       # noqa: E402
+import functools         # noqa: E402
+import json              # noqa: E402
+import re                # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import get_config, input_shapes  # noqa: E402
+from repro.configs.registry import ARCHS, SHAPES, LONG_CONTEXT_ARCHS, InputShape  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch import sharding as SH  # noqa: E402
+from repro.models import transformer as TF  # noqa: E402
+from repro.optim import adamw_init  # noqa: E402
+from repro.train.step import TrainConfig, serve_step, train_step  # noqa: E402
+
+"""Multi-pod dry-run driver (deliverable e).
+
+For every (architecture x input-shape x mesh) cell this lowers and
+compiles the real step function (train_step / prefill / serve_step)
+against ShapeDtypeStruct stand-ins — no allocation — and records
+memory_analysis(), cost_analysis() and the collective-op byte counts
+parsed from the optimized per-device HLO.  A failure here (sharding
+mismatch, OOM at compile, unsupported collective) is a bug in the
+framework, not in the driver.
+"""
+
+
+def _sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def _to_sds(tree, shardings=None, dtype_map=None):
+    def one(leaf, sh):
+        dt = leaf.dtype
+        if dtype_map:
+            dt = dtype_map.get(str(dt), dt)
+        return jax.ShapeDtypeStruct(leaf.shape, dt, sharding=sh)
+    if shardings is None:
+        return jax.tree.map(lambda l: one(l, None), tree)
+    return jax.tree.map(one, tree, shardings)
+
+
+def input_specs(arch: str, shape_name: str, mesh, cfg=None,
+                optimizer: str = "adamw",
+                param_dtype: str = "float32") -> dict:
+    """ShapeDtypeStruct stand-ins for every input of the lowered step
+    (params / optimizer state / batch / caches), shardings attached."""
+    cfg = cfg or get_config(arch)
+    shape = SHAPES[shape_name]
+    key = jax.random.PRNGKey(0)
+
+    params_shape = jax.eval_shape(functools.partial(TF.init_params, cfg=cfg),
+                                  key)
+    p_sh = SH.param_shardings(cfg, mesh, params_shape)
+    base = SH.batch_sharding(mesh)
+
+    def batch_sh_for(shp):
+        return NamedSharding(mesh, SH.sanitize(base.spec, shp, mesh))
+
+    batch_sh = batch_sh_for((shape.global_batch, shape.seq_len))
+
+    if shape.kind == "train":
+        dt_map = ({"float32": jnp.bfloat16} if param_dtype == "bfloat16"
+                  else None)
+        params = _to_sds(params_shape, p_sh, dtype_map=dt_map)
+        if dt_map:
+            params_shape = jax.tree.map(
+                lambda l: jax.ShapeDtypeStruct(
+                    l.shape, dt_map.get(str(l.dtype), l.dtype)),
+                params_shape)
+        if optimizer == "adamw8bit":
+            from repro.optim.adamw8bit import QTensor, adamw8_init
+            opt_shape = jax.eval_shape(adamw8_init, params_shape)
+            # quantised moments keep the parameter's own layout: q is
+            # param-shaped int8 (same sharding), scale drops the last dim
+            p_leaves, treedef = jax.tree_util.tree_flatten(params_shape)
+            sh_leaves = treedef.flatten_up_to(p_sh)
+
+            def qt_sh(leaf, sh):
+                nd = len(leaf.shape)
+                spec = tuple(sh.spec) + (None,) * (nd - len(sh.spec))
+                sc = P(*(spec[:-1] + (None,))) if nd >= 1 else P()
+                return QTensor(
+                    q=sh, scale=NamedSharding(mesh, SH.sanitize(
+                        sc, leaf.shape[:-1] + (1,), mesh)))
+
+            m_sh = jax.tree_util.tree_unflatten(
+                treedef, [qt_sh(l, s) for l, s in zip(p_leaves, sh_leaves)])
+            opt_sh = type(opt_shape)(step=SH.replicated(mesh), m=m_sh,
+                                     v=m_sh)
+        else:
+            opt_shape = jax.eval_shape(adamw_init, params_shape)
+            opt_sh = type(opt_shape)(
+                step=SH.replicated(mesh),
+                m=jax.tree.map(lambda _, s: s, opt_shape.m, p_sh),
+                v=jax.tree.map(lambda _, s: s, opt_shape.v, p_sh))
+        opt = _to_sds(opt_shape, opt_sh)
+        batch = {
+            "tokens": _sds((shape.global_batch, shape.seq_len), jnp.int32,
+                           batch_sh),
+            "targets": _sds((shape.global_batch, shape.seq_len), jnp.int32,
+                            batch_sh),
+        }
+        return {"params": params, "opt_state": opt, "batch": batch,
+                "_grad_sh": p_sh}
+
+    # serving: bf16 weights
+    params = _to_sds(params_shape, p_sh, dtype_map={"float32": jnp.bfloat16})
+    if shape.kind == "prefill":
+        tokens = _sds((shape.global_batch, shape.seq_len), jnp.int32,
+                      batch_sh)
+        return {"params": params, "tokens": tokens}
+
+    # decode: cache sized to the context length
+    cfg_ctx = dataclasses.replace(cfg, max_seq_len=shape.seq_len)
+    cache_shape = jax.eval_shape(
+        functools.partial(TF.init_cache, cfg_ctx, shape.global_batch,
+                          shape.seq_len))
+    c_sh = SH.cache_shardings(cfg, mesh, cache_shape, shape.global_batch)
+    cache = _to_sds(cache_shape, c_sh)
+    tokens = _sds((shape.global_batch, 1), jnp.int32,
+                  batch_sh_for((shape.global_batch, 1)))
+    pos = _sds((), jnp.int32, SH.replicated(mesh))
+    return {"params": params, "cache": cache, "tokens": tokens, "pos": pos,
+            "_cfg_ctx": cfg_ctx}
+
+
+COLLECTIVE_RE = re.compile(
+    r"=\s+(\S+?)\s+(all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(-start)?\(")
+SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4,
+                "u32": 4, "s64": 8, "u64": 8, "s16": 2, "u16": 2,
+                "s8": 1, "u8": 1, "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Sum result-shape bytes of every collective op in per-device HLO."""
+    out: dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        total = 0
+        for dt, dims in SHAPE_RE.findall(shape_str):
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            total += n * _DTYPE_BYTES.get(dt, 4)
+        out[op] = out.get(op, 0.0) + float(total)
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             accum_override: int | None = None,
+             attn_impl: str | None = None,
+             mamba_unroll: int | None = None,
+             optimizer: str = "adamw",
+             grad_rs: bool = False,
+             param_dtype: str = "float32",
+             grad_dtype: str = "float32",
+             attn_dtype: str | None = None,
+             seq_parallel: bool = False) -> dict:
+    cfg = get_config(arch)
+    if attn_impl:
+        cfg = dataclasses.replace(cfg, attn_impl=attn_impl)
+    if mamba_unroll:
+        cfg = dataclasses.replace(cfg, mamba_unroll=mamba_unroll)
+    if attn_dtype:
+        cfg = dataclasses.replace(cfg, attn_dtype=attn_dtype)
+    if seq_parallel:
+        cfg = dataclasses.replace(cfg, seq_parallel=True)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rec: dict = {"arch": arch, "shape": shape_name,
+                 "mesh": "x".join(map(str, mesh.devices.shape)),
+                 "ok": False}
+    for k, v in (("attn_impl", attn_impl), ("mamba_unroll", mamba_unroll),
+                 ("optimizer", optimizer if optimizer != "adamw" else None),
+                 ("grad_rs", grad_rs or None),
+                 ("param_dtype", param_dtype if param_dtype != "float32"
+                  else None),
+                 ("grad_dtype", grad_dtype if grad_dtype != "float32"
+                  else None),
+                 ("attn_dtype", attn_dtype),
+                 ("seq_parallel", seq_parallel or None)):
+        if v:
+            rec[k] = v
+
+    if (shape_name == "long_500k" and arch not in LONG_CONTEXT_ARCHS):
+        rec.update(ok=True, skipped="pure full-attention arch (DESIGN.md §5)")
+        return rec
+
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        specs = input_specs(arch, shape_name, mesh, cfg=cfg,
+                            optimizer=optimizer, param_dtype=param_dtype)
+        if shape.kind == "train":
+            dp = mesh.shape.get("pod", 1) * mesh.shape["data"]
+            accum = accum_override or max(1, shape.global_batch // dp)
+            tcfg = TrainConfig(
+                accum_steps=accum, optimizer=optimizer,
+                grad_dtype=(jnp.bfloat16 if grad_dtype == "bfloat16"
+                            else jnp.float32))
+            gsh = (jax.tree.map(lambda s: s, specs["_grad_sh"])
+                   if grad_rs else None)
+            fn = functools.partial(train_step, cfg=cfg, tcfg=tcfg,
+                                   grad_shardings=gsh)
+            args = (specs["params"], specs["opt_state"], specs["batch"])
+            jitted = jax.jit(fn)
+            rec["accum_steps"] = accum
+        elif shape.kind == "prefill":
+            fn = functools.partial(TF.prefill, cfg=cfg)
+            args = (specs["params"], specs["tokens"])
+            jitted = jax.jit(fn)
+        else:
+            cfg_ctx = specs.pop("_cfg_ctx")
+            fn = functools.partial(serve_step, cfg=cfg_ctx)
+            args = (specs["params"], specs["cache"], specs["tokens"],
+                    specs["pos"])
+            jitted = jax.jit(fn)
+
+        lowered = jitted.lower(*args)
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+
+        mem = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+            "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes",
+                                            None),
+        }
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        rec["cost_xla"] = {"flops": cost.get("flops"),
+                           "bytes_accessed": cost.get("bytes accessed")}
+        # scan-aware per-device costs (XLA's counts while bodies once)
+        from repro.launch import hlo_cost
+        rec["cost"] = hlo_cost.analyze(compiled.as_text())
+        rec["collectives"] = rec["cost"].pop("collectives")
+        rec["ok"] = True
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--accum", type=int, default=None)
+    ap.add_argument("--attn-impl", default=None,
+                    choices=(None, "einsum", "online"))
+    ap.add_argument("--mamba-unroll", type=int, default=None)
+    ap.add_argument("--optimizer", default="adamw",
+                    choices=("adamw", "adamw8bit"))
+    ap.add_argument("--grad-rs", action="store_true",
+                    help="constrain microbatch grads to FSDP sharding")
+    ap.add_argument("--param-dtype", default="float32",
+                    choices=("float32", "bfloat16"))
+    ap.add_argument("--grad-dtype", default="float32",
+                    choices=("float32", "bfloat16"))
+    ap.add_argument("--attn-dtype", default=None, choices=(None, "f32", "bf16"))
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cells: list[tuple[str, str, bool]] = []
+    archs = list(ARCHS) if (args.all or not args.arch) else [args.arch]
+    for a in archs:
+        shapes = ([args.shape] if args.shape
+                  else [s.name for s in input_shapes(a)]
+                  + (["long_500k"] if a not in LONG_CONTEXT_ARCHS else []))
+        for s in shapes:
+            if args.both_meshes:
+                cells += [(a, s, False), (a, s, True)]
+            else:
+                cells += [(a, s, args.multi_pod)]
+
+    results = []
+    for a, s, mp in cells:
+        label = f"{a} x {s} x {'2x16x16' if mp else '16x16'}"
+        print(f"=== {label}", flush=True)
+        try:
+            rec = run_cell(a, s, mp, args.accum, args.attn_impl,
+                           args.mamba_unroll, args.optimizer, args.grad_rs,
+                           args.param_dtype, args.grad_dtype,
+                           args.attn_dtype, args.seq_parallel)
+        except Exception as e:  # noqa: BLE001 — record and continue
+            rec = {"arch": a, "shape": s,
+                   "mesh": "2x16x16" if mp else "16x16", "ok": False,
+                   "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-2000:]}
+        results.append(rec)
+        print(json.dumps({k: v for k, v in rec.items() if k != "traceback"},
+                         default=str), flush=True)
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1, default=str)
+    n_ok = sum(r["ok"] for r in results)
+    print(f"\n{n_ok}/{len(results)} cells ok", flush=True)
+    if n_ok != len(results):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

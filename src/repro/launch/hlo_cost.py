@@ -1,0 +1,310 @@
+"""Scan-aware cost analysis over optimized per-device HLO text.
+
+XLA's HloCostAnalysis (exposed as ``compiled.cost_analysis()``) counts a
+while-loop body ONCE, which silently undercounts every scan-over-layers
+/ grad-accumulation / q-block loop by its trip count.  This module
+re-derives the three roofline inputs from the optimized HLO text with
+loops multiplied through:
+
+  * flops        — dot ops (2 * out_elems * K, operand shapes resolved
+                   through a per-computation symbol table) plus 1 flop
+                   per output element of arithmetic ops inside fusions,
+  * hbm_bytes    — per top-level op: operand bytes + output bytes
+                   (fusion internals excluded: they live in registers /
+                   VMEM, so fusion boundaries approximate HBM traffic
+                   on the optimized, scheduled module),
+  * collectives  — result bytes per collective op kind.
+
+Trip counts come from the ``known_trip_count`` backend_config XLA
+attaches to scan-derived while loops (fallback: the largest integer
+literal in the loop's condition computation).  Everything is
+per-device (the SPMD module).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4,
+                "u32": 4, "s64": 8, "u64": 8, "s16": 2, "u16": 2,
+                "s8": 1, "u8": 1, "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+                "c64": 8, "c128": 16, "u4": 1, "s4": 1}
+
+_SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_HEADER = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+# result type is either a (possibly nested-once) tuple — which may
+# contain /*index=N*/ comments — or a single non-space token
+_OP = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*"
+    r"(\((?:[^()]|\([^()]*\))*\)|\S+)\s+"
+    r"([a-z][a-z0-9\-]*)\((.*)$")
+_OPERAND = re.compile(r"%([\w.\-]+)")
+_CALLED = re.compile(r"(?:body|to_apply|calls)=%?([\w.\-]+)")
+_COND = re.compile(r"condition=%?([\w.\-]+)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_TRIP = re.compile(r'known_trip_count[^0-9]*"n":"(\d+)"')
+_CONST_INT = re.compile(r"constant\((\d+)\)")
+
+_ARITH = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum",
+    "exponential", "log", "tanh", "rsqrt", "sqrt", "power", "negate",
+    "abs", "floor", "ceil", "cosine", "sine", "logistic", "expm1",
+    "log1p", "select", "compare", "and", "or", "xor", "not", "clamp",
+    "atan2", "remainder", "exponential-minus-one", "cbrt", "erf",
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "ragged-all-to-all")
+
+_MOVEMENT = ("copy", "transpose", "reshape", "broadcast", "reduce",
+             "concatenate", "slice", "dynamic-slice",
+             "dynamic-update-slice", "pad", "gather", "scatter",
+             "convert", "sort", "reverse", "reduce-window", "bitcast",
+             "get-tuple-element", "tuple", "parameter", "iota",
+             "rng-bit-generator", "cumsum")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(type_str: str) -> int:
+    total = 0
+    for _, dims in _SHAPE.findall(type_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n
+    return total
+
+
+@dataclass
+class Costs:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collectives: dict = field(default_factory=dict)
+
+    def add(self, other: "Costs", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        for k, v in other.collectives.items():
+            self.collectives[k] = self.collectives.get(k, 0.0) + v * mult
+
+
+def _split_computations(text: str):
+    comps: dict[str, list[str]] = {}
+    entry = None
+    cur: str | None = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _HEADER.match(line.strip())
+            if m:
+                cur = m.group(2)
+                comps[cur] = []
+                if m.group(1):
+                    entry = cur
+        else:
+            if line.strip() == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+    return comps, entry
+
+
+class HloCost:
+    def __init__(self, text: str):
+        self.comps, self.entry = _split_computations(text)
+        # symbol tables: op name -> result type string
+        self.types: dict[str, dict[str, str]] = {}
+        # computations that slice/scatter into big buffers: their fusion
+        # callers only touch slice-sized HBM regions, not full operands
+        self.has_slice: dict[str, bool] = {}
+        self.has_dus: dict[str, bool] = {}
+        self.region: dict[str, int] = {}
+        for name, lines in self.comps.items():
+            tab = {}
+            hs = hd = False
+            region = 0
+            n_slices = 0
+            for line in lines:
+                m = _OP.match(line)
+                if m:
+                    tab[m.group(1)] = m.group(2)
+                    if m.group(3) in ("dynamic-slice", "gather"):
+                        hs = True
+                        n_slices += 1
+                        region = max(region, _shape_bytes(m.group(2)))
+                    if m.group(3) in ("dynamic-update-slice", "scatter"):
+                        hd = True
+                        n_slices += 1
+            self.types[name] = tab
+            self.has_slice[name] = hs
+            self.has_dus[name] = hd
+            self.region[name] = region * max(n_slices, 1)
+        self._memo: dict[str, Costs] = {}
+
+    # ------------------------------------------------------------- helpers
+    def _operand_types(self, comp: str, rest: str) -> list[str]:
+        """Types of %operands referenced before the first ')' of the op."""
+        args = rest.split(")", 1)[0]
+        tab = self.types[comp]
+        return [tab[o] for o in _OPERAND.findall(args) if o in tab]
+
+    def _operand_bytes(self, comp: str, rest: str) -> int:
+        return sum(_shape_bytes(t) for t in self._operand_types(comp, rest))
+
+    def _dot_flops(self, comp: str, rtype: str, rest: str, line: str) -> float:
+        ops = self._operand_types(comp, rest)
+        if not ops:
+            return 0.0
+        lhs_dims = [int(d) for d in _SHAPE.search(ops[0]).group(2).split(",")
+                    if d] if _SHAPE.search(ops[0]) else []
+        m = _CONTRACT.search(line)
+        cdims = ([int(d) for d in m.group(1).split(",") if d] if m
+                 else ([len(lhs_dims) - 1] if lhs_dims else []))
+        k = 1
+        for d in cdims:
+            if d < len(lhs_dims):
+                k *= lhs_dims[d]
+        return 2.0 * _shape_elems(rtype) * k
+
+    def _trip(self, line: str) -> int:
+        m = _TRIP.search(line)
+        if m:
+            return int(m.group(1))
+        c = _COND.search(line)
+        if c and c.group(1) in self.comps:
+            best = 1
+            for ln in self.comps[c.group(1)]:
+                for mm in _CONST_INT.finditer(ln):
+                    best = max(best, int(mm.group(1)))
+            return best
+        return 1
+
+    # --------------------------------------------------------------- main
+    def _comp_cost(self, name: str, fused: bool) -> Costs:
+        key = f"{name}|{fused}"
+        if key in self._memo:
+            return self._memo[key]
+        c = Costs()
+        self._memo[key] = c          # break cycles defensively
+        for line in self.comps.get(name, []):
+            m = _OP.match(line)
+            if not m:
+                continue
+            _, rtype, opcode, rest = m.groups()
+            if opcode == "while":
+                body = _CALLED.search(line)
+                if body:
+                    c.add(self._comp_cost(body.group(1), False),
+                          self._trip(line))
+                continue
+            if opcode == "fusion":
+                called = _CALLED.search(line)
+                rbytes = _shape_bytes(rtype)
+                if called:
+                    cname = called.group(1)
+                    sub = self._comp_cost(cname, True)
+                    c.flops += sub.flops
+                    for k, v in sub.collectives.items():
+                        c.collectives[k] = c.collectives.get(k, 0.0) + v
+                    ops = [_shape_bytes(t)
+                           for t in self._operand_types(name, rest)]
+    # slicing/scatter fusions touch only slice-sized regions of
+                    # their big operands/results; the region size comes
+                    # from the dynamic-slice results *inside* the called
+                    # computation (fallback: smallest operand)
+                    if self.has_dus.get(cname) or self.has_slice.get(cname):
+                        region = self.region.get(cname, 0)
+                        if region == 0:
+                            pos = [o for o in ops if o > 0]
+                            region = min(pos) if pos else 1
+                        per_op = [min(o, region) for o in ops]
+                        rb = rbytes if not self.has_dus.get(cname) \
+                            else min(rbytes, 2 * region)
+                        c.hbm_bytes += min(rb, max(region, 1) * 2) \
+                            + sum(per_op)
+                        continue
+                    c.hbm_bytes += rbytes + sum(ops)
+                else:
+                    c.hbm_bytes += rbytes + self._operand_bytes(name, rest)
+                continue
+            if opcode in ("call", "conditional", "async-start"):
+                called = _CALLED.search(line)
+                if called:
+                    c.add(self._comp_cost(called.group(1), fused), 1.0)
+                continue
+            base = opcode.replace("-start", "").replace("-done", "")
+            if base in COLLECTIVES:
+                if not opcode.endswith("-done"):
+                    nbytes = _shape_bytes(rtype)
+                    c.collectives[base] = (c.collectives.get(base, 0.0)
+                                           + nbytes)
+                    if not fused:
+                        c.hbm_bytes += nbytes
+                continue
+            if opcode == "dot":
+                c.flops += self._dot_flops(name, rtype, rest, line)
+                if not fused:
+                    c.hbm_bytes += (_shape_bytes(rtype)
+                                    + self._operand_bytes(name, rest))
+                continue
+            if opcode == "convolution":
+                c.flops += 2.0 * _shape_elems(rtype) * 8
+                if not fused:
+                    c.hbm_bytes += (_shape_bytes(rtype)
+                                    + self._operand_bytes(name, rest))
+                continue
+            if opcode in _ARITH:
+                c.flops += _shape_elems(rtype)
+                if not fused:
+                    c.hbm_bytes += (_shape_bytes(rtype)
+                                    + self._operand_bytes(name, rest))
+                continue
+            if opcode == "dynamic-slice" and not fused:
+                # reads only the sliced region (plus writes the result)
+                c.hbm_bytes += 2 * _shape_bytes(rtype)
+                continue
+            if opcode == "dynamic-update-slice" and not fused:
+                # in-place (aliased) read-modify-write of the update region
+                ops = [_shape_bytes(t) for t in
+                       self._operand_types(name, rest)]
+                update = sum(ops) - max(ops) if ops else 0
+                c.hbm_bytes += 2 * update
+                continue
+            if opcode in ("gather", "scatter") and not fused:
+                c.hbm_bytes += 2 * _shape_bytes(rtype)
+                continue
+            if opcode in _MOVEMENT and not fused and opcode not in (
+                    "get-tuple-element", "tuple", "parameter", "bitcast"):
+                c.hbm_bytes += (_shape_bytes(rtype)
+                                + self._operand_bytes(name, rest))
+        self._memo[key] = c
+        return c
+
+    def entry_cost(self) -> Costs:
+        if self.entry is None:
+            return Costs()
+        return self._comp_cost(self.entry, False)
+
+
+def analyze(hlo_text: str) -> dict:
+    cost = HloCost(hlo_text).entry_cost()
+    return {
+        "flops": cost.flops,
+        "hbm_bytes": cost.hbm_bytes,
+        "collectives": cost.collectives,
+        "collective_bytes": sum(cost.collectives.values()),
+    }

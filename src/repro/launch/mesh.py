@@ -1,0 +1,25 @@
+"""Production mesh definitions.
+
+Single pod: (data=16, model=16) — 256 chips (TPU v5e pod slice).
+Multi-pod:  (pod=2, data=16, model=16) — 512 chips; the 'pod' axis
+carries only data parallelism + gradient reduction (the slow DCN/ICI
+tier), everything latency-sensitive stays inside a pod.
+
+Defined as functions, not module constants, so importing never touches
+jax device state (the dry-run sets XLA_FLAGS before first jax init).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_smoke_mesh():
+    """1-device mesh with the production axis names, for CPU tests."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,44 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id>`` —
+batched greedy decoding over the continuous-batching engine (reduced
+config on CPU; full configs are exercised via the dry-run)."""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, get_config
+from repro.configs.base import reduced
+from repro.models import transformer as TF
+from repro.serve.engine import Request, ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(ARCHS))
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=2)
+    args = ap.parse_args()
+
+    cfg = reduced(get_config(args.arch))
+    params = TF.init_params(jax.random.PRNGKey(0), cfg)
+    engine = ServeEngine(params, cfg, batch_slots=args.slots,
+                         max_len=128, dtype=jnp.float32)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=rng.integers(
+        0, cfg.vocab_size, 8 + i).astype(np.int32),
+        max_new_tokens=args.new_tokens) for i in range(args.requests)]
+    for r in reqs:
+        engine.submit(r)
+    while engine.waiting or any(engine.active):
+        engine.step()
+    for r in reqs:
+        print(f"req {r.rid}: {list(r.out)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,173 @@
+"""Parameter / input / cache sharding rules for the production mesh.
+
+Layout summary (see DESIGN.md §6):
+  * FSDP: large parameter matrices shard their d_model-ish axis over
+    ("pod","data"); optimizer state inherits it (ZeRO-3).
+  * TP over "model": attention & rwkv head axes (padded when H % tp
+    != 0, e.g. qwen's 40 or arctic's 56 heads), MLP hidden f, MoE
+    expert axis (EP), Mamba inner channels.
+  * Attention KV projections (GQA, n_kv << tp) are replicated over
+    'model' and FSDP-sharded over data — the Megatron GQA layout.
+  * Decode KV caches shard *sequence* over 'model' so a 32k..512k
+    context never materialises on one chip; softmax over the sharded
+    axis lowers to partial reductions + all-reduce.
+  * Embedding: vocab over 'model'; logits computed vocab-sharded.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+def _fsdp(mesh: Mesh):
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return axes if axes else None
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                    for k in path)
+
+
+def param_spec(path: str, ndim: int, mesh: Mesh, cfg: ModelConfig) -> P:
+    """PartitionSpec for one parameter, by path name."""
+    fsdp = _fsdp(mesh)
+    stacked = path.startswith("stage/")   # scan-stacked: leading R dim
+    leaf = path.rsplit("/", 1)[-1]
+    rwkv_kv = cfg.ssm_kind == "rwkv6" and leaf in ("wk", "wv")
+
+    def wrap(*spec):
+        spec = spec + (None,) * (ndim - len(spec) - (1 if stacked else 0))
+        return P(*(((None,) + spec) if stacked else spec))
+
+    if leaf == "embed":
+        return P("model", None)
+    if leaf == "lm_head":
+        return P(fsdp, "model")
+
+    d3 = (ndim - (1 if stacked else 0)) == 3
+
+    # attention / rwkv head-structured weights [d, H, dh] / [H, dh, d]
+    if d3 and (leaf in ("wq", "wr", "wg") or rwkv_kv):
+        return wrap(fsdp, "model", None)
+    if d3 and leaf in ("wk", "wv"):
+        return wrap(fsdp, None, None)              # GQA KV: TP-replicated
+    if d3 and leaf == "wo":
+        return wrap("model", None, fsdp)           # row-parallel
+    if leaf in ("bq",) :
+        return wrap("model", None)
+    if leaf in ("bk", "bv"):
+        return wrap()
+    if leaf == "u":
+        return wrap("model", None)
+
+    # MoE: expert-parallel over 'model'
+    if leaf == "router":
+        return wrap(fsdp, None)
+    if d3 and leaf in ("w_gate", "w_up"):
+        return wrap("model", fsdp, None)           # [E, d, f]
+    if d3 and leaf == "w_down":
+        return wrap("model", None, fsdp)           # [E, f, d]
+
+    # dense MLP
+    if leaf in ("w_gate", "w_up"):
+        return wrap(fsdp, "model")                 # [d, f] column-parallel
+    if leaf == "w_down":
+        return wrap("model", fsdp)                 # [f, d] row-parallel
+
+    # mamba
+    if leaf == "in_proj":
+        return wrap(fsdp, "model")
+    if leaf == "conv_w":
+        return wrap(None, "model")
+    if leaf in ("conv_b", "dt_bias", "d_skip"):
+        return wrap("model")
+    if leaf == "x_proj":
+        return wrap("model", None)
+    if leaf == "dt_proj":
+        return wrap(None, "model")
+    if leaf == "a_log":
+        return wrap("model", None)
+    if leaf == "out_proj":
+        return wrap("model", fsdp)
+
+    # rwkv lora
+    if leaf == "w_lora_a":
+        return wrap(fsdp, None)
+
+    # norms / mixes / scalars / small vectors: replicate
+    return wrap()
+
+
+def sanitize(spec: P, shape: tuple, mesh: Mesh) -> P:
+    """Drop mesh axes whose size does not evenly divide the dimension
+    (jax requires even tiling at jit boundaries; e.g. granite's 49155
+    vocab or rwkv's 40 heads fall back to replication on that dim)."""
+    out = []
+    for i, s in enumerate(spec):
+        if s is None:
+            out.append(None)
+            continue
+        axes = s if isinstance(s, tuple) else (s,)
+        keep: list[str] = []
+        size = 1
+        for a in axes:
+            asize = mesh.shape[a]
+            if shape[i] % (size * asize) == 0:
+                keep.append(a)
+                size *= asize
+        out.append(tuple(keep) if len(keep) > 1 else (keep[0] if keep else None))
+    return P(*out)
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, params_shape) -> Any:
+    """NamedShardings for the whole param tree (from eval_shape)."""
+    def one(path, leaf):
+        spec = param_spec(_path_str(path), len(leaf.shape), mesh, cfg)
+        return NamedSharding(mesh, sanitize(spec, leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+# ------------------------------------------------------------------ inputs
+def batch_sharding(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P(_fsdp(mesh), None))
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, cache_shape,
+                    batch: int) -> Any:
+    """Decode caches: batch over data when divisible, sequence over
+    'model'; SSM states shard their channel axes."""
+    fsdp = _fsdp(mesh)
+    dp_size = 1
+    for a in (fsdp or ()):
+        dp_size *= mesh.shape[a]
+    bdim = fsdp if batch % max(dp_size, 1) == 0 and batch >= dp_size else None
+
+    def one(path, leaf):
+        nd = len(leaf.shape)
+        leafname = _path_str(path).rsplit("/", 1)[-1]
+        if leafname in ("k", "v"):            # [R, B, S, Hkv, dh]
+            spec = P(None, bdim, "model", None, None)
+        elif leafname == "h":                  # mamba [R, B, di, ds]
+            spec = P(None, bdim, "model", None)
+        elif leafname == "conv":               # [R, B, dc-1, di]
+            spec = P(None, bdim, None, "model")
+        elif leafname == "wkv":                # rwkv [R, B, H, dk, dv]
+            spec = P(None, bdim, "model", None, None)
+        elif leafname == "x_prev":             # [R, B, 1, d]
+            spec = P(None, bdim, None, None)
+        else:
+            spec = P(*([None] * nd))
+        return NamedSharding(mesh, sanitize(spec, leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

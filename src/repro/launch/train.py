@@ -1,0 +1,56 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> ...``
+
+Smoke mode (default) runs a reduced config on the local devices; pass
+--mesh pod/multipod only on real hardware (the dry-run proves those
+configurations compile — see repro.launch.dryrun).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_config
+from repro.configs.base import reduced
+from repro.launch.mesh import make_production_mesh
+from repro.train.step import TrainConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(ARCHS))
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--global-batch", type=int, default=4)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--mesh", choices=("none", "pod", "multipod"),
+                    default="none")
+    ap.add_argument("--full-config", action="store_true",
+                    help="use the full architecture (hardware required)")
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full_config:
+        cfg = reduced(cfg)
+    mesh = None
+    if args.mesh != "none":
+        mesh = make_production_mesh(multi_pod=args.mesh == "multipod")
+
+    tcfg = TrainerConfig(
+        steps=args.steps, global_batch=args.global_batch,
+        seq_len=args.seq_len, ckpt_dir=args.ckpt,
+        train=TrainConfig(accum_steps=args.accum,
+                          dtype=jnp.bfloat16 if mesh else jnp.float32))
+    trainer = Trainer(cfg, tcfg, mesh=mesh)
+    out = trainer.run()
+    print(f"{args.arch}: loss {out['losses'][0]:.3f} -> "
+          f"{out['losses'][-1]:.3f} in {out['wall_s']:.0f}s on "
+          f"{jax.device_count()} device(s)")
+
+
+if __name__ == "__main__":
+    main()

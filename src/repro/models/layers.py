@@ -1,0 +1,307 @@
+"""Core layer library: RMSNorm, RoPE, GQA attention (full / sliding /
+decode-with-cache), SwiGLU MLP.  Pure functions over parameter pytrees;
+initialisers return nested dicts of fp32 arrays.
+
+Attention parameters are kept head-structured ([d, H, dh]) so tensor
+parallelism shards real axes:
+  * train/prefill: scores are constrained to flat-head sharding over the
+    'model' axis (XLA pads when H % tp != 0, e.g. qwen's 40 heads);
+    K/V stay small and are gathered within the model group — the
+    standard Megatron-style GQA layout for tp > n_kv_heads.
+  * decode: the KV cache is sharded over *sequence* on the 'model' axis;
+    the softmax over the sharded axis lowers to partial reductions +
+    all-reduce, so a 32k..512k cache never materialises on one chip.
+
+Attention has two execution paths with identical math: the reference
+einsum path below (CPU, dry-run lowering, oracle) and the Pallas flash
+kernel (repro.kernels.flash_attention) on TPU.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.pspec import constrain
+
+Params = dict[str, Any]
+
+NEG_INF = -1e30
+_QBLOCK = 2048          # scan over query blocks beyond this seq length
+
+
+def _init(key, shape, scale=None):
+    scale = scale if scale is not None else shape[0] ** -0.5
+    return (jax.random.truncated_normal(key, -2, 2, shape, jnp.float32)
+            * scale)
+
+
+# ----------------------------------------------------------------- RMSNorm
+def rmsnorm_init(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * p["scale"]).astype(dt)
+
+
+# -------------------------------------------------------------------- RoPE
+def rope(x: jnp.ndarray, positions: jnp.ndarray,
+         theta: float = 1e4) -> jnp.ndarray:
+    """x: [B, S, H, Dh]; positions: [B, S] (int32)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs       # [B,S,half]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------- attention
+def attention_init(key, cfg: ModelConfig) -> Params:
+    d, dh = cfg.d_model, cfg.head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": _init(kq, (d, cfg.n_heads, dh)),
+        "wk": _init(kk, (d, cfg.n_kv_heads, dh)),
+        "wv": _init(kv, (d, cfg.n_kv_heads, dh)),
+        "wo": _init(ko, (cfg.n_heads, dh, d), scale=d ** -0.5),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads, dh), jnp.float32)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads, dh), jnp.float32)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads, dh), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(dh)
+        p["k_norm"] = rmsnorm_init(dh)
+    return p
+
+
+def _qkv(p: Params, x: jnp.ndarray, cfg: ModelConfig, positions):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _scores_block(q, k, v, mask, dh, score_dtype=jnp.float32):
+    """One (possibly full) query block.  q: [B,Sq,Hq,Dh];
+    k/v: [B,Sk,Hkv,Dh]; mask: [Sq,Sk] bool.
+
+    score_dtype=bf16 halves the dominant HBM traffic of the reference
+    path (score/prob materialisation); the softmax row statistics stay
+    f32 via the explicit upcasted max/sum below."""
+    b, sq, hq, _ = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    from repro.pspec import axis_size
+    qg = q.reshape(b, sq, hkv, g, dh)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(score_dtype)
+    scores = scores * jnp.asarray(dh ** -0.5, score_dtype)
+    scores = scores.reshape(b, hkv * g, sq, sk)
+    tp = axis_size("model")
+    if (hkv * g) % max(tp, 1) == 0:
+        # flat-head TP: softmax stays local per head
+        scores = constrain(scores, "dp", "model", None, None)
+    else:
+        # uneven head counts (qwen 40, arctic 56): shard the KV-sequence
+        # axis instead; softmax over it lowers to partial reduce + AR
+        scores = constrain(scores, "dp", None, None, "model")
+    scores = jnp.where(mask[None, None], scores,
+                       jnp.asarray(NEG_INF, score_dtype))
+    m = jnp.max(scores, axis=-1, keepdims=True).astype(jnp.float32)
+    p = jnp.exp(scores.astype(jnp.float32) - m).astype(score_dtype)
+    denom = p.astype(jnp.float32).sum(-1, keepdims=True)
+    probs = (p / denom.astype(score_dtype)).astype(v.dtype)
+    probs = probs.reshape(b, hkv, g, sq, sk)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    out = constrain(out.reshape(b, sq, hq, dh), "dp", None, "model", None)
+    return out
+
+
+def sdpa_online(q, k, v, *, causal: bool = True, window: int | None = None,
+                k_block: int = 512) -> jnp.ndarray:
+    """Streaming (online-softmax) attention in pure JAX: lax.scan over
+    key blocks carrying (m, l, acc).  Identical math to sdpa_ref, but
+    the [Sq, Sk] score matrix is never materialised — per-step
+    intermediates are [Sq, k_block], so HBM traffic drops from
+    O(H*Sq*Sk) to O(H*Sq*Dh*nk) carry updates + one K/V read.  This is
+    flash attention expressed at the XLA level (the Pallas kernel is the
+    TPU-native version; this path is what the dry-run lowers)."""
+    b, sq, hq, dh = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    nk = -(-sk // k_block)
+    pad = nk * k_block - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qg = (q.reshape(b, sq, hkv, g, dh).astype(jnp.float32)
+          * (dh ** -0.5))
+    kb = k.reshape(b, nk, k_block, hkv, dh)
+    vb = v.reshape(b, nk, k_block, hkv, dh)
+    qpos = jnp.arange(sq)[:, None]
+
+    def body(carry, xs):
+        m_p, l_p, acc = carry
+        kblk, vblk, j = xs                       # [b, kb, hkv, dh]
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qg,
+                       kblk.astype(jnp.float32))
+        kpos = j * k_block + jnp.arange(k_block)[None, :]
+        mask = jnp.ones((sq, k_block), bool)
+        if causal:
+            mask = mask & (kpos <= qpos)
+        if window is not None:
+            mask = mask & (kpos > qpos - window)
+        mask = mask & (kpos < sk)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_c = jnp.maximum(m_p, s.max(-1))
+        alpha = jnp.exp(m_p - m_c)
+        p = jnp.exp(s - m_c[..., None])
+        l_c = l_p * alpha + p.sum(-1)
+        acc = (acc * alpha[..., None]
+               + jnp.einsum("bkgqs,bskd->bkgqd", p,
+                            vblk.astype(jnp.float32)))
+        return (m_c, l_c, acc), None
+
+    init = (jnp.full((b, hkv, g, sq), NEG_INF, jnp.float32),
+            jnp.zeros((b, hkv, g, sq), jnp.float32),
+            jnp.zeros((b, hkv, g, sq, dh), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(
+        body, init, (kb.swapaxes(0, 1), vb.swapaxes(0, 1),
+                     jnp.arange(nk)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, hq, dh)
+    return constrain(out.astype(q.dtype), "dp", None, "model", None)
+
+
+def sdpa_ref(q, k, v, *, causal: bool = True, window: int | None = None,
+             q_offset: jnp.ndarray | int = 0,
+             q_block: int = _QBLOCK,
+             score_dtype=jnp.float32) -> jnp.ndarray:
+    """Reference GQA attention.  q: [B,Sq,Hq,Dh], k/v: [B,Sk,Hkv,Dh].
+    Long queries are processed in blocks via lax.map to bound the score
+    tensor at [B, H, q_block, Sk]."""
+    b, sq, hq, dh = q.shape
+    sk = k.shape[1]
+
+    def mask_for(qpos):
+        kpos = jnp.arange(sk)[None, :]
+        m = kpos <= qpos if causal else jnp.ones((qpos.shape[0], sk), bool)
+        if window is not None:
+            m = m & (kpos > qpos - window)
+        return m
+
+    if sq <= q_block:
+        return _scores_block(q, k, v, mask_for(jnp.arange(sq)[:, None]
+                                               + q_offset), dh, score_dtype)
+
+    assert sq % q_block == 0, (sq, q_block)
+    nb = sq // q_block
+
+    def one(i):
+        qb = jax.lax.dynamic_slice_in_dim(q, i * q_block, q_block, axis=1)
+        qpos = jnp.arange(q_block)[:, None] + i * q_block + q_offset
+        return _scores_block(qb, k, v, mask_for(qpos), dh, score_dtype)
+
+    out = jax.lax.map(one, jnp.arange(nb))          # [nb, B, qb, H, dh]
+    return out.transpose(1, 0, 2, 3, 4).reshape(b, sq, hq, dh)
+
+
+def decode_attend(q, ck, cv, valid, dh):
+    """Decode attention over a (sequence-sharded) cache.
+    q: [B,1,Hq,Dh]; ck/cv: [B,S,Hkv,Dh]; valid: [S] bool."""
+    b, _, hq, _ = q.shape
+    hkv = ck.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, 1, hkv, g, dh)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg,
+                        ck.astype(qg.dtype)).astype(jnp.float32)
+    scores = scores * (dh ** -0.5)
+    scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(cv.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, cv)
+    return out.reshape(b, 1, hq, dh)
+
+
+def attention_apply(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+                    positions: jnp.ndarray, *, local: bool = False,
+                    cache: Params | None = None,
+                    use_flash: bool = False) -> tuple[jnp.ndarray, Params | None]:
+    """Returns (out, updated_cache).  cache = {'k','v'}: [B,S,Hkv,Dh]
+    ring buffers (sequence-sharded over 'model' under the mesh)."""
+    b, s, d = x.shape
+    dh = cfg.head_dim
+    window = cfg.sliding_window if local else None
+    q, k, v = _qkv(p, x, cfg, positions)
+
+    if cache is not None:
+        s_cache = cache["k"].shape[1]
+        pos = positions[0, 0]                       # uniform batch decode
+        slot = pos % s_cache if window is not None else pos
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+        ck = constrain(ck, "dp", "model", None, None)
+        cv = constrain(cv, "dp", "model", None, None)
+        new_cache = {"k": ck, "v": cv}
+        kpos = jnp.arange(s_cache)
+        if window is not None:
+            abs_pos = pos - ((pos - kpos) % s_cache)
+            valid = (abs_pos >= 0) & (pos - abs_pos < min(window, s_cache))
+        else:
+            valid = kpos <= pos
+        out = decode_attend(q, ck, cv, valid, dh)
+    else:
+        new_cache = None
+        if use_flash:
+            from repro.kernels.flash_attention import ops as flash_ops
+            out = flash_ops.flash_attention(q, k, v, causal=True,
+                                            window=window)
+        elif cfg.attn_impl == "online":
+            out = sdpa_online(q, k, v, causal=True, window=window)
+        else:
+            sdt = jnp.bfloat16 if cfg.attn_dtype == "bf16" else jnp.float32
+            out = sdpa_ref(q, k, v, causal=True, window=window,
+                           score_dtype=sdt)
+
+    proj = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return constrain(proj, "dp", None, None), new_cache
+
+
+# ------------------------------------------------------------------ SwiGLU
+def mlp_init(key, d: int, d_ff: int) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": _init(k1, (d, d_ff)),
+        "w_up": _init(k2, (d, d_ff)),
+        "w_down": _init(k3, (d_ff, d), scale=d_ff ** -0.5),
+    }
+
+
+def mlp_apply(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    h = (jax.nn.silu(x @ p["w_gate"].astype(x.dtype))
+         * (x @ p["w_up"].astype(x.dtype)))
+    h = constrain(h, "dp", None, "model") if h.ndim == 3 else h
+    return h @ p["w_down"].astype(x.dtype)

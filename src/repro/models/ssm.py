@@ -1,0 +1,236 @@
+"""Attention-free sequence mixers: RWKV6 ("Finch", data-dependent decay)
+and Mamba-1 (for the Jamba hybrid).
+
+The RWKV6 WKV recurrence
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t,    o_t = r_t (S_{t-1} + u k_t^T v_t)
+is evaluated in *chunks*: within a chunk, pairwise decays are expressed
+in log-space (all exponents <= 0, numerically safe for arbitrarily
+strong decay) as an [L, L, Dk] contraction; across chunks a dense state
+S [Dk, Dv] is carried by `lax.scan`.  The same chunk math is what the
+Pallas kernel (repro.kernels.rwkv6) implements; this module is its
+pure-jnp oracle.
+
+Mamba uses the classic selective-scan recurrence via `lax.scan` over
+time (O(1) state per step, which is also the decode path).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Params, _init, rmsnorm, rmsnorm_init
+
+RWKV_CHUNK = 16   # jnp reference path; the Pallas kernel blocks at 64
+
+
+# ===========================================================- RWKV6 (Finch)
+def rwkv6_init(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    h, dh = cfg.n_heads, cfg.head_dim
+    assert h * dh == d, (h, dh, d)
+    ks = jax.random.split(key, 8)
+    lora = 64
+    return {
+        "mu_r": jnp.full((d,), 0.5, jnp.float32),
+        "mu_k": jnp.full((d,), 0.5, jnp.float32),
+        "mu_v": jnp.full((d,), 0.5, jnp.float32),
+        "mu_g": jnp.full((d,), 0.5, jnp.float32),
+        "mu_w": jnp.full((d,), 0.5, jnp.float32),
+        # head-structured ([d, h, dh]) so TP shards the head axis
+        "wr": _init(ks[0], (d, h, dh)),
+        "wk": _init(ks[1], (d, h, dh)),
+        "wv": _init(ks[2], (d, h, dh)),
+        "wg": _init(ks[3], (d, h, dh)),
+        "wo": _init(ks[4], (h, dh, d), scale=d ** -0.5),
+        # data-dependent decay (the defining RWKV6 feature): w0 + LoRA
+        "w0": jnp.full((d,), -6.0, jnp.float32),
+        "w_lora_a": _init(ks[5], (d, lora)),
+        "w_lora_b": _init(ks[6], (lora, d), scale=0.01),
+        "u": _init(ks[7], (h, dh), scale=1.0),
+        "ln_out": {"scale": jnp.ones((h, dh), jnp.float32)},  # per-head GN
+    }
+
+
+def wkv_chunked(r, k, v, w_log, u, chunk: int = RWKV_CHUNK,
+                state: jnp.ndarray | None = None):
+    """Chunked WKV scan (per batch).  All inputs [B, T, H, Dh] except
+    u [H, Dh]; w_log = log(decay) <= 0.  Returns (out [B,T,H,Dh],
+    final_state [B,H,Dh,Dh])."""
+    b, t, h, dh = r.shape
+    assert t % chunk == 0, (t, chunk)
+    n = t // chunk
+    f32 = jnp.float32
+
+    def resh(x):  # [B,T,H,D] -> [N, B, H, L, D]
+        return (x.astype(f32).reshape(b, n, chunk, h, dh)
+                .transpose(1, 0, 3, 2, 4))
+
+    r_, k_, v_, wl = map(resh, (r, k, v, w_log))
+    lcum = jnp.cumsum(wl, axis=-2)                    # inclusive logs [.,L,D]
+    lprev = lcum - wl                                  # exclusive
+    ltot = lcum[..., -1:, :]                           # [., 1, D]
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool), -1)
+
+    if state is None:
+        state = jnp.zeros((b, h, dh, dh), f32)
+
+    def body(s, inp):
+        rr, kk, vv, lc, lp, lt = inp                   # [B,H,L,D] each
+        # inter-chunk: o_i += (r_i * exp(lp_i)) @ S
+        o_inter = jnp.einsum("bhld,bhde->bhle", rr * jnp.exp(lp), s)
+        # intra-chunk pairwise: A[i,j] = sum_d r_i k_j exp(lp_i - lc_j),
+        # j < i.  Exponents are <= 0 on the masked triangle, so the
+        # log-space form is safe for arbitrarily strong decay.
+        ldiff = lp[..., :, None, :] - lc[..., None, :, :]   # [B,H,L,L,D]
+        dec = jnp.exp(jnp.where(tri[None, None, :, :, None], ldiff, -jnp.inf))
+        amat = jnp.einsum("bhid,bhjd,bhijd->bhij", rr, kk, dec)
+        o_intra = jnp.einsum("bhij,bhjd->bhid", amat, vv)
+        # diagonal u bonus: o_i += (r_i . (u * k_i)) v_i
+        o_diag = jnp.einsum("bhld,bhld->bhl", rr,
+                            u[None, :, None, :] * kk)[..., None] * vv
+        # state update: S' = diag(exp(lt)) S + sum_j (k_j exp(lt-lc_j)) v_j
+        kd = kk * jnp.exp(lt - lc)
+        s_new = jnp.exp(lt)[..., 0, :, None] * s \
+            + jnp.einsum("bhld,bhle->bhde", kd, vv)
+        return s_new, o_inter + o_intra + o_diag
+
+    (state, outs) = jax.lax.scan(body, state, (r_, k_, v_, lcum, lprev, ltot))
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(b, t, h, dh)
+    return out, state
+
+
+def rwkv6_apply(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+                state: Params | None = None
+                ) -> tuple[jnp.ndarray, Params]:
+    """x: [B, S, d].  state: {'x_prev': [B,1,d], 'wkv': [B,H,Dk,Dv]}
+    (zeros when None).  Returns (out, new_state); s==1 with a state uses
+    the O(1) single-step decode path, otherwise the chunked scan."""
+    b, s, d = x.shape
+    h, dh = cfg.n_heads, cfg.head_dim
+    dt = x.dtype
+
+    if state is not None:
+        x_prev = jnp.concatenate([state["x_prev"].astype(dt), x[:, :-1]],
+                                 axis=1)
+    else:
+        x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+
+    def mix(mu):
+        return (x + (x_prev - x) * mu.astype(dt))
+
+    xr, xk, xv, xg, xw = (mix(p[f"mu_{c}"]) for c in "rkvgw")
+    r = jnp.einsum("bsd,dhk->bshk", xr, p["wr"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", xk, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", xv, p["wv"].astype(dt))
+    g = jax.nn.silu(jnp.einsum("bsd,dhk->bshk", xg, p["wg"].astype(dt)))
+    # data-dependent decay: log w = -exp(w0 + lora(xw))  (<= 0 always)
+    lora = jnp.tanh(xw @ p["w_lora_a"].astype(dt)) @ p["w_lora_b"].astype(dt)
+    w_log = -jnp.exp(jnp.clip(p["w0"].astype(jnp.float32)
+                              + lora.astype(jnp.float32), -12.0, 2.0))
+    w_log = w_log.reshape(b, s, h, dh)
+
+    if s == 1 and state is not None:   # decode: single-step recurrence
+        wkv = state["wkv"]                                  # [B,H,Dk,Dv]
+        rf, kf, vf = (a.astype(jnp.float32)[:, 0] for a in (r, k, v))
+        o = jnp.einsum("bhd,bhde->bhe", rf,
+                       wkv + p["u"].astype(jnp.float32)[None, :, :, None]
+                       * kf[..., None] * vf[:, :, None, :])
+        wkv = (jnp.exp(w_log[:, 0])[..., None] * wkv
+               + kf[..., None] * vf[:, :, None, :])
+        out = o[:, None]                                    # [B,1,H,Dh]
+        new_state = {"x_prev": x[:, -1:], "wkv": wkv}
+    else:
+        pad = (-s) % RWKV_CHUNK
+        if pad:
+            r, k, v = (jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                       for a in (r, k, v))
+            # padded steps must not decay the carried state: log w = 0
+            w_log = jnp.pad(w_log, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        s0 = None if state is None else state["wkv"]
+        o, wkv = wkv_chunked(r, k, v, w_log, p["u"].astype(jnp.float32),
+                             state=s0)
+        out = o[:, :s]                                      # [B,S,H,Dh]
+        new_state = {"x_prev": x[:, -1:], "wkv": wkv}
+
+    # per-head group-norm, gate, head-merging output projection
+    out = rmsnorm(p["ln_out"], out.astype(dt), cfg.norm_eps) * g
+    proj = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+    return proj, new_state
+
+
+# ================================================================== Mamba-1
+def mamba_init(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    di = cfg.expand * d
+    ds, dc = cfg.d_state, cfg.d_conv
+    dt_rank = max(1, d // 16)
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": _init(ks[0], (d, 2 * di)),
+        "conv_w": _init(ks[1], (dc, di), scale=dc ** -0.5),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "x_proj": _init(ks[2], (di, dt_rank + 2 * ds)),
+        "dt_proj": _init(ks[3], (dt_rank, di), scale=dt_rank ** -0.5),
+        "dt_bias": jnp.full((di,), -4.6, jnp.float32),   # softplus^-1(0.01)
+        "a_log": jnp.log(jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32),
+                                  (di, 1))),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": _init(ks[4], (di, d), scale=di ** -0.5),
+    }
+
+
+def mamba_apply(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+                state: Params | None = None
+                ) -> tuple[jnp.ndarray, Params]:
+    """x: [B,S,d].  state: {'conv': [B, d_conv-1, di], 'h':
+    [B, di, d_state]} (zeros when None).  One code path serves train
+    (s=S, no state), prefill (returns final state) and decode (s=1)."""
+    b, s, d = x.shape
+    di = cfg.expand * d
+    ds, dc = cfg.d_state, cfg.d_conv
+    dt_rank = max(1, d // 16)
+    dt = x.dtype
+
+    xz = x @ p["in_proj"].astype(dt)
+    xi, z = xz[..., :di], xz[..., di:]
+
+    # causal depthwise conv (carried tail = the conv state)
+    prev = (state["conv"].astype(dt) if state is not None
+            else jnp.zeros((b, dc - 1, di), dt))
+    conv_in = jnp.concatenate([prev, xi], axis=1)
+    new_conv = conv_in[:, -(dc - 1):]
+    xc = sum(conv_in[:, i:i + s] * p["conv_w"][i].astype(dt)
+             for i in range(dc)) + p["conv_b"].astype(dt)
+    xc = jax.nn.silu(xc)
+
+    proj = xc @ p["x_proj"].astype(dt)
+    dt_in, bmat, cmat = (proj[..., :dt_rank],
+                         proj[..., dt_rank:dt_rank + ds],
+                         proj[..., dt_rank + ds:])
+    delta = jax.nn.softplus(dt_in @ p["dt_proj"].astype(dt)
+                            + p["dt_bias"].astype(dt))       # [B,S,di]
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))              # [di,ds]
+
+    def step(h, inp):
+        xc_t, d_t, b_t, c_t = inp       # [B,di], [B,di], [B,ds], [B,ds]
+        da = jnp.exp(d_t.astype(jnp.float32)[..., None] * a)  # [B,di,ds]
+        dbx = (d_t * xc_t).astype(jnp.float32)[..., None] \
+            * b_t.astype(jnp.float32)[:, None, :]
+        h = da * h + dbx
+        y = jnp.einsum("bds,bs->bd", h, c_t.astype(jnp.float32))
+        return h, y
+
+    h0 = (state["h"] if state is not None
+          else jnp.zeros((b, di, ds), jnp.float32))
+    xs = (xc.swapaxes(0, 1), delta.swapaxes(0, 1),
+          bmat.swapaxes(0, 1), cmat.swapaxes(0, 1))
+    # unroll keeps the carry h in registers across `mamba_unroll` steps,
+    # dividing the HBM carry round-trips (EXPERIMENTS.md §Perf jamba)
+    h_final, ys = jax.lax.scan(step, h0, xs,
+                               unroll=max(cfg.mamba_unroll, 1))
+    y = ys.swapaxes(0, 1).astype(dt) + xc * p["d_skip"].astype(dt)
+    out = (y * jax.nn.silu(z)) @ p["out_proj"].astype(dt)
+    new_state = {"conv": new_conv.astype(jnp.float32), "h": h_final}
+    return out, new_state

@@ -1,0 +1,235 @@
+"""Decoder-LM assembly: init / train-forward / prefill / decode over the
+stage structure from ModelConfig (scan-over-layers with stacked params).
+
+Three entry points used by the launcher & dry-run:
+    apply(params, tokens)                 -> logits, aux   (train fwd)
+    prefill(params, tokens, max_len)      -> logits, cache
+    decode_step(params, cache, tok, pos)  -> logits, cache (1 new token)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.models import layers as L
+from repro.models import moe as MoE
+from repro.models import ssm as SSM
+
+Params = dict[str, Any]
+
+
+# ------------------------------------------------------------------- init
+def init_layer(key, spec: LayerSpec, cfg: ModelConfig) -> Params:
+    km, kf = jax.random.split(key)
+    p: Params = {"norm1": L.rmsnorm_init(cfg.d_model),
+                 "norm2": L.rmsnorm_init(cfg.d_model)}
+    if spec.mixer in ("attn", "attn_local"):
+        p["mixer"] = L.attention_init(km, cfg)
+    elif spec.mixer == "mamba":
+        p["mixer"] = SSM.mamba_init(km, cfg)
+    elif spec.mixer == "rwkv6":
+        p["mixer"] = SSM.rwkv6_init(km, cfg)
+    else:
+        raise ValueError(spec.mixer)
+    if spec.ffn == "dense":
+        p["ffn"] = L.mlp_init(kf, cfg.d_model, cfg.d_ff)
+    else:
+        p["ffn"] = MoE.moe_init(kf, cfg, spec.ffn == "moe_dense")
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    group = cfg.group_spec()
+    repeats = cfg.n_layers // len(group)
+    ke, kl, kh = jax.random.split(key, 3)
+    params: Params = {
+        "embed": jax.random.normal(ke, (cfg.vocab_size, cfg.d_model),
+                                   jnp.float32) * 0.02,
+        "final_norm": L.rmsnorm_init(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L._init(kh, (cfg.d_model, cfg.vocab_size))
+
+    def init_group(k):
+        ks = jax.random.split(k, len(group))
+        return {f"l{i}": init_layer(ks[i], spec, cfg)
+                for i, spec in enumerate(group)}
+
+    keys = jax.random.split(kl, repeats)
+    params["stage"] = jax.vmap(init_group)(keys)   # leaves stacked [R, ...]
+    return params
+
+
+# ----------------------------------------------------------------- layers
+def _mixer_apply(p, x, cfg, spec: LayerSpec, positions, cache, mode,
+                 use_flash):
+    if spec.mixer in ("attn", "attn_local"):
+        local = spec.mixer == "attn_local"
+        if mode == "decode":
+            return L.attention_apply(p, x, cfg, positions, local=local,
+                                     cache=cache)
+        out, _ = L.attention_apply(p, x, cfg, positions, local=local,
+                                   use_flash=use_flash)
+        new_cache = None
+        if mode == "prefill":
+            new_cache = _attn_prefill_cache(p, x, cfg, positions, local)
+        return out, new_cache
+    if spec.mixer == "mamba":
+        out, st = SSM.mamba_apply(p, x, cfg, state=cache)
+        return out, (None if mode == "train" else st)
+    if spec.mixer == "rwkv6":
+        out, st = SSM.rwkv6_apply(p, x, cfg, state=cache)
+        return out, (None if mode == "train" else st)
+    raise ValueError(spec.mixer)
+
+
+def _attn_prefill_cache(p, x, cfg, positions, local):
+    """Build the decode cache after a prefill pass: K/V for the whole
+    prompt written into a max_seq_len buffer (ring-sized for local)."""
+    b, s, _ = x.shape
+    q, k, v = L._qkv(p, x, cfg, positions)
+    size = min(cfg.sliding_window, cfg.max_seq_len) if local else cfg.max_seq_len
+    if local and s >= size:
+        # ring buffer: keep the last `size` positions at slots pos % size
+        keep_k, keep_v = k[:, -size:], v[:, -size:]
+        start = (s - size) % size
+        roll = jnp.roll(keep_k, start, axis=1), jnp.roll(keep_v, start, axis=1)
+        ck, cv = roll
+    else:
+        pad = size - s
+        ck = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cv = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return {"k": ck, "v": cv}
+
+
+def layer_apply(p: Params, x, cfg, spec: LayerSpec, positions, cache, mode,
+                use_flash=False):
+    h, new_cache = _mixer_apply(p["mixer"], L.rmsnorm(p["norm1"], x, cfg.norm_eps),
+                                cfg, spec, positions, cache, mode, use_flash)
+    x = x + h
+    hn = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+    if spec.ffn == "dense":
+        f, aux = L.mlp_apply(p["ffn"], hn), 0.0
+    else:
+        f, aux = MoE.moe_apply(p["ffn"], hn, cfg)
+    return x + f, new_cache, aux
+
+
+# ------------------------------------------------------------- stage scan
+def _stage_scan(params, x, cfg, positions, caches, mode, use_flash,
+                remat: bool):
+    group = cfg.group_spec()
+
+    def body(carry, xs):
+        xc, aux = carry
+        if cfg.seq_parallel and mode != "decode":
+            # sequence parallelism: the residual stream (and the remat
+            # boundary stash) stays sharded over 'model' between layers
+            from repro.pspec import constrain as _c
+            xc = _c(xc, "dp", "model", None)
+        layer_p, layer_c = xs
+        new_cs = {}
+        for i, spec in enumerate(group):
+            c = None if layer_c is None else layer_c.get(f"l{i}")
+            xc, nc, a = layer_apply(layer_p[f"l{i}"], xc, cfg, spec,
+                                    positions, c, mode, use_flash)
+            if nc is not None:
+                new_cs[f"l{i}"] = nc
+            aux = aux + a
+        return (xc, aux), (new_cs if new_cs else None)
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    xs = (params["stage"], caches)
+    (x, aux), new_caches = jax.lax.scan(body, (x, 0.0), xs)
+    return x, aux, new_caches
+
+
+# ------------------------------------------------------------ entry points
+def _logits(params, x, cfg):
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    return (x @ head.astype(x.dtype)).astype(jnp.float32)
+
+
+def apply(params: Params, tokens: jnp.ndarray, cfg: ModelConfig,
+          positions: jnp.ndarray | None = None, use_flash: bool = False,
+          remat: bool = True, dtype=jnp.bfloat16):
+    """Training forward: tokens [B,S] -> (logits [B,S,V] f32, aux)."""
+    b, s = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dtype)
+    x, aux, _ = _stage_scan(params, x, cfg, positions, None, "train",
+                            use_flash, remat)
+    return _logits(params, x, cfg), aux
+
+
+def loss_fn(params, tokens, targets, cfg, aux_weight: float = 0.01,
+            **kw):
+    logits, aux = apply(params, tokens, cfg, **kw)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return nll.mean() + aux_weight * aux
+
+
+# ----- serving -----
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> Params:
+    """Zeroed decode caches matching the stage structure ([R, ...])."""
+    group = cfg.group_spec()
+    repeats = cfg.n_layers // len(group)
+    d, dh = cfg.d_model, cfg.head_dim
+
+    def one(spec: LayerSpec):
+        if spec.mixer in ("attn", "attn_local"):
+            size = (min(cfg.sliding_window, max_len)
+                    if spec.mixer == "attn_local" else max_len)
+            shp = (repeats, batch, size, cfg.n_kv_heads, dh)
+            return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}
+        if spec.mixer == "mamba":
+            di = cfg.expand * d
+            return {"conv": jnp.zeros((repeats, batch, cfg.d_conv - 1, di),
+                                      jnp.float32),
+                    "h": jnp.zeros((repeats, batch, di, cfg.d_state),
+                                   jnp.float32)}
+        if spec.mixer == "rwkv6":
+            return {"x_prev": jnp.zeros((repeats, batch, 1, d), dtype),
+                    "wkv": jnp.zeros((repeats, batch, cfg.n_heads, dh, dh),
+                                     jnp.float32)}
+        raise ValueError(spec.mixer)
+
+    return {f"l{i}": one(spec) for i, spec in enumerate(group)}
+
+
+def prefill(params: Params, tokens: jnp.ndarray, cfg: ModelConfig,
+            max_len: int | None = None, use_flash: bool = False,
+            dtype=jnp.bfloat16):
+    """Prompt pass: returns (last-token logits [B,V], decode cache).
+    max_len overrides cfg.max_seq_len for the cache size."""
+    import dataclasses
+    b, s = tokens.shape
+    if max_len is not None and max_len != cfg.max_seq_len:
+        cfg = dataclasses.replace(cfg, max_seq_len=max_len)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dtype)
+    x, _, caches = _stage_scan(params, x, cfg, positions, None, "prefill",
+                               use_flash, remat=True)
+    return _logits(params, x[:, -1:], cfg)[:, 0], caches
+
+
+def decode_step(params: Params, cache: Params, tokens: jnp.ndarray,
+                pos: jnp.ndarray, cfg: ModelConfig, dtype=jnp.bfloat16):
+    """One decode step: tokens [B,1] at absolute position `pos` (scalar
+    int32).  Returns (logits [B,V], updated cache)."""
+    b = tokens.shape[0]
+    positions = jnp.broadcast_to(pos.astype(jnp.int32), (b, 1))
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dtype)
+    x, _, new_cache = _stage_scan(params, x, cfg, positions, cache,
+                                  "decode", False, remat=False)
+    return _logits(params, x, cfg)[:, 0], new_cache

@@ -1,0 +1,96 @@
+"""Gradient compression for the slow cross-pod tier.
+
+Two compressors for the 'pod' axis all-reduce (DESIGN.md §6):
+  * top-k sparsification with error feedback (memory of the residual is
+    added back next step, preserving convergence),
+  * int8 block quantisation (per-block absmax scales).
+
+Both are pure-jnp pytree transforms so they compose with pjit; tests
+assert the EF invariant (compressed + residual == original) and the
+quantisation error bound.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class TopKState(NamedTuple):
+    residual: Any          # error-feedback memory, same tree as grads
+
+
+def topk_init(grads) -> TopKState:
+    return TopKState(jax.tree.map(jnp.zeros_like, grads))
+
+
+def topk_compress(grads, state: TopKState, ratio: float = 0.01):
+    """Returns (sparse_grads_dense_form, new_state).  The 'wire' form
+    keeps only the top-k |g| entries per tensor (k = ratio * size); the
+    rest accumulates in the residual."""
+    def one(g, r):
+        g = g + r                                     # error feedback
+        flat = g.reshape(-1)
+        k = max(1, int(flat.size * ratio))
+        _, idx = jax.lax.top_k(jnp.abs(flat), k)
+        mask = jnp.zeros_like(flat).at[idx].set(1.0)
+        sent = flat * mask
+        return sent.reshape(g.shape), g - sent.reshape(g.shape)
+
+    out = jax.tree.map(one, grads, state.residual)
+    sent = jax.tree.map(lambda t: t[0], out,
+                        is_leaf=lambda t: isinstance(t, tuple))
+    resid = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return sent, TopKState(resid)
+
+
+def topk_wire_bytes(grads, ratio: float = 0.01) -> int:
+    """Bytes on the wire: value (f16) + index (u32) per kept entry."""
+    total = 0
+    for g in jax.tree.leaves(grads):
+        k = max(1, int(g.size * ratio))
+        total += k * (2 + 4)
+    return total
+
+
+class Int8State(NamedTuple):
+    pass
+
+
+def int8_compress(grads, block: int = 256):
+    """Per-block absmax int8 quantisation.  Returns (q, scales)."""
+    def one(g):
+        flat = g.reshape(-1)
+        pad = (-flat.size) % block
+        flat = jnp.pad(flat, (0, pad))
+        blocks = flat.reshape(-1, block)
+        scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+        scale = jnp.maximum(scale, 1e-12)
+        q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+        return q, scale, g.shape, pad
+
+    return jax.tree.map(one, grads,
+                        is_leaf=lambda x: isinstance(x, jnp.ndarray))
+
+
+def int8_decompress(compressed):
+    def one(t):
+        q, scale, shape, pad = t
+        flat = (q.astype(jnp.float32) * scale).reshape(-1)
+        if pad:
+            flat = flat[:-pad]
+        return flat.reshape(shape)
+
+    return jax.tree.map(one, compressed,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def int8_error_bound(g: jnp.ndarray, block: int = 256) -> float:
+    """Max elementwise error <= scale/2 = absmax/254 per block."""
+    flat = jnp.abs(g.reshape(-1))
+    pad = (-flat.size) % block
+    flat = jnp.pad(flat, (0, pad))
+    return float((flat.reshape(-1, block).max(1) / 254.0).max())

@@ -1,0 +1,44 @@
+"""Elastic scaling: re-mesh planning + checkpoint resharding.
+
+When nodes fail or join, the data-parallel axis is resized (the model
+axis is pinned by the TP layout).  `plan_mesh` chooses the largest
+valid (data, model) grid for the surviving device count; restore then
+`device_put`s checkpointed leaves against the new mesh's shardings —
+the checkpoint format is mesh-agnostic (see repro.checkpoint).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.launch import sharding as SH
+
+
+def plan_mesh(n_devices: int, model_parallel: int = 16,
+              pod_size: int | None = None):
+    """Largest usable mesh: data = floor(n/model); multi-pod keeps whole
+    pods only (a partially-dead pod is drained to keep the pod axis
+    uniform)."""
+    if pod_size:
+        pods = n_devices // pod_size
+        data = pod_size // model_parallel
+        if pods >= 2:
+            return ("pod", "data", "model"), (pods, data, model_parallel)
+        n_devices = pods * pod_size if pods else n_devices
+    data = max(1, n_devices // model_parallel)
+    if data * model_parallel > n_devices:
+        data -= 1
+    mp = model_parallel if data >= 1 else n_devices
+    return ("data", "model"), (max(data, 1), mp)
+
+
+def make_mesh_for(n_devices: int, model_parallel: int = 16,
+                  pod_size: int | None = None):
+    axes, shape = plan_mesh(n_devices, model_parallel, pod_size)
+    return jax.make_mesh(shape, axes)
+
+
+def reshard_state(state, cfg, new_mesh, params_shape):
+    """Reshard a (params-like) tree onto a new mesh."""
+    sh = SH.param_shardings(cfg, new_mesh, params_shape)
+    return jax.tree.map(lambda x, s: jax.device_put(x, s), state, sh)

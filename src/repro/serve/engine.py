@@ -1,0 +1,117 @@
+"""Batched serving engine: continuous-batching-lite over the decode
+step.
+
+Requests join a waiting queue; at each engine tick, finished slots are
+retired, waiting requests are prefilled into free slots (one shared
+fixed-shape KV cache, slot = batch row), and a single fused
+`decode_step` advances every active slot by one token.  Slot state is
+managed host-side; the device sees fixed shapes only (jit-stable).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as TF
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray           # [S] int32
+    max_new_tokens: int = 32
+    out: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, params, cfg: ModelConfig, batch_slots: int = 4,
+                 max_len: int = 512, sampler: Callable | None = None,
+                 dtype=jnp.float32):
+        self.params = params
+        self.cfg = cfg
+        self.slots = batch_slots
+        self.max_len = max_len
+        self.dtype = dtype
+        self.sampler = sampler or (lambda logits, k: jnp.argmax(logits, -1))
+        self.cache = TF.init_cache(cfg, batch_slots, max_len, dtype)
+        self.active: list[Request | None] = [None] * batch_slots
+        self.pos = np.zeros(batch_slots, np.int32)
+        self.waiting: list[Request] = []
+        self._decode = jax.jit(
+            lambda p, c, t, pos: TF.decode_step(p, c, t, pos, cfg,
+                                                dtype=dtype))
+
+    # ---------------------------------------------------------------- admin
+    def submit(self, req: Request):
+        self.waiting.append(req)
+
+    def _admit(self):
+        for slot in range(self.slots):
+            if self.active[slot] is None and self.waiting:
+                req = self.waiting.pop(0)
+                self._prefill_into(slot, req)
+
+    def _prefill_into(self, slot: int, req: Request):
+        """Prefill a single request and splice its cache into the shared
+        batch cache at `slot` (host-side cache surgery keeps the decode
+        step's shapes static)."""
+        tokens = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        logits, cache1 = TF.prefill(self.params, tokens, self.cfg,
+                                    max_len=self.max_len, dtype=self.dtype)
+        first = int(self.sampler(logits, 1)[0])
+        req.out.append(first)
+
+        def splice(shared, single):
+            # shared: [R, slots, ...]; single: [R, 1, ...]
+            pad = [(0, 0)] * single.ndim
+            if single.shape[2] != shared.shape[2] and single.ndim >= 3:
+                pad[2] = (0, shared.shape[2] - single.shape[2])
+                single = jnp.pad(single, pad)
+            return shared.at[:, slot:slot + 1].set(
+                single.astype(shared.dtype))
+
+        self.cache = jax.tree.map(splice, self.cache, cache1)
+        self.active[slot] = req
+        self.pos[slot] = len(req.prompt)
+
+    # ----------------------------------------------------------------- tick
+    def step(self) -> int:
+        """One engine tick: admit + decode one token for every active
+        slot.  Returns number of active requests."""
+        self._admit()
+        live = [s for s in range(self.slots) if self.active[s] is not None]
+        if not live:
+            return 0
+        # uniform decode position: the engine advances the max position;
+        # per-slot last tokens are gathered host-side
+        last = np.zeros((self.slots, 1), np.int32)
+        for s in live:
+            last[s, 0] = self.active[s].out[-1]
+        pos = jnp.int32(int(self.pos[live].max()))
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          jnp.asarray(last), pos)
+        nxt = np.asarray(self.sampler(logits, 1))
+        for s in live:
+            req = self.active[s]
+            req.out.append(int(nxt[s]))
+            self.pos[s] += 1
+            if (len(req.out) >= req.max_new_tokens
+                    or self.pos[s] >= self.max_len - 1):
+                req.done = True
+                self.active[s] = None
+        return len(live)
+
+    def run_until_drained(self, max_ticks: int = 1000) -> list[Request]:
+        finished: list[Request] = []
+        for _ in range(max_ticks):
+            if not self.waiting and all(a is None for a in self.active):
+                break
+            self.step()
+        return finished

@@ -1,0 +1,116 @@
+"""Training step: cross-entropy loss, gradient accumulation via
+lax.scan over microbatches (keeps one microbatch of activations live),
+AdamW update.  Everything is pjit-compatible: gradients of FSDP-sharded
+parameters lower to reduce-scatter, the scan-over-layers remat bounds
+activation memory, and the microbatch scan bounds logits memory for the
+262k-vocab archs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as TF
+from repro.optim import adamw_update, warmup_cosine
+from repro.pspec import constrain
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    accum_steps: int = 1           # microbatch count per step
+    peak_lr: float = 3e-4
+    warmup: int = 200
+    total_steps: int = 10000
+    aux_weight: float = 0.01
+    remat: bool = True
+    use_flash: bool = False
+    optimizer: str = "adamw"       # 'adamw' | 'adamw8bit' (400B-class fit)
+    dtype: Any = jnp.bfloat16
+    grad_dtype: Any = jnp.float32  # bf16 halves the accumulation buffer
+
+
+def microbatch_loss(params, tokens, targets, cfg: ModelConfig,
+                    tcfg: TrainConfig):
+    logits, aux = TF.apply(params, tokens, cfg, use_flash=tcfg.use_flash,
+                           remat=tcfg.remat, dtype=tcfg.dtype)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return nll.mean() + tcfg.aux_weight * aux
+
+
+def train_step(params, opt_state, batch, cfg: ModelConfig,
+               tcfg: TrainConfig, grad_shardings=None):
+    """batch: {'tokens','targets'}: [global_batch, S] int32.
+    Returns (params, opt_state, metrics).
+
+    grad_shardings: optional pytree of NamedShardings matching params —
+    constraining per-microbatch grads to the (FSDP-sharded) accumulator
+    layout makes XLA emit reduce-scatter instead of all-reduce inside
+    the accumulation loop (see EXPERIMENTS.md §Perf arctic)."""
+    tokens, targets = batch["tokens"], batch["targets"]
+    a = tcfg.accum_steps
+    b = tokens.shape[0]
+    assert b % a == 0, (b, a)
+
+    loss_g = jax.value_and_grad(microbatch_loss)
+
+    def _constrain_grads(g):
+        if grad_shardings is None:
+            return g
+        return jax.tree.map(
+            lambda x, s: jax.lax.with_sharding_constraint(x, s),
+            g, grad_shardings)
+
+    if a == 1:
+        loss, grads = loss_g(params, tokens, targets, cfg, tcfg)
+        grads = _constrain_grads(grads)
+    else:
+        mb_tok = tokens.reshape(a, b // a, -1)
+        mb_tgt = targets.reshape(a, b // a, -1)
+
+        gdt = tcfg.grad_dtype
+
+        def body(carry, mb):
+            g_acc, l_acc = carry
+            loss, g = loss_g(params, mb[0], mb[1], cfg, tcfg)
+            g = _constrain_grads(g)
+            g_acc = jax.tree.map(lambda x, y: x + y.astype(gdt), g_acc, g)
+            return (g_acc, l_acc + loss), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, gdt), params)
+        (grads, loss), _ = jax.lax.scan(body, (g0, 0.0), (mb_tok, mb_tgt))
+        grads = jax.tree.map(lambda g: g / a, grads)
+        loss = loss / a
+
+    lr = warmup_cosine(opt_state.step, tcfg.peak_lr, tcfg.warmup,
+                       tcfg.total_steps)
+    if tcfg.optimizer == "adamw8bit":
+        from repro.optim.adamw8bit import adamw8_update
+        new_params, new_opt = adamw8_update(grads, opt_state, params, lr)
+    else:
+        new_params, new_opt = adamw_update(grads, opt_state, params, lr)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g))
+                         for g in jax.tree.leaves(grads)))
+    return new_params, new_opt, {"loss": loss, "lr": lr, "grad_norm": gnorm}
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
+    """Partial with static configs bound (for jit/lower)."""
+    return functools.partial(train_step, cfg=cfg, tcfg=tcfg)
+
+
+# ---------------------------------------------------------------- serving
+def prefill_step(params, tokens, cfg: ModelConfig, dtype=jnp.bfloat16):
+    return TF.prefill(params, tokens, cfg, dtype=dtype)
+
+
+def serve_step(params, cache, tokens, pos, cfg: ModelConfig,
+               dtype=jnp.bfloat16):
+    """One decode step (the dry-run target for decode_* shapes)."""
+    return TF.decode_step(params, cache, tokens, pos, cfg, dtype=dtype)

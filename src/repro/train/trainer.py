@@ -1,0 +1,96 @@
+"""High-level trainer: data + step + checkpointing + fault tolerance +
+adaptive runtime, under a mesh.  Used by examples/train_e2e.py and the
+integration tests."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import SyntheticLM, shard_batch
+from repro.launch import sharding as SH
+from repro.models import transformer as TF
+from repro.optim import adamw_init
+from repro.train.step import TrainConfig, train_step
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    global_batch: int = 8
+    seq_len: int = 128
+    ckpt_dir: str | None = None
+    ckpt_every: int = 50
+    seed: int = 0
+    train: TrainConfig = dataclasses.field(default_factory=TrainConfig)
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tcfg: TrainerConfig, mesh=None):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.mesh = mesh
+        key = jax.random.PRNGKey(tcfg.seed)
+
+        if mesh is not None:
+            params_shape = jax.eval_shape(
+                partial(TF.init_params, cfg=cfg), key)
+            self.p_sh = SH.param_shardings(cfg, mesh, params_shape)
+            with jax.set_mesh(mesh):
+                self.params = jax.jit(
+                    partial(TF.init_params, cfg=cfg),
+                    out_shardings=self.p_sh)(key)
+                self.opt = adamw_init(self.params)
+        else:
+            self.params = TF.init_params(key, cfg)
+            self.opt = adamw_init(self.params)
+            self.p_sh = None
+
+        self.data = SyntheticLM(cfg.vocab_size, tcfg.seq_len,
+                                tcfg.global_batch, tcfg.seed)
+        self.ckpt = (CheckpointManager(tcfg.ckpt_dir, every=tcfg.ckpt_every)
+                     if tcfg.ckpt_dir else None)
+        self._step = jax.jit(partial(train_step, cfg=cfg, tcfg=tcfg.train))
+        self.metrics: list[dict[str, float]] = []
+
+    def _place(self, batch):
+        if self.mesh is None:
+            return {k: jnp.asarray(v) for k, v in batch.items()}
+        return shard_batch(batch, SH.batch_sharding(self.mesh))
+
+    def _run_inner(self, start_step: int):
+        for step in range(start_step, self.tcfg.steps):
+            batch = self._place(self.data.batch_at(step))
+            self.params, self.opt, m = self._step(
+                self.params, self.opt, batch)
+            self.metrics.append(
+                {k: float(v) for k, v in m.items()} | {"step": step})
+            if self.ckpt:
+                self.ckpt.maybe_save(
+                    step + 1, {"params": self.params, "opt": self.opt})
+
+    def run(self, start_step: int = 0) -> dict[str, Any]:
+        t0 = time.time()
+        if self.mesh is not None:
+            with jax.set_mesh(self.mesh):
+                self._run_inner(start_step)
+        else:
+            self._run_inner(start_step)
+        if self.ckpt:
+            self.ckpt.wait()
+        return {"losses": [m["loss"] for m in self.metrics],
+                "wall_s": time.time() - t0}
+
+    def resume(self):
+        assert self.ckpt is not None
+        like = {"params": self.params, "opt": self.opt}
+        state, step = self.ckpt.restore(like)
+        self.params, self.opt = state["params"], state["opt"]
+        return step

@@ -1,0 +1,22 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here on purpose — smoke tests
+must see the real single CPU device; only the dry-run subprocess test
+forces 512 host devices (in its own process)."""
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="session")
+def small_pop():
+    """Small simulated module population for profiler/controller tests."""
+    import dataclasses
+    from repro.core.calibration import CALIBRATED_VARIATION
+    from repro.core.variation import sample_population
+
+    cfg = dataclasses.replace(CALIBRATED_VARIATION, n_modules=12, n_cells=6)
+    return sample_population(jax.random.PRNGKey(7), cfg)

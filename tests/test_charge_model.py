@@ -1,0 +1,136 @@
+"""Physics-model property tests (hypothesis) + kernel-vs-oracle checks."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import timing as T
+from repro.core.calibration import CALIBRATED_CONSTANTS
+from repro.core.charge import CellParams
+from repro.kernels.charge_sim import ops
+
+C = CALIBRATED_CONSTANTS
+
+
+def margins(cells, combos, temp):
+    r, w = ops.combo_margins(jnp.asarray(cells, jnp.float32),
+                             jnp.asarray(combos, jnp.float32), temp,
+                             C, impl="ref")
+    return np.asarray(r), np.asarray(w)
+
+
+def cell(tau_r=4.5, xfer=0.185, tau_ret=600.0, tau_p=0.1, tau_w=5.5):
+    return np.array([[tau_r, xfer, tau_ret, tau_p, tau_w]], np.float32)
+
+
+STD = np.asarray(T.DDR3_1600.as_array())[None, :]
+
+
+def scaled(trcd=1.0, tras=1.0, twr=1.0, trp=1.0, trefi=1.0):
+    c = STD.copy()
+    c[0, :] = STD[0, :] * [trcd, tras, twr, trp, trefi]
+    return c
+
+
+class TestMonotonicity:
+    """Paper Sec. 3: more charge -> more margin.  Each knob that removes
+    charge must reduce the margin monotonically."""
+
+    @given(st.floats(0.3, 0.95))
+    @settings(max_examples=20, deadline=None)
+    def test_shorter_tras_never_helps(self, f):
+        r_full, _ = margins(cell(), scaled(), 85.0)
+        r_cut, _ = margins(cell(), scaled(tras=f), 85.0)
+        assert r_cut[0, 0] <= r_full[0, 0] + 1e-5
+
+    @given(st.floats(0.3, 0.95))
+    @settings(max_examples=20, deadline=None)
+    def test_shorter_twr_never_helps(self, f):
+        _, w_full = margins(cell(), scaled(), 85.0)
+        _, w_cut = margins(cell(), scaled(twr=f), 85.0)
+        assert w_cut[0, 0] <= w_full[0, 0] + 1e-5
+
+    @given(st.floats(0.3, 0.95))
+    @settings(max_examples=20, deadline=None)
+    def test_shorter_trp_never_helps(self, f):
+        r_full, w_full = margins(cell(), scaled(), 85.0)
+        r_cut, w_cut = margins(cell(), scaled(trp=f), 85.0)
+        assert r_cut[0, 0] <= r_full[0, 0] + 1e-5
+        assert w_cut[0, 0] <= w_full[0, 0] + 1e-5
+
+    @given(st.floats(1.1, 6.0))
+    @settings(max_examples=20, deadline=None)
+    def test_longer_refresh_never_helps(self, f):
+        r_full, w_full = margins(cell(), scaled(), 85.0)
+        r_cut, w_cut = margins(cell(), scaled(trefi=f), 85.0)
+        assert r_cut[0, 0] <= r_full[0, 0] + 1e-5
+        assert w_cut[0, 0] <= w_full[0, 0] + 1e-5
+
+    @given(st.floats(30.0, 85.0), st.floats(0.0, 20.0))
+    @settings(max_examples=25, deadline=None)
+    def test_hotter_never_helps(self, t, dt):
+        r_cool, w_cool = margins(cell(), scaled(), t)
+        r_hot, w_hot = margins(cell(), scaled(), min(t + dt, 95.0))
+        assert r_hot[0, 0] <= r_cool[0, 0] + 1e-5
+        assert w_hot[0, 0] <= w_cool[0, 0] + 1e-5
+
+    @given(st.floats(100.0, 2000.0), st.floats(1.05, 3.0))
+    @settings(max_examples=20, deadline=None)
+    def test_better_retention_helps(self, tau, f):
+        r1, w1 = margins(cell(tau_ret=tau), scaled(), 85.0)
+        r2, w2 = margins(cell(tau_ret=tau * f), scaled(), 85.0)
+        assert r2[0, 0] >= r1[0, 0] - 1e-5
+        assert w2[0, 0] >= w1[0, 0] - 1e-5
+
+
+class TestPaperInvariants:
+    def test_standard_timings_pass_at_85(self, small_pop):
+        r, w = margins(np.asarray(small_pop.flat_cells()), STD, 85.0)
+        assert r.min() >= 0, "JEDEC timings must be error-free at 85C"
+        assert w.min() >= 0
+
+    def test_worst_case_reference_guarantee(self):
+        """The implied JEDEC design point must cover a compound
+        worst-case cell beyond anything realised in the population."""
+        from repro.core.guardband import design_quantile
+        q = design_quantile(C)
+        assert q >= 1.5, f"design quantile too tight: {q:.2f} sigma"
+
+    def test_55C_allows_deeper_cuts_than_85C(self, small_pop):
+        cells = np.asarray(small_pop.flat_cells())
+        cut = scaled(trcd=0.85, tras=0.7, twr=0.7, trp=0.8)
+        r85, w85 = margins(cells, cut, 85.0)
+        r55, w55 = margins(cells, cut, 55.0)
+        assert r55.min() >= r85.min()
+        assert w55.min() >= w85.min()
+
+
+class TestKernelVsOracle:
+    @pytest.mark.parametrize("n,m", [(8, 8), (64, 32), (256, 256),
+                                     (300, 70)])
+    @pytest.mark.parametrize("temp", [55.0, 85.0])
+    def test_pallas_matches_ref(self, small_pop, n, m, temp):
+        cells = jnp.asarray(small_pop.flat_cells()[:n])
+        combos = jnp.asarray(T.read_combo_grid()[:m])
+        r1, w1 = ops.combo_margins(cells, combos, temp, C, impl="ref")
+        r2, w2 = ops.combo_margins(cells, combos, temp, C,
+                                   impl="pallas_interpret")
+        np.testing.assert_allclose(np.asarray(r1), np.asarray(r2),
+                                   rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(w1), np.asarray(w2),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_trefi_override_matches_explicit(self, small_pop):
+        cells = jnp.asarray(small_pop.flat_cells()[:32])
+        combos = np.asarray(T.read_combo_grid()[:16])
+        combos_explicit = combos.copy()
+        combos_explicit[:, 4] = 120.0
+        r1, _ = ops.combo_margins(cells, jnp.asarray(combos_explicit),
+                                  55.0, C, impl="ref")
+        r2, _ = ops.combo_margins(
+            cells, jnp.asarray(combos), 55.0, C, impl="ref",
+            trefi_cells=jnp.full((32,), 120.0))
+        np.testing.assert_allclose(np.asarray(r1), np.asarray(r2),
+                                   rtol=1e-6)

@@ -1,0 +1,71 @@
+"""Integration test: a miniature dry-run in a subprocess (own process
+so the 512-device XLA flag never leaks into this test session), plus
+HLO cost-analyzer exactness on scanned programs."""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_hlo_cost_counts_scan_trips():
+    from repro.launch.hlo_cost import analyze
+
+    def body(c, _):
+        return c @ c, None
+
+    def f(x):
+        return jax.lax.scan(body, x, None, length=10)[0]
+
+    c = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((128, 128), jnp.float32)).compile()
+    r = analyze(c.as_text())
+    expect = 10 * 2 * 128 ** 3
+    assert abs(r["flops"] - expect) / expect < 0.01
+
+
+def test_hlo_cost_counts_nested_scans():
+    from repro.launch.hlo_cost import analyze
+
+    def g(x):
+        def outer(c, _):
+            def inner(c2, _):
+                return c2 @ c2, None
+            return jax.lax.scan(inner, c, None, length=5)[0], None
+        return jax.lax.scan(outer, x, None, length=3)[0]
+
+    c = jax.jit(g).lower(
+        jax.ShapeDtypeStruct((64, 64), jnp.float32)).compile()
+    r = analyze(c.as_text())
+    expect = 15 * 2 * 64 ** 3
+    assert abs(r["flops"] - expect) / expect < 0.01
+
+
+@pytest.mark.slow
+def test_mini_dryrun_subprocess():
+    """Lower+compile one real cell against the production 16x16 mesh in
+    a subprocess; assert the record is ok and carries cost/memory."""
+    code = (
+        "import os\n"
+        "os.environ['XLA_FLAGS'] = "
+        "'--xla_force_host_platform_device_count=512'\n"
+        "import json\n"
+        "from repro.launch.dryrun import run_cell\n"
+        "rec = run_cell('granite-moe-1b-a400m', 'decode_32k', False)\n"
+        "print('JSON' + json.dumps({k: v for k, v in rec.items()"
+        " if k in ('ok', 'mesh')}))\n")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-2000:]
+    line = next(ln for ln in out.stdout.splitlines()
+                if ln.startswith("JSON"))
+    rec = json.loads(line[4:])
+    assert rec["ok"] and rec["mesh"] == "16x16"

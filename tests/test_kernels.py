@@ -1,0 +1,138 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs pure-jnp
+oracle, assert_allclose."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import ops as flash_ops
+from repro.kernels.rwkv6 import ops as rwkv_ops
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("b,sq,hq,hkv,d", [
+        (1, 128, 2, 2, 64),       # MHA
+        (2, 256, 4, 2, 64),       # GQA 2:1
+        (1, 256, 8, 2, 128),      # GQA 4:1
+        (1, 192, 4, 1, 64),       # MQA, unaligned seq (padding path)
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_causal_matches_ref(self, b, sq, hq, hkv, d, dtype):
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(ks[0], (b, sq, hq, d), dtype)
+        k = jax.random.normal(ks[1], (b, sq, hkv, d), dtype)
+        v = jax.random.normal(ks[2], (b, sq, hkv, d), dtype)
+        o_ref = flash_ops.flash_attention(q, k, v, impl="ref")
+        o_pl = flash_ops.flash_attention(q, k, v, impl="pallas_interpret",
+                                         block_q=64, block_k=128)
+        tol = 2e-2 if dtype == jnp.bfloat16 else 2e-3
+        np.testing.assert_allclose(np.asarray(o_pl, np.float32),
+                                   np.asarray(o_ref, np.float32),
+                                   rtol=tol, atol=tol)
+
+    @pytest.mark.parametrize("window", [32, 64, 128])
+    def test_sliding_window(self, window):
+        ks = jax.random.split(jax.random.PRNGKey(1), 3)
+        q = jax.random.normal(ks[0], (1, 256, 4, 64), jnp.float32)
+        k = jax.random.normal(ks[1], (1, 256, 2, 64), jnp.float32)
+        v = jax.random.normal(ks[2], (1, 256, 2, 64), jnp.float32)
+        o_ref = flash_ops.flash_attention(q, k, v, impl="ref",
+                                          window=window)
+        o_pl = flash_ops.flash_attention(q, k, v, impl="pallas_interpret",
+                                         window=window, block_q=64,
+                                         block_k=64)
+        np.testing.assert_allclose(np.asarray(o_pl), np.asarray(o_ref),
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_block_size_invariance(self):
+        ks = jax.random.split(jax.random.PRNGKey(2), 3)
+        q = jax.random.normal(ks[0], (1, 256, 2, 64), jnp.float32)
+        k = jax.random.normal(ks[1], (1, 256, 2, 64), jnp.float32)
+        v = jax.random.normal(ks[2], (1, 256, 2, 64), jnp.float32)
+        o1 = flash_ops.flash_attention(q, k, v, impl="pallas_interpret",
+                                       block_q=64, block_k=64)
+        o2 = flash_ops.flash_attention(q, k, v, impl="pallas_interpret",
+                                       block_q=128, block_k=256)
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                                   rtol=1e-5, atol=1e-5)
+
+
+class TestRWKV6:
+    @pytest.mark.parametrize("b,t,h,d", [
+        (1, 64, 2, 64), (2, 128, 3, 64), (1, 100, 2, 64),  # pad path
+    ])
+    def test_matches_ref(self, b, t, h, d):
+        ks = jax.random.split(jax.random.PRNGKey(0), 5)
+        r = jax.random.normal(ks[0], (b, t, h, d)) * 0.5
+        k = jax.random.normal(ks[1], (b, t, h, d)) * 0.5
+        v = jax.random.normal(ks[2], (b, t, h, d)) * 0.5
+        wl = -jnp.exp(jax.random.normal(ks[3], (b, t, h, d)) - 2.0)
+        u = jax.random.normal(ks[4], (h, d)) * 0.3
+        o_ref = rwkv_ops.wkv(r, k, v, wl, u, impl="ref")
+        o_pl = rwkv_ops.wkv(r, k, v, wl, u, impl="pallas_interpret")
+        np.testing.assert_allclose(np.asarray(o_pl), np.asarray(o_ref),
+                                   rtol=3e-4, atol=3e-4)
+
+    def test_strong_decay_stable(self):
+        """Extreme data-dependent decay must not overflow (log-space)."""
+        b, t, h, d = 1, 128, 2, 64
+        ks = jax.random.split(jax.random.PRNGKey(1), 4)
+        r = jax.random.normal(ks[0], (b, t, h, d))
+        k = jax.random.normal(ks[1], (b, t, h, d))
+        v = jax.random.normal(ks[2], (b, t, h, d))
+        wl = jnp.full((b, t, h, d), -7.0)      # decay ~ 1e-3 per step
+        u = jnp.zeros((h, d))
+        o_ref = rwkv_ops.wkv(r, k, v, wl, u, impl="ref")
+        o_pl = rwkv_ops.wkv(r, k, v, wl, u, impl="pallas_interpret")
+        assert bool(jnp.isfinite(o_pl).all())
+        np.testing.assert_allclose(np.asarray(o_pl), np.asarray(o_ref),
+                                   rtol=3e-4, atol=3e-4)
+
+    def test_chunk_invariance(self):
+        b, t, h, d = 1, 128, 2, 64
+        ks = jax.random.split(jax.random.PRNGKey(2), 4)
+        r = jax.random.normal(ks[0], (b, t, h, d)) * 0.3
+        k = jax.random.normal(ks[1], (b, t, h, d)) * 0.3
+        v = jax.random.normal(ks[2], (b, t, h, d)) * 0.3
+        wl = -jnp.exp(jax.random.normal(ks[3], (b, t, h, d)) - 2.0)
+        u = jnp.zeros((h, d))
+        o1 = rwkv_ops.wkv(r, k, v, wl, u, impl="pallas_interpret", chunk=32)
+        o2 = rwkv_ops.wkv(r, k, v, wl, u, impl="pallas_interpret", chunk=64)
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                                   rtol=1e-4, atol=1e-4)
+
+
+class TestMambaScan:
+    @pytest.mark.parametrize("b,t,di,ds", [
+        (1, 32, 64, 8), (2, 48, 128, 16), (1, 30, 96, 8),  # pad paths
+    ])
+    def test_matches_ref(self, b, t, di, ds):
+        from repro.kernels.mamba_scan import ops as ms_ops
+        ks = jax.random.split(jax.random.PRNGKey(0), 5)
+        x = jax.random.normal(ks[0], (b, t, di)) * 0.5
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, t, di)) - 1.0)
+        bm = jax.random.normal(ks[2], (b, t, ds)) * 0.5
+        cm = jax.random.normal(ks[3], (b, t, ds)) * 0.5
+        a = -jnp.exp(jax.random.normal(ks[4], (di, ds)) * 0.3)
+        y_ref = ms_ops.mamba_scan(x, dt, bm, cm, a, impl="ref")
+        y_pl = ms_ops.mamba_scan(x, dt, bm, cm, a,
+                                 impl="pallas_interpret", chunk=16)
+        np.testing.assert_allclose(np.asarray(y_pl), np.asarray(y_ref),
+                                   rtol=3e-4, atol=3e-4)
+
+    def test_chunk_invariance(self):
+        from repro.kernels.mamba_scan import ops as ms_ops
+        ks = jax.random.split(jax.random.PRNGKey(1), 5)
+        b, t, di, ds = 1, 64, 64, 8
+        x = jax.random.normal(ks[0], (b, t, di)) * 0.5
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, t, di)) - 1.0)
+        bm = jax.random.normal(ks[2], (b, t, ds)) * 0.5
+        cm = jax.random.normal(ks[3], (b, t, ds)) * 0.5
+        a = -jnp.exp(jax.random.normal(ks[4], (di, ds)) * 0.3)
+        y1 = ms_ops.mamba_scan(x, dt, bm, cm, a, impl="pallas_interpret",
+                               chunk=8)
+        y2 = ms_ops.mamba_scan(x, dt, bm, cm, a, impl="pallas_interpret",
+                               chunk=32)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                                   rtol=1e-4, atol=1e-4)

@@ -1,0 +1,136 @@
+"""Per-arch smoke tests (reduced configs) + decode/prefill consistency
++ MoE routing properties."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.configs.base import reduced
+from repro.models import moe as MoE
+from repro.models import transformer as TF
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_arch_smoke(arch, key):
+    """One forward + train-loss step on a reduced config of the same
+    family: output shapes + no NaNs (assignment requirement)."""
+    cfg = reduced(get_config(arch))
+    params = TF.init_params(key, cfg)
+    toks = jax.random.randint(key, (2, 32), 0, cfg.vocab_size)
+    logits, aux = TF.apply(params, toks, cfg)
+    assert logits.shape == (2, 32, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+    loss = TF.loss_fn(params, toks, toks, cfg)
+    assert bool(jnp.isfinite(loss))
+
+
+@pytest.mark.parametrize("arch", ["glm4-9b", "rwkv6-3b", "gemma3-12b",
+                                  "jamba-1.5-large-398b",
+                                  "granite-moe-1b-a400m"])
+def test_prefill_decode_matches_full_forward(arch, key):
+    """prefill(s) + decode_step == apply(s+1) — validates KV caches,
+    ring buffers, SSM states across all mixer families."""
+    cfg = reduced(get_config(arch))
+    params = TF.init_params(key, cfg)
+    s = 32
+    toks = jax.random.randint(key, (1, s + 1), 0, cfg.vocab_size)
+    full, _ = TF.apply(params, toks, cfg, dtype=jnp.float32)
+    _, cache = TF.prefill(params, toks[:, :s], cfg, dtype=jnp.float32)
+    step_logits, _ = TF.decode_step(params, cache, toks[:, s:s + 1],
+                                    jnp.int32(s), cfg, dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(step_logits[0]),
+                               np.asarray(full[0, s]), rtol=5e-3, atol=5e-3)
+
+
+def test_sliding_window_masks_old_tokens(key):
+    """A gemma3-family local layer must ignore tokens beyond the window."""
+    cfg = dataclasses.replace(reduced(get_config("gemma3-12b")),
+                              sliding_window=8, n_layers=6)
+    params = TF.init_params(key, cfg)
+    s = 24
+    toks = jax.random.randint(key, (1, s), 0, cfg.vocab_size)
+    base, _ = TF.apply(params, toks, cfg, dtype=jnp.float32)
+    # perturb a token far outside every window of the final positions
+    toks2 = toks.at[0, 0].set((toks[0, 0] + 7) % cfg.vocab_size)
+    pert, _ = TF.apply(params, toks2, cfg, dtype=jnp.float32)
+    # global layers still see token 0, so only check that LOCAL masking
+    # bounds the perturbation: nearby positions change, distant ones via
+    # global layers only.  With n_layers=6 (one global), effect at the
+    # last position is present but must be much smaller than at pos 1.
+    d_near = float(jnp.abs(pert[0, 1] - base[0, 1]).max())
+    d_far = float(jnp.abs(pert[0, -1] - base[0, -1]).max())
+    assert d_near > 0.0
+    assert d_far <= d_near * 2.0 + 1e-3
+
+
+class TestMoE:
+    def cfg(self):
+        return reduced(get_config("granite-moe-1b-a400m"))
+
+    def test_combine_weights_normalised(self, key):
+        cfg = self.cfg()
+        p = MoE.moe_init(key, cfg, dense_residual=False)
+        x = jax.random.normal(key, (2, 64, cfg.d_model))
+        out, aux = MoE.moe_apply(p, x, cfg)
+        assert out.shape == x.shape
+        assert bool(jnp.isfinite(out).all())
+        assert float(aux) >= 1.0 - 1e-3   # >= 1 by Cauchy-Schwarz-ish
+
+    def test_capacity_drops_are_graceful(self, key):
+        """With capacity 1.25 some tokens drop; output stays finite and
+        bounded."""
+        cfg = dataclasses.replace(self.cfg(), top_k=4)
+        p = MoE.moe_init(key, cfg, dense_residual=False)
+        x = jax.random.normal(key, (1, 128, cfg.d_model)) * 3.0
+        out, _ = MoE.moe_apply(p, x, cfg)
+        assert bool(jnp.isfinite(out).all())
+
+    def test_identical_tokens_identical_outputs(self, key):
+        """Permutation-ish property: identical token vectors that are
+        both admitted must produce identical outputs."""
+        cfg = self.cfg()
+        p = MoE.moe_init(key, cfg, dense_residual=False)
+        tok = jax.random.normal(key, (1, 1, cfg.d_model))
+        x = jnp.tile(tok, (1, 8, 1))
+        out, _ = MoE.moe_apply(p, x, cfg)
+        # all admitted copies agree with the first (dropped ones are 0)
+        norms = jnp.linalg.norm(out[0], axis=-1)
+        kept = norms > 1e-6
+        ref = out[0, jnp.argmax(kept)]
+        err = jnp.abs(out[0][kept] - ref).max()
+        assert float(err) < 1e-4
+
+    def test_dense_residual_path(self, key):
+        cfg = dataclasses.replace(self.cfg(), dense_residual=True)
+        p = MoE.moe_init(key, cfg, dense_residual=True)
+        assert "residual" in p
+        x = jax.random.normal(key, (1, 16, cfg.d_model))
+        out, _ = MoE.moe_apply(p, x, cfg)
+        assert bool(jnp.isfinite(out).all())
+
+
+def test_group_spec_covers_all_layers():
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        g = cfg.group_spec()
+        assert cfg.n_layers % len(g) == 0
+        mixers = {s.mixer for s in g}
+        if cfg.attn_every:
+            assert "mamba" in mixers and "attn" in mixers
+        if cfg.ssm_kind == "rwkv6":
+            assert mixers == {"rwkv6"}
+
+
+def test_param_count_matches_advertised():
+    expect = {"mistral-large-123b": 123e9, "glm4-9b": 9.4e9,
+              "qwen2.5-14b": 14.8e9, "gemma3-12b": 12.8e9,
+              "arctic-480b": 480e9, "granite-moe-1b-a400m": 1.3e9,
+              "rwkv6-3b": 3.8e9, "musicgen-large": 3.3e9,
+              "chameleon-34b": 34e9, "jamba-1.5-large-398b": 398e9}
+    for arch, n in expect.items():
+        got = get_config(arch).param_count()
+        assert abs(got - n) / n < 0.12, (arch, got, n)

@@ -1,0 +1,113 @@
+"""Optimizer tests: AdamW vs 8-bit AdamW convergence, quantisation
+properties, schedule shape."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim.adamw import adamw_init, adamw_update
+from repro.optim.adamw8bit import _dequant, _quant, adamw8_init, adamw8_update
+from repro.optim.schedules import warmup_cosine
+
+
+class TestQuant:
+    @given(st.integers(0, 10), st.floats(0.1, 100.0))
+    @settings(max_examples=20, deadline=None)
+    def test_roundtrip_relative_error(self, seed, scale):
+        x = jax.random.normal(jax.random.PRNGKey(seed), (8, 64)) * scale
+        d = _dequant(_quant(x, power=2.0), x.shape, x.size, power=2.0)
+        # power-2 code: x = s*r^2, so |dx| <= 2*sqrt(|x|*s)/127 + O(1/127^2)
+        err = jnp.abs(d - x)
+        s = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+        tol = 2.2 * jnp.sqrt(jnp.abs(x) * s) / 127.0 + 1.2 * s / 127.0 ** 2
+        assert bool((err <= tol).all())
+
+    def test_high_dynamic_range_survives(self):
+        """The failure mode of linear int8: tiny entries in a block with
+        a huge absmax must not quantise to zero."""
+        x = jnp.array([1e-4, 1e-2, 1.0, 100.0])
+        d = _dequant(_quant(x, power=4.0), x.shape, x.size, power=4.0)
+        assert float(d[0]) > 0, "small entry collapsed to zero"
+        np.testing.assert_allclose(np.asarray(d), np.asarray(x),
+                                   rtol=0.25)
+
+    def test_shapes_preserved(self):
+        """q keeps the parameter's shape (sharding-compatible)."""
+        x = jnp.zeros((3, 5, 7))
+        t = _quant(x)
+        assert t.q.shape == x.shape
+        assert t.scale.shape == (3, 5, 1)
+
+
+def test_adamw8_tracks_adamw():
+    ks = jax.random.split(jax.random.PRNGKey(0), 2)
+    p = {"w": jax.random.normal(ks[0], (64, 64)) * 0.1}
+    tgt = jax.random.normal(ks[1], (64, 64))
+
+    def loss(p):
+        return jnp.mean((p["w"] @ p["w"].T - tgt @ tgt.T) ** 2)
+
+    g = jax.grad(loss)
+    o32, o8 = adamw_init(p), adamw8_init(p)
+    p32 = p8 = p
+    for _ in range(50):
+        p32, o32 = adamw_update(g(p32), o32, p32, 1e-2)
+        p8, o8 = adamw8_update(g(p8), o8, p8, 1e-2)
+    l0, l32, l8 = float(loss(p)), float(loss(p32)), float(loss(p8))
+    assert l8 < 0.6 * l0, (l0, l8)           # converges
+    assert l8 < 1.5 * l32 + 0.05 * l0, (l32, l8)  # tracks fp32 AdamW
+
+
+def test_warmup_cosine_shape():
+    lr = [float(warmup_cosine(s, 1e-3, warmup=10, total=100))
+          for s in range(100)]
+    assert lr[0] < lr[9] <= 1e-3 + 1e-9
+    assert lr[50] < lr[10]
+    assert lr[99] >= 1e-4 - 1e-9   # floor
+
+
+class TestExecutionVariants:
+    """Hillclimb knobs must not change the math (within tolerance)."""
+
+    def test_online_attention_matches_einsum(self, key):
+        from repro.models.layers import sdpa_online, sdpa_ref
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (2, 128, 4, 64))
+        k = jax.random.normal(ks[1], (2, 128, 2, 64))
+        v = jax.random.normal(ks[2], (2, 128, 2, 64))
+        o1 = sdpa_ref(q, k, v, causal=True)
+        o2 = sdpa_online(q, k, v, causal=True, k_block=32)
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_bf16_scores_close(self, key):
+        import dataclasses
+        from repro.configs import get_config
+        from repro.configs.base import reduced
+        from repro.models import transformer as TF
+        cfg = reduced(get_config("glm4-9b"))
+        p = TF.init_params(key, cfg)
+        toks = jax.random.randint(key, (2, 32), 0, cfg.vocab_size)
+        lg32, _ = TF.apply(p, toks, cfg, dtype=jnp.float32)
+        lg16, _ = TF.apply(p, toks,
+                           dataclasses.replace(cfg, attn_dtype="bf16"),
+                           dtype=jnp.float32)
+        d = jnp.abs(jax.nn.softmax(lg32, -1) - jax.nn.softmax(lg16, -1))
+        assert float(d.max()) < 5e-3
+
+    def test_mamba_unroll_identical(self, key):
+        import dataclasses
+        from repro.configs import get_config
+        from repro.configs.base import reduced
+        from repro.models import transformer as TF
+        cfg = reduced(get_config("jamba-1.5-large-398b"))
+        p = TF.init_params(key, cfg)
+        toks = jax.random.randint(key, (1, 32), 0, cfg.vocab_size)
+        lg1, _ = TF.apply(p, toks, cfg, dtype=jnp.float32)
+        lg2, _ = TF.apply(p, toks,
+                          dataclasses.replace(cfg, mamba_unroll=8),
+                          dtype=jnp.float32)
+        np.testing.assert_allclose(np.asarray(lg1), np.asarray(lg2),
+                                   rtol=1e-5, atol=1e-5)

@@ -1,0 +1,170 @@
+"""Runtime tests: DRAM simulator, perf model, straggler mitigation,
+compression, checkpoint/fault-tolerance, data pipeline."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dram_sim
+from repro.core.timing import ALDRAM_55C_EVAL, DDR3_1600, TimingParams
+
+
+class TestDramSim:
+    def trace(self, row_hit=0.6, n=2048, seed=0):
+        return dram_sim.synth_trace(jax.random.PRNGKey(seed), n,
+                                    row_hit=row_hit)
+
+    def test_hits_faster_than_conflicts(self):
+        hi = dram_sim.simulate(self.trace(row_hit=0.95), DDR3_1600)
+        lo = dram_sim.simulate(self.trace(row_hit=0.05), DDR3_1600)
+        assert float(hi["mean_latency_ns"]) < float(lo["mean_latency_ns"])
+
+    def test_aldram_timings_reduce_latency(self):
+        t = self.trace()
+        std = dram_sim.simulate(t, DDR3_1600)
+        fast = dram_sim.simulate(t, ALDRAM_55C_EVAL)
+        assert float(fast["mean_latency_ns"]) < float(std["mean_latency_ns"])
+
+    @given(st.sampled_from(["trcd", "tras", "twr", "trp"]),
+           st.floats(0.5, 0.95))
+    @settings(max_examples=12, deadline=None)
+    def test_monotone_in_each_parameter(self, param, f):
+        import dataclasses
+        t = self.trace(n=1024)
+        fast = dataclasses.replace(DDR3_1600,
+                                   **{param: getattr(DDR3_1600, param) * f})
+        l_std = float(dram_sim.simulate(t, DDR3_1600)["mean_latency_ns"])
+        l_fast = float(dram_sim.simulate(t, fast)["mean_latency_ns"])
+        assert l_fast <= l_std + 1e-6
+
+
+class TestPerfModel:
+    def test_fig4_shape(self):
+        from repro.core import perf_model
+        res = perf_model.evaluate(n=2048)
+        s = res["summary"]
+        assert s["multi_intensive_gmean"] > s["multi_nonintensive_gmean"]
+        assert s["multi_intensive_gmean"] > s["single_intensive_gmean"]
+        assert 0.0 < s["multi_all_gmean"] < 0.5
+
+
+class TestStraggler:
+    def test_adaptive_beats_static(self):
+        from repro.runtime.straggler import simulate
+        res = simulate(n_nodes=24, warmup=150, steps=150)
+        assert res["adaptive"]["recall"] >= res["static"]["recall"]
+        assert (res["adaptive"]["detect_excess_ms"]
+                <= res["static"]["detect_excess_ms"] + 1e-9)
+        assert res["adaptive"]["fp"] <= 0.02 * 24 * 150
+
+
+class TestCompression:
+    @given(st.integers(0, 5))
+    @settings(max_examples=5, deadline=None)
+    def test_error_feedback_invariant(self, seed):
+        from repro.runtime.compression import topk_compress, topk_init
+        g = {"a": jax.random.normal(jax.random.PRNGKey(seed), (128,)),
+             "b": jax.random.normal(jax.random.PRNGKey(seed + 9), (32, 8))}
+        st_ = topk_init(g)
+        sent, st2 = topk_compress(g, st_, ratio=0.1)
+        # sent + residual == original (+ previous residual of zero)
+        for k in g:
+            np.testing.assert_allclose(
+                np.asarray(sent[k] + st2.residual[k]), np.asarray(g[k]),
+                rtol=1e-6, atol=1e-6)
+
+    def test_topk_wire_savings(self):
+        from repro.runtime.compression import topk_wire_bytes
+        g = {"w": jnp.zeros((1024, 1024))}
+        assert topk_wire_bytes(g, 0.01) < 0.02 * 4 * 1024 * 1024
+
+    @given(st.integers(0, 5))
+    @settings(max_examples=5, deadline=None)
+    def test_int8_roundtrip_bound(self, seed):
+        from repro.runtime.compression import (int8_compress,
+                                               int8_decompress,
+                                               int8_error_bound)
+        g = {"w": jax.random.normal(jax.random.PRNGKey(seed), (500,)) * 3}
+        dec = int8_decompress(int8_compress(g))
+        bound = int8_error_bound(g["w"])
+        assert float(jnp.abs(dec["w"] - g["w"]).max()) <= bound + 1e-6
+
+
+class TestCheckpoint:
+    def test_roundtrip_and_atomicity(self, tmp_path, key):
+        from repro.checkpoint import load_checkpoint, save_checkpoint
+        tree = {"w": jax.random.normal(key, (8, 8)),
+                "nested": {"b": jnp.arange(5, dtype=jnp.int32)}}
+        save_checkpoint(str(tmp_path), 3, tree)
+        # a partial (uncommitted) newer step must be ignored
+        os.makedirs(tmp_path / "step_00000007")
+        restored, step = load_checkpoint(str(tmp_path), tree)
+        assert step == 3
+        np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                      np.asarray(tree["w"]))
+        np.testing.assert_array_equal(np.asarray(restored["nested"]["b"]),
+                                      np.asarray(tree["nested"]["b"]))
+
+    def test_fault_tolerant_loop_replays_to_same_state(self, tmp_path):
+        """A failing run must converge to the exact state of an
+        uninterrupted run (deterministic data + steps)."""
+        from repro.checkpoint import CheckpointManager
+        from repro.runtime.fault import FaultTolerantLoop
+
+        def step_fn(state, batch):
+            return {"x": state["x"] + batch}
+
+        def batches(i):
+            return jnp.float32(i + 1)
+
+        clean = {"x": jnp.float32(0)}
+        for i in range(12):
+            clean = step_fn(clean, batches(i))
+
+        loop = FaultTolerantLoop(
+            step_fn, {"x": jnp.float32(0)},
+            CheckpointManager(str(tmp_path), every=4),
+            failure_schedule={6, 10})
+        state, stats = loop.run(batches, 12)
+        assert stats["restarts"] == 2
+        assert float(state["x"]) == float(clean["x"])
+
+
+class TestElastic:
+    def test_plan_mesh(self):
+        from repro.runtime.elastic import plan_mesh
+        axes, shape = plan_mesh(256, model_parallel=16)
+        assert shape == (16, 16)
+        axes, shape = plan_mesh(240, model_parallel=16)
+        assert shape == (15, 16)
+        axes, shape = plan_mesh(512, model_parallel=16, pod_size=256)
+        assert axes == ("pod", "data", "model") and shape == (2, 16, 16)
+        # one dead node in one pod: drop to a single full pod
+        axes, shape = plan_mesh(511, model_parallel=16, pod_size=256)
+        assert shape[0] * (shape[1] if len(shape) == 2 else
+                           shape[1] * shape[2]) <= 511
+
+
+class TestPipeline:
+    def test_deterministic_batches(self):
+        from repro.data.pipeline import SyntheticLM
+        d1 = SyntheticLM(100, 16, 4, seed=1).batch_at(7)
+        d2 = SyntheticLM(100, 16, 4, seed=1).batch_at(7)
+        np.testing.assert_array_equal(d1["tokens"], d2["tokens"])
+        # next-token alignment
+        np.testing.assert_array_equal(d1["tokens"][:, 1:],
+                                      d1["targets"][:, :-1])
+
+    def test_adaptive_prefetcher_bounds_depth(self):
+        from repro.data.pipeline import AdaptivePrefetcher, SyntheticLM
+        pf = AdaptivePrefetcher(iter(SyntheticLM(100, 8, 2)),
+                                static_depth=16, step_time_s=0.001)
+        for _ in range(80):
+            pf.get()
+        pf.refit()
+        assert 1 <= pf.depth <= 16
+        pf.stop()
