@@ -10,6 +10,9 @@ import numpy as np
 
 from benchmarks.common import emit, population, profiler, timed
 from repro.core import timing as T
+from repro.core.sweep import Op
+
+TEMPS = (85.0, 55.0)
 
 
 def run(fast: bool = False) -> dict:
@@ -17,20 +20,21 @@ def run(fast: bool = False) -> dict:
     prof = profiler(fast)
     out = {}
     with timed() as t:
-        rp = {op: prof.refresh_profile(pop, 85.0, op)
-              for op in ("read", "write")}
-        med = int(np.argsort(rp["read"].per_module)
-                  [pop.n_modules // 2])
-        for op, base in (("read", T.DDR3_1600.read_sum()),
-                         ("write", T.DDR3_1600.write_sum())):
-            for temp in (85.0, 55.0):
-                tp = prof.timing_profile(pop, temp, op, rp[op].safe)
-                red = 1 - tp.latency_sum[med] / base
-                n_pass = int(tp.pass_per_module[med].sum())
-                out[f"{op}_{int(temp)}"] = {
+        rp_read, rp_write = prof.refresh_campaign(pop, 85.0)
+        med = int(np.argsort(rp_read.per_module)[pop.n_modules // 2])
+        # the whole (op x temperature) campaign is ONE fused dispatch
+        res = prof.engine.sweep(pop,
+                                prof.campaign_spec(TEMPS, rp_read, rp_write))
+        for op, base in ((Op.READ, T.DDR3_1600.read_sum()),
+                         (Op.WRITE, T.DDR3_1600.write_sum())):
+            k = res.index(op)
+            for ti, temp in enumerate(TEMPS):
+                red = 1 - res.latency_sum[k][med, ti] / base
+                n_pass = int(res.ok[k][med, ti].sum())
+                out[f"{op.value}_{int(temp)}"] = {
                     "latency_reduction": float(red),
                     "passing_combos": n_pass,
-                    "chosen": tp.combos[med, :4].tolist(),
+                    "chosen": res.chosen[k][med, ti, :4].tolist(),
                 }
     emit("fig2bc_timing_combos", t.us,
          "read 85/55C={:.0%}/{:.0%}(paper 24/36%)|write={:.0%}/{:.0%}"

@@ -11,6 +11,9 @@ Paper targets:
 from __future__ import annotations
 
 from benchmarks.common import emit, population, profiler, timed
+from repro.core.sweep import Op
+
+TEMPS = (85.0, 55.0)
 
 
 def run(fast: bool = False) -> dict:
@@ -18,20 +21,22 @@ def run(fast: bool = False) -> dict:
     prof = profiler(fast)
     out: dict = {}
     with timed() as t:
-        rp = {op: prof.refresh_profile(pop, 85.0, op)
-              for op in ("read", "write")}
+        # the 115-module campaign: one refresh dispatch (both ops), one
+        # fused (85C, 55C) x (read, write) timing dispatch
+        rp_read, rp_write = prof.refresh_campaign(pop, 85.0)
         out["refresh"] = {
-            "read_min_ms": float(rp["read"].per_module.min()),
-            "read_median_ms": float(sorted(rp["read"].per_module)
+            "read_min_ms": float(rp_read.per_module.min()),
+            "read_median_ms": float(sorted(rp_read.per_module)
                                     [pop.n_modules // 2]),
-            "write_median_ms": float(sorted(rp["write"].per_module)
+            "write_median_ms": float(sorted(rp_write.per_module)
                                      [pop.n_modules // 2]),
         }
-        for temp in (85.0, 55.0):
-            tp_r = prof.timing_profile(pop, temp, "read", rp["read"].safe)
-            tp_w = prof.timing_profile(pop, temp, "write", rp["write"].safe)
-            red_r = prof.reductions(tp_r, "read")
-            red_w = prof.reductions(tp_w, "write")
+        res = prof.engine.sweep(pop,
+                                prof.campaign_spec(TEMPS, rp_read, rp_write))
+        all_r = res.reductions(Op.READ)
+        all_w = res.reductions(Op.WRITE)
+        for ti, temp in enumerate(TEMPS):
+            red_r, red_w = all_r[ti], all_w[ti]
             out[f"t{int(temp)}"] = {
                 "read_sum": red_r["latency_sum"],
                 "write_sum": red_w["latency_sum"],

@@ -8,27 +8,25 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import emit, population, profiler, timed
-from repro.core import timing as T
+from repro.core.sweep import Op, SweepSpec
 
 
 def run(fast: bool = False) -> dict:
     pop = population(fast)
     prof = profiler(fast)
     with timed() as t:
-        rp = prof.refresh_profile(pop, 85.0, "read")
-        tp = prof.timing_profile(pop, 55.0, "read", rp.safe)
-        combos = T.read_combo_grid(prof.std, prof.grid_step)
-        ok = tp.pass_per_module        # [modules, combos]
+        rp_read, _ = prof.refresh_campaign(pop, 85.0)
+        combos = prof.combo_grid(Op.READ)
+        res = prof.engine.sweep(pop, SweepSpec.single(
+            Op.READ, combos, (55.0,), rp_read.safe))
+        ok = res.ok[0][:, 0, :]        # [modules, combos]
         frontier = {}
         for trp in sorted(set(combos[:, 3])):
             sel = combos[:, 3] == trp
-            # min passing tRAS at this tRP (median module); skip tRP
-            # levels that fail outright for most modules
-            tras_min = []
-            for m in range(pop.n_modules):
-                passing = combos[sel][ok[m][sel]]
-                tras_min.append(passing[:, 1].min() if len(passing)
-                                else np.nan)
+            # min passing tRAS at this tRP per module (vectorised over
+            # modules); skip tRP levels that fail for most modules
+            tras = np.where(ok[:, sel], combos[sel, 1][None, :], np.inf)
+            tras_min = np.where(ok[:, sel].any(1), tras.min(1), np.nan)
             if np.isnan(tras_min).mean() < 0.5:
                 frontier[float(trp)] = float(np.nanmedian(tras_min))
     trps = sorted(frontier)

@@ -9,29 +9,26 @@ and measure the fraction of failing cells that fail in >= 9/10 repeats.
 
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, population, timed
 from repro.core import timing as T
 from repro.core.calibration import CALIBRATED_CONSTANTS
-from repro.kernels.charge_sim import ops
+from repro.core.sweep import MarginEngine
 
 MARGIN_NOISE = 0.02      # operational noise, in margin units
 
 
 def run(fast: bool = False, repeats: int = 10) -> dict:
     pop = population(fast)
-    cells = jnp.asarray(pop.flat_cells())
+    eng = MarginEngine(constants=CALIBRATED_CONSTANTS, impl="ref")
     # a deliberately aggressive combo so a fraction of cells fail
     combo = np.asarray(T.DDR3_1600.as_array())[None, :].copy()
     combo[0, :4] *= [0.7, 0.45, 0.40, 0.60]
     combo[0, 4] = 256.0     # stress the retention margin too
     with timed() as t:
-        r, w = ops.combo_margins(cells, jnp.asarray(combo), 55.0,
-                                 CALIBRATED_CONSTANTS, impl="ref")
-        margin = np.asarray(jnp.minimum(r, w))[:, 0]
+        r, w = eng.margins(pop.flat_cells(), combo, temp_c=55.0)
+        margin = np.minimum(r, w)[:, 0]
         rng = np.random.default_rng(0)
         fails = np.stack([
             (margin + rng.normal(0, MARGIN_NOISE, margin.shape)) < 0

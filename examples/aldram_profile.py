@@ -8,6 +8,11 @@ speedup (Fig. 4).
 
 import argparse
 import json
+import os
+import sys
+
+# the benchmark modules live at the repo root, not next to this script
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 
 def main():

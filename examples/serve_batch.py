@@ -37,9 +37,13 @@ def main():
     while engine.waiting or any(engine.active):
         engine.step()
         ticks += 1
-    for r in reqs:
+    # long-running step() loops must drain periodically so retired
+    # requests do not accumulate in the engine
+    done = {r.rid: r for r in engine.drain_retired()}
+    for rid in sorted(done):
+        r = done[rid]
         print(f"req {r.rid}: prompt[{len(r.prompt)}] -> {r.out}")
-    print(f"served {len(reqs)} requests in {ticks} engine ticks "
+    print(f"served {len(done)} requests in {ticks} engine ticks "
           f"(batched decode, {engine.slots} slots)")
 
 

@@ -1,3 +1,10 @@
 # The paper's primary contribution — implement the SYSTEM here
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
+
+# The profiling campaign's public surface: declarative sweeps compiled
+# into single batched kernel dispatches.
+from repro.core.sweep import (MarginEngine, Op, OpSweep, SweepResult,
+                              SweepSpec)
+
+__all__ = ["MarginEngine", "Op", "OpSweep", "SweepResult", "SweepSpec"]

@@ -10,6 +10,12 @@ temperature, with the profiling guardband included.
 
 No DRAM-chip or interface changes: this is exactly the multiple-
 timing-register scheme the paper proposes for the memory controller.
+
+Profiling is fully batched through `repro.core.sweep.MarginEngine`:
+`profile()` is one refresh campaign plus ONE fused
+(temperature bins x read/write) timing campaign, and `verify()` is ONE
+dispatch over every (module, bin) pair — no per-bin or per-module
+Python-loop kernel calls anywhere.
 """
 
 from __future__ import annotations
@@ -19,8 +25,8 @@ import dataclasses
 import numpy as np
 
 from repro.core import timing as T
-from repro.core.charge import ChargeConstants
 from repro.core.profiler import Profiler
+from repro.core.sweep import Op, param_reductions
 from repro.core.variation import Population
 
 DEFAULT_TEMP_BINS = (45.0, 55.0, 65.0, 75.0, 85.0)
@@ -53,26 +59,28 @@ class ALDRAMController:
     def __init__(self, profiler: Profiler | None = None,
                  temp_bins: tuple[float, ...] = DEFAULT_TEMP_BINS):
         self.profiler = profiler or Profiler()
+        self.engine = self.profiler.engine
         self.temp_bins = temp_bins
         self.table: TimingTable | None = None
 
     # ------------------------------------------------------------ profile
     def profile(self, pop: Population) -> TimingTable:
+        """Build the full (module x bin) table from one refresh campaign
+        and ONE fused multi-temperature, read+write timing campaign."""
         prof = self.profiler
-        rp_read = prof.refresh_profile(pop, 85.0, "read")
-        rp_write = prof.refresh_profile(pop, 85.0, "write")
+        rp_read, rp_write = prof.refresh_campaign(pop, 85.0)
+        res = self.engine.sweep(
+            pop, prof.campaign_spec(self.temp_bins, rp_read, rp_write))
+        cr = res.chosen[res.index(Op.READ)]      # [modules, bins, 5]
+        cw = res.chosen[res.index(Op.WRITE)]
 
-        n = pop.n_modules
-        params = np.zeros((n, len(self.temp_bins), 4), np.float32)
-        for bi, temp in enumerate(self.temp_bins):
-            tp_r = prof.timing_profile(pop, temp, "read", rp_read.safe)
-            tp_w = prof.timing_profile(pop, temp, "write", rp_write.safe)
-            # one register set must satisfy both tests: take the safer
-            # (larger) of the read/write choices per parameter
-            params[:, bi, 0] = np.maximum(tp_r.combos[:, 0], tp_w.combos[:, 0])
-            params[:, bi, 1] = tp_r.combos[:, 1]          # tRAS: read test
-            params[:, bi, 2] = tp_w.combos[:, 2]          # tWR: write test
-            params[:, bi, 3] = np.maximum(tp_r.combos[:, 3], tp_w.combos[:, 3])
+        # one register set must satisfy both tests: take the safer
+        # (larger) of the read/write choices per parameter
+        params = np.empty(cr.shape[:2] + (4,), np.float32)
+        params[..., 0] = np.maximum(cr[..., 0], cw[..., 0])
+        params[..., 1] = cr[..., 1]              # tRAS: read test
+        params[..., 2] = cw[..., 2]              # tWR: write test
+        params[..., 3] = np.maximum(cr[..., 3], cw[..., 3])
         self.table = TimingTable(self.temp_bins, params,
                                  rp_read.safe, rp_write.safe)
         return self.table
@@ -83,44 +91,63 @@ class ALDRAMController:
         return self.table.lookup(module, temp_c)
 
     # -------------------------------------------------------------- verify
-    def verify(self, pop: Population, n_temps: int = 3) -> bool:
+    def verify(self, pop: Population) -> bool:
         """The zero-error invariant (the paper's 33-day stress test,
         Sec. 6): for every module and every bin, the selected timings
         must be error-free at the bin's max temperature with the safe
-        refresh interval.  Returns True iff no margin is negative."""
-        assert self.table is not None
-        import jax.numpy as jnp
-        from repro.kernels.charge_sim import ops as charge_ops
+        refresh interval.  Returns True iff no margin is negative.
 
+        ONE vectorised dispatch: every (module, bin) table row becomes a
+        combo column with its bin temperature, the per-module safe
+        refresh intervals ride in the per-cell read/write overrides, and
+        the module-diagonal of the resulting grid is reduced host-side.
+
+        The dense grid pairs every module's cells with every module's
+        combos, so only its module-diagonal is useful; for very large
+        populations the check is chunked into module groups that keep
+        each dispatch under `max_grid_elems` (still no per-module
+        Python-loop kernel calls — group count grows like sqrt of the
+        excess, and the small/tested sizes stay a single dispatch).
+        """
+        assert self.table is not None
         tbl = self.table
-        for bi, temp in enumerate(tbl.temp_bins):
-            for m in range(pop.n_modules):
-                p = tbl.params[m, bi]
-                combo_r = np.array([[p[0], p[1], p[2], p[3],
-                                     tbl.safe_trefi_read[m]]], np.float32)
-                combo_w = combo_r.copy()
-                combo_w[0, 4] = tbl.safe_trefi_write[m]
-                cells = jnp.asarray(pop.module(m))
-                r, _ = charge_ops.combo_margins(
-                    cells, jnp.asarray(combo_r), temp,
-                    self.profiler.constants, impl=self.profiler.impl)
-                _, w = charge_ops.combo_margins(
-                    cells, jnp.asarray(combo_w), temp,
-                    self.profiler.constants, impl=self.profiler.impl)
-                if float(np.asarray(r).min()) < 0 or float(np.asarray(w).min()) < 0:
-                    return False
+        m, b = tbl.params.shape[:2]
+        cpm = int(np.prod(pop.cells.shape[1:4]))     # cells per module
+        max_grid_elems = 8_000_000
+        g = max(1, min(m, int((max_grid_elems / (cpm * b)) ** 0.5)))
+
+        cells = np.asarray(pop.flat_cells()).reshape(m, cpm, -1)
+        trefi_r = tbl.safe_trefi_read.astype(np.float32)
+        trefi_w = tbl.safe_trefi_write.astype(np.float32)
+        temps_bins = np.asarray(tbl.temp_bins, np.float32)
+
+        for lo in range(0, m, g):
+            sl = slice(lo, min(lo + g, m))
+            n = sl.stop - sl.start
+            combos = np.empty((n * b, 5), np.float32)
+            combos[:, :4] = tbl.params[sl].reshape(n * b, 4)
+            combos[:, 4] = T.STANDARD_TREFI_MS       # overridden per cell
+            read_m, write_m = self.engine.margins(
+                cells[sl].reshape(n * cpm, -1), combos,
+                temps_combo=np.tile(temps_bins, n),
+                trefi_read=np.repeat(trefi_r[sl], cpm),
+                trefi_write=np.repeat(trefi_w[sl], cpm))
+            mi = np.arange(n)
+            # [mods, cpm, mods, bins] -> module-diagonal [mods, cpm, bins]
+            r = read_m.reshape(n, cpm, n, b)[mi, :, mi, :]
+            w = write_m.reshape(n, cpm, n, b)[mi, :, mi, :]
+            if r.min() < 0.0 or w.min() < 0.0:
+                return False
         return True
 
     # ----------------------------------------------------------- reporting
     def average_reductions(self, temp_c: float,
                            std: T.TimingParams = T.DDR3_1600) -> dict:
         assert self.table is not None
-        bi = next(i for i, b in enumerate(self.table.temp_bins)
-                  if temp_c <= b)
-        p = self.table.params[:, bi, :]
-        return {
-            "trcd": float(1 - (p[:, 0] / std.trcd).mean()),
-            "tras": float(1 - (p[:, 1] / std.tras).mean()),
-            "twr": float(1 - (p[:, 2] / std.twr).mean()),
-            "trp": float(1 - (p[:, 3] / std.trp).mean()),
-        }
+        bi = next((i for i, b in enumerate(self.table.temp_bins)
+                   if temp_c <= b), None)
+        if bi is None:
+            # above the hottest profiled bin the controller falls back
+            # to standard timings (TimingTable.lookup): 0% reductions
+            return {k: 0.0 for k in ("trcd", "tras", "twr", "trp")}
+        return param_reductions(self.table.params[:, bi, :], std)

@@ -38,14 +38,22 @@ class AdaptiveTable:
 
     # ------------------------------------------------------------ profile
     def _bin(self, condition: float) -> int:
+        """Smallest profiled bin >= condition; one past the end when the
+        condition exceeds every bin (so `select` falls back to the
+        static worst case, like the controller above its hottest bin)."""
         for i, b in enumerate(self.condition_bins):
             if condition <= b:
                 return i
-        return len(self.condition_bins) - 1
+        return len(self.condition_bins)
 
     def observe(self, unit: int, condition: float, value: float):
-        self._samples.setdefault((unit, self._bin(condition)), []).append(
-            float(value))
+        b = self._bin(condition)
+        if b >= len(self.condition_bins):
+            # beyond the profiled range `select` always answers with the
+            # static worst case; fitting such samples would only build
+            # unreachable table entries
+            return
+        self._samples.setdefault((unit, b), []).append(float(value))
 
     def fit(self, min_samples: int = 16):
         """Build the guardbanded table from observations."""
@@ -60,6 +68,26 @@ class AdaptiveTable:
             else:
                 self._table[key] = max(guard, self.static_worst_case)
         return self
+
+    @classmethod
+    def from_sweep(cls, result, op, static_worst_case: float
+                   ) -> "AdaptiveTable":
+        """Build a table directly from a `MarginEngine` campaign: the
+        chosen per-module latency sums of a `SweepResult` become the
+        per-unit, per-condition-bin entries (condition = temperature
+        bin), with the standard-timing latency sum as the static worst
+        case.  The profiling guardband is already inside the sweep's
+        combo selection, so no extra quantile/sigma margin is applied.
+        """
+        t = cls(condition_bins=tuple(result.temps),
+                static_worst_case=float(static_worst_case),
+                higher_is_safer=True)
+        sums = result.latency_sum[result.index(op)]    # [units, bins]
+        for u in range(sums.shape[0]):
+            for b in range(sums.shape[1]):
+                t._table[(u, b)] = min(float(sums[u, b]),
+                                       t.static_worst_case)
+        return t
 
     # ------------------------------------------------------------- select
     def select(self, unit: int, condition: float) -> float:

@@ -105,8 +105,11 @@ _SEARCH_FIELDS = [
 def evaluate(constants: ChargeConstants, variation: VariationConfig,
              seed: int = 0, fast: bool = True) -> dict[str, float]:
     """Run the full profiling procedure on a simulated population and
-    return the paper-comparable statistics."""
+    return the paper-comparable statistics.  The whole campaign is two
+    `MarginEngine` dispatches: one refresh sweep (both ops), one fused
+    (55C, 85C) x (read, write) timing sweep."""
     from repro.core.profiler import Profiler
+    from repro.core.sweep import Op
 
     if fast:
         # reduced population but the FULL 1.25ns sweep grid: combo
@@ -117,24 +120,24 @@ def evaluate(constants: ChargeConstants, variation: VariationConfig,
     prof = Profiler(constants=constants, grid_step=T.TIMING_STEP_NS)
 
     stats: dict[str, float] = {}
-    rp_read = prof.refresh_profile(pop, 85.0, "read")
-    rp_write = prof.refresh_profile(pop, 85.0, "write")
+    rp_read, rp_write = prof.refresh_campaign(pop, 85.0)
     stats["refresh_read_median_85"] = float(np.median(rp_read.per_module))
     stats["refresh_write_median_85"] = float(np.median(rp_write.per_module))
     stats["refresh_read_min_85"] = float(rp_read.per_module.min())
     stats["refresh_read_max_bank_85"] = float(rp_read.per_bank.max())
 
-    for temp, tag in ((55.0, "red55"), (85.0, "red85")):
-        tp_r = prof.timing_profile(pop, temp, "read", rp_read.safe)
-        tp_w = prof.timing_profile(pop, temp, "write", rp_write.safe)
-        r_red = prof.reductions(tp_r, "read")
-        w_red = prof.reductions(tp_w, "write")
-        stats[f"{tag}_trcd"] = r_red["trcd"]
-        stats[f"{tag}_tras"] = r_red["tras"]
-        stats[f"{tag}_trp"] = r_red["trp"]
-        stats[f"{tag}_twr"] = w_red["twr"]
-        stats[f"{tag}_read_sum"] = r_red["latency_sum"]
-        stats[f"{tag}_write_sum"] = w_red["latency_sum"]
+    temps = ((55.0, "red55"), (85.0, "red85"))
+    res = prof.engine.sweep(pop, prof.campaign_spec(
+        tuple(t for t, _ in temps), rp_read, rp_write))
+    red_r = res.reductions(Op.READ)
+    red_w = res.reductions(Op.WRITE)
+    for ti, (_, tag) in enumerate(temps):
+        stats[f"{tag}_trcd"] = red_r[ti]["trcd"]
+        stats[f"{tag}_tras"] = red_r[ti]["tras"]
+        stats[f"{tag}_trp"] = red_r[ti]["trp"]
+        stats[f"{tag}_twr"] = red_w[ti]["twr"]
+        stats[f"{tag}_read_sum"] = red_r[ti]["latency_sum"]
+        stats[f"{tag}_write_sum"] = red_w[ti]["latency_sum"]
     return stats
 
 

@@ -243,14 +243,48 @@ def write_margin(cell: CellParams, combo: jnp.ndarray, temp_c: jnp.ndarray,
     return jnp.minimum(jnp.minimum(m_sense, m_rcd), m_floor)
 
 
+def margin_sweep(cell_stack: jnp.ndarray, combos: jnp.ndarray,
+                 temps_combo: jnp.ndarray,
+                 c: ChargeConstants = DEFAULT_CONSTANTS,
+                 trefi_read_cells: jnp.ndarray | None = None,
+                 trefi_write_cells: jnp.ndarray | None = None
+                 ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Dense (cells x combos) margin grids with a *per-combo* temperature.
+
+    This is the fused form of the profiling campaign: because every map
+    is elementwise over the [n_cells, n_combos] grid, the temperature is
+    just another combo column — a multi-temperature, multi-operation
+    sweep is ONE evaluation of this function (ONE kernel dispatch on
+    TPU) instead of one dispatch per (temperature, op) pair.
+
+    cell_stack: [n_cells, 5] stacked CellParams
+    combos:     [n_combos, 5]  (trcd, tras, twr, trp, trefi_ms)
+    temps_combo: [n_combos] per-combo test temperature (C)
+    trefi_read_cells / trefi_write_cells: optional [n_cells] per-cell
+        refresh-interval overrides, applied to the read / write test
+        respectively (folds per-module, per-op safe refresh intervals
+        into the same dispatch)
+    returns (read_margins, write_margins): each [n_cells, n_combos]
+    """
+    cell = CellParams.unstack(cell_stack[:, None, :])       # [n, 1, 5]
+    cm = combos[None, :, :]                                  # [1, m, 5]
+    t = temps_combo.astype(cell_stack.dtype)[None, :]        # [1, m]
+    tr = None if trefi_read_cells is None else trefi_read_cells[:, None]
+    tw = None if trefi_write_cells is None else trefi_write_cells[:, None]
+    return (read_margin(cell, cm, t, c, tr),
+            write_margin(cell, cm, t, c, tw))
+
+
 def combo_margins(cell_stack: jnp.ndarray, combos: jnp.ndarray,
                   temp_c: float,
                   c: ChargeConstants = DEFAULT_CONSTANTS,
                   trefi_cells: jnp.ndarray | None = None
                   ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Dense (cells x combos) margin grids for read and write tests.
+    """Dense (cells x combos) margin grids for read and write tests at a
+    single temperature — the scalar-temperature special case of
+    `margin_sweep` (kept for single-condition callers and tests).
 
-    cell_stack: [n_cells, 4] stacked CellParams
+    cell_stack: [n_cells, 5] stacked CellParams
     combos:     [n_combos, 5]
     trefi_cells: optional [n_cells] per-cell refresh interval override
         (used to fold per-module safe refresh intervals into one batched
@@ -260,12 +294,9 @@ def combo_margins(cell_stack: jnp.ndarray, combos: jnp.ndarray,
     This is the profiler's hot spot (the FPGA campaign, Sec. 5) and the
     compute the Pallas kernel `charge_sim` implements.
     """
-    cell = CellParams.unstack(cell_stack[:, None, :])       # [n, 1, 4]
-    cm = combos[None, :, :]                                  # [1, m, 5]
-    t = jnp.asarray(temp_c, dtype=cell_stack.dtype)
-    trefi = None if trefi_cells is None else trefi_cells[:, None]
-    return (read_margin(cell, cm, t, c, trefi),
-            write_margin(cell, cm, t, c, trefi))
+    temps = jnp.full((combos.shape[0],), temp_c, dtype=cell_stack.dtype)
+    return margin_sweep(cell_stack, combos, temps, c,
+                        trefi_cells, trefi_cells)
 
 
 def refresh_margin(cell_stack: jnp.ndarray, trefi_ms: jnp.ndarray,

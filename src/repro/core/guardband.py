@@ -27,14 +27,13 @@ def reference_margin(constants: ChargeConstants,
                      quantile: float = 4.0) -> float:
     """Margin of a `quantile`-sigma compound worst-case cell at 85C
     under standard JEDEC timings."""
-    from repro.kernels.charge_sim import ops as charge_ops
-    import jax.numpy as jnp
+    from repro.core.sweep import MarginEngine
 
+    eng = MarginEngine(constants=constants, std=std, impl="ref")
     wc = worst_case_reference(quantile=quantile)
     combo = np.asarray(std.as_array())[None, :]
-    r, w = charge_ops.combo_margins(jnp.asarray(wc), jnp.asarray(combo),
-                                    85.0, constants, impl="ref")
-    return float(min(np.asarray(r).min(), np.asarray(w).min()))
+    r, w = eng.margins(wc, combo, temp_c=85.0)
+    return float(min(r.min(), w.min()))
 
 
 def design_quantile(constants: ChargeConstants,

@@ -11,10 +11,13 @@ Given a (simulated) module population, the profiler:
   4. selects, per module, the acceptable combo (minimum latency sum,
      min-tRCD tie-break) -> per-parameter reductions.
 
-Everything is vectorised: cells x combos margin grids come from
-`repro.kernels.charge_sim` (Pallas on TPU; jnp reference on CPU); the
-per-module safe refresh interval is folded into the cell side so the
-whole 115-module campaign is ONE batched sweep.
+Everything is batched through `repro.core.sweep.MarginEngine`: a
+refresh campaign (both ops) is ONE kernel dispatch, and a
+multi-temperature timing campaign over both ops is ONE dispatch — the
+whole 115-module characterization costs O(1) launches.  The
+`refresh_profile` / `timing_profile` methods are thin shims over the
+engine kept for single-condition callers; multi-condition campaigns
+should build a `SweepSpec` and call `Profiler.engine.sweep` directly.
 """
 
 from __future__ import annotations
@@ -22,11 +25,12 @@ from __future__ import annotations
 import dataclasses
 from typing import NamedTuple
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import timing as T
 from repro.core.charge import ChargeConstants, DEFAULT_CONSTANTS
+from repro.core.sweep import (MarginEngine, Op, SweepSpec,
+                              param_reductions, select_combos)
 from repro.core.variation import Population
 
 
@@ -54,29 +58,57 @@ class Profiler:
     refresh_guardband_ms: float = T.REFRESH_STEP_MS
     impl: str = "auto"
     grid_step: float = T.TIMING_STEP_NS   # coarsen for calibration search
+    engine: MarginEngine | None = None    # built from the fields if None
 
-    # ---------------------------------------------------------------- margins
-    def _margins(self, cells: jnp.ndarray, combos: np.ndarray, temp: float,
-                 op: str, trefi_cells: np.ndarray | None = None
-                 ) -> np.ndarray:
-        from repro.kernels.charge_sim import ops as charge_ops
-        tr = None if trefi_cells is None else jnp.asarray(trefi_cells)
-        read_m, write_m = charge_ops.combo_margins(
-            cells, jnp.asarray(combos), temp, self.constants,
-            impl=self.impl, trefi_cells=tr)
-        return np.asarray(read_m if op == "read" else write_m)
+    def __post_init__(self):
+        if self.engine is None:
+            object.__setattr__(self, "engine", MarginEngine(
+                constants=self.constants, std=self.std, impl=self.impl))
+
+    # ---------------------------------------------------------- combo grids
+    def combo_grid(self, op: Op | str) -> np.ndarray:
+        op = Op.parse(op)
+        grid = (T.read_combo_grid if op is Op.READ else T.write_combo_grid)
+        return grid(self.std, self.grid_step)
+
+    def campaign_spec(self, temps: tuple[float, ...],
+                      rp_read: "RefreshProfile",
+                      rp_write: "RefreshProfile") -> SweepSpec:
+        """The standard full campaign: read+write combo grids at each
+        test's safe refresh interval, across `temps` — the one spec the
+        controller, calibration and the figure benchmarks all run."""
+        from repro.core.sweep import OpSweep
+        return SweepSpec(
+            temps=tuple(temps),
+            tests=(OpSweep(Op.READ, self.combo_grid(Op.READ), rp_read.safe),
+                   OpSweep(Op.WRITE, self.combo_grid(Op.WRITE),
+                           rp_write.safe)))
 
     # ---------------------------------------------------- refresh sweep (2a)
-    def refresh_profile(self, pop: Population, temp: float, op: str,
-                        grid_ms: np.ndarray | None = None) -> RefreshProfile:
+    def refresh_campaign(self, pop: Population, temp: float = 85.0,
+                         grid_ms: np.ndarray | None = None
+                         ) -> tuple[RefreshProfile, RefreshProfile]:
+        """Refresh-interval envelopes for BOTH tests from ONE dispatch
+        (the kernel computes read and write margins in the same pass)."""
         grid = grid_ms if grid_ms is not None else T.refresh_grid()
         std_combo = np.asarray(self.std.as_array())
         combos = np.repeat(std_combo[None, :], len(grid), axis=0)
         combos[:, 4] = grid
+        read_m, write_m = self.engine.margins(pop.flat_cells(), combos,
+                                              temp_c=temp)
+        return (self._refresh_envelopes(pop, read_m, grid),
+                self._refresh_envelopes(pop, write_m, grid))
+
+    def refresh_profile(self, pop: Population, temp: float, op: Op | str,
+                        grid_ms: np.ndarray | None = None) -> RefreshProfile:
+        """Single-test shim over `refresh_campaign` (same one dispatch)."""
+        rp_read, rp_write = self.refresh_campaign(pop, temp, grid_ms)
+        return rp_read if Op.parse(op) is Op.READ else rp_write
+
+    def _refresh_envelopes(self, pop: Population, margins: np.ndarray,
+                           grid: np.ndarray) -> RefreshProfile:
         m, ch, bk, k = pop.cells.shape[:4]
-        margins = self._margins(pop.flat_cells(), combos, temp, op)
-        margins = margins.reshape(m, ch, bk, k, len(grid))
-        ok = margins >= 0.0                                     # pass/fail
+        ok = margins.reshape(m, ch, bk, k, len(grid)) >= 0.0    # pass/fail
 
         def max_passing(mask: np.ndarray) -> np.ndarray:
             # mask: [..., n_grid]; the envelope is monotone (longer
@@ -95,54 +127,30 @@ class Profiler:
         return RefreshProfile(per_module, per_chip, per_bank, safe)
 
     # ------------------------------------------------- timing sweep (2b/2c)
-    def timing_profile(self, pop: Population, temp: float, op: str,
+    def timing_profile(self, pop: Population, temp: float, op: Op | str,
                        safe_trefi_ms: np.ndarray | None = None
                        ) -> TimingProfile:
         """Sweep timing combos for every module at its safe refresh
-        interval, in one batched margin-grid evaluation."""
-        combos = (T.read_combo_grid(self.std, self.grid_step) if op == "read"
-                  else T.write_combo_grid(self.std, self.grid_step))
-        m, ch, bk, k = pop.cells.shape[:4]
-        cells_per_mod = ch * bk * k
-        trefi = (safe_trefi_ms if safe_trefi_ms is not None
-                 else np.full((m,), self.std.trefi, np.float32))
-        trefi_cells = np.repeat(trefi.astype(np.float32), cells_per_mod)
-
-        margins = self._margins(pop.flat_cells(), combos, temp, op,
-                                trefi_cells)
-        margins = margins.reshape(m, cells_per_mod, combos.shape[0])
-        ok = (margins >= 0.0).all(1)                     # [modules, combos]
-
-        lat_cols = (0, 1, 3) if op == "read" else (0, 2, 3)
-        lat_sum = combos[:, lat_cols].sum(-1)
-        order = np.lexsort((combos[:, 0], lat_sum))      # min sum, min tRCD
-
-        chosen = np.zeros((m, 5), dtype=np.float32)
-        sums = np.zeros((m,), dtype=np.float32)
-        for i in range(m):
-            ok_idx = order[ok[i][order]]
-            pick = int(ok_idx[0]) if ok_idx.size else int(np.argmax(lat_sum))
-            chosen[i] = combos[pick]
-            chosen[i, 4] = trefi[i]
-            sums[i] = lat_sum[pick]
-        return TimingProfile(chosen, sums, ok)
+        interval, in one batched margin-grid evaluation (shim over a
+        single-test, single-temperature `SweepSpec`)."""
+        op = Op.parse(op)
+        spec = SweepSpec.single(op, self.combo_grid(op), (float(temp),),
+                                safe_trefi_ms)
+        res = self.engine.sweep(pop, spec)
+        return TimingProfile(res.chosen[0][:, 0, :],
+                             res.latency_sum[0][:, 0],
+                             res.ok[0][:, 0, :])
 
     # ----------------------------------------------------------- reductions
-    def reductions(self, prof: TimingProfile, op: str) -> dict[str, float]:
+    def reductions(self, prof: TimingProfile, op: Op | str
+                   ) -> dict[str, float]:
         """Average per-parameter and latency-sum reductions vs standard."""
+        op = Op.parse(op)
         std = self.std
-        r = {
-            "trcd": float(1 - (prof.combos[:, 0] / std.trcd).mean()),
-            "tras": float(1 - (prof.combos[:, 1] / std.tras).mean()),
-            "twr": float(1 - (prof.combos[:, 2] / std.twr).mean()),
-            "trp": float(1 - (prof.combos[:, 3] / std.trp).mean()),
-        }
-        base = std.read_sum() if op == "read" else std.write_sum()
+        r = param_reductions(prof.combos, std, allsafe=True)
+        base = std.read_sum() if op is Op.READ else std.write_sum()
         r["latency_sum"] = float(1 - (prof.latency_sum / base).mean())
-        # the paper's real-system evaluation uses reductions that are safe
-        # for ALL modules (Sec. 6)
-        r["trcd_allsafe"] = float(1 - prof.combos[:, 0].max() / std.trcd)
-        r["tras_allsafe"] = float(1 - prof.combos[:, 1].max() / std.tras)
-        r["twr_allsafe"] = float(1 - prof.combos[:, 2].max() / std.twr)
-        r["trp_allsafe"] = float(1 - prof.combos[:, 3].max() / std.trp)
         return r
+
+
+__all__ = ["Profiler", "RefreshProfile", "TimingProfile", "select_combos"]

@@ -1,0 +1,322 @@
+"""Declarative profiling sweeps: the paper's Sec. 5 characterization
+campaign (115 modules x all timing combos x multiple temperatures x
+read/write tests) as ONE batched kernel dispatch.
+
+The margin kernel is elementwise over a (cells x combos) grid, so every
+sweep axis is just a block structure on that grid:
+
+  * temperature bins  -> the per-combo temperature column,
+  * read/write op     -> the kernel's two outputs (one pass computes
+                         both; a test keeps the one it exercises),
+  * per-module safe refresh intervals -> per-cell, per-op tREFI
+                         override columns folded into the cell side.
+
+`SweepSpec` declares the campaign, `MarginEngine` compiles it into a
+single padded dispatch (Pallas on TPU, jnp oracle on CPU) and returns a
+structured `SweepResult` with margins, pass envelopes, the per-module
+argmin-latency combo choice (vectorised — no Python loops) and
+reduction statistics.  Callers that used to issue one `combo_margins`
+call per (module, temperature, op) now issue one engine call per
+campaign.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import timing as T
+from repro.core.charge import ChargeConstants, DEFAULT_CONSTANTS
+from repro.core.variation import Population
+
+
+class Op(enum.Enum):
+    """Which DRAM test a sweep exercises (paper Sec. 5.1)."""
+
+    READ = "read"
+    WRITE = "write"
+
+    @classmethod
+    def parse(cls, v: "Op | str") -> "Op":
+        return v if isinstance(v, Op) else Op(str(v).lower())
+
+    @property
+    def latency_cols(self) -> tuple[int, ...]:
+        """Combo columns of this test's latency sum (Fig. 3c/3d)."""
+        return (0, 1, 3) if self is Op.READ else (0, 2, 3)
+
+
+@dataclasses.dataclass(frozen=True)
+class OpSweep:
+    """One test of a campaign: an op, its combo grid, and (optionally)
+    the per-module safe refresh interval the test runs at."""
+
+    op: Op
+    combos: np.ndarray                       # [n_combos, 5]
+    trefi_ms: np.ndarray | float | None = None   # [modules], scalar, or None
+
+    def __post_init__(self):
+        object.__setattr__(self, "op", Op.parse(self.op))
+        object.__setattr__(self, "combos",
+                           np.asarray(self.combos, np.float32))
+
+    def trefi_per_module(self, n_modules: int) -> np.ndarray | None:
+        if self.trefi_ms is None:
+            return None
+        t = np.asarray(self.trefi_ms, np.float32)
+        if t.ndim == 0:
+            t = np.full((n_modules,), float(t), np.float32)
+        assert t.shape == (n_modules,), (t.shape, n_modules)
+        return t
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepSpec:
+    """A declarative multi-axis profiling campaign.
+
+    tests: the (op, combo grid, safe-tREFI) tuples to evaluate;
+    temps:  the temperature bins — every test runs at every bin.
+
+    All READ tests must agree on `trefi_ms` (likewise WRITE): the
+    per-op refresh override is a per-cell column shared by every combo
+    column of that op in the fused dispatch.
+    """
+
+    tests: tuple[OpSweep, ...]
+    temps: tuple[float, ...]
+
+    def __post_init__(self):
+        object.__setattr__(self, "tests", tuple(self.tests))
+        object.__setattr__(self, "temps",
+                           tuple(float(t) for t in self.temps))
+        assert self.tests and self.temps, "empty sweep"
+
+    @classmethod
+    def single(cls, op: Op | str, combos: np.ndarray,
+               temps: tuple[float, ...] | float,
+               trefi_ms: np.ndarray | float | None = None) -> "SweepSpec":
+        temps = (temps,) if isinstance(temps, (int, float)) else tuple(temps)
+        return cls(tests=(OpSweep(Op.parse(op), combos, trefi_ms),),
+                   temps=temps)
+
+    def op_trefi(self, op: Op, n_modules: int) -> np.ndarray | None:
+        """The shared per-module tREFI override of all `op` tests."""
+        picked: np.ndarray | None = None
+        seen = False
+        for t in self.tests:
+            if t.op is not op:
+                continue
+            cur = t.trefi_per_module(n_modules)
+            if seen and not _same_trefi(picked, cur):
+                raise ValueError(
+                    f"all {op.value} tests in one sweep must share trefi_ms")
+            picked, seen = cur, True
+        return picked
+
+
+def _same_trefi(a: np.ndarray | None, b: np.ndarray | None) -> bool:
+    if a is None or b is None:
+        return a is b
+    return np.array_equal(a, b)
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepResult:
+    """Structured result of one fused campaign.
+
+    Per test k (aligned with spec.tests):
+      margins[k]:     [n_cells, n_temps, n_combos_k] raw test margins
+      ok[k]:          [modules, n_temps, n_combos_k] pass envelope
+                      (every cell of the module passes)
+      chosen[k]:      [modules, n_temps, 5] minimum-latency passing
+                      combo (min latency sum, min tRCD tie-break), with
+                      the module's tREFI in column 4
+      latency_sum[k]: [modules, n_temps] latency sum of the choice
+    """
+
+    spec: SweepSpec
+    std: T.TimingParams
+    margins: tuple[np.ndarray, ...]
+    ok: tuple[np.ndarray, ...]
+    chosen: tuple[np.ndarray, ...]
+    latency_sum: tuple[np.ndarray, ...]
+
+    @property
+    def temps(self) -> tuple[float, ...]:
+        return self.spec.temps
+
+    def index(self, op: Op | str) -> int:
+        """Index of the first test exercising `op`."""
+        op = Op.parse(op)
+        for k, t in enumerate(self.spec.tests):
+            if t.op is op:
+                return k
+        raise KeyError(op)
+
+    def reductions(self, op: Op | str) -> tuple[dict[str, float], ...]:
+        """Per-temperature average reductions vs standard timings (the
+        paper's Sec. 5.2 statistics), one dict per temp bin."""
+        k = self.index(op)
+        op = Op.parse(op)
+        std = self.std
+        chosen, sums = self.chosen[k], self.latency_sum[k]
+        base = std.read_sum() if op is Op.READ else std.write_sum()
+        out = []
+        for ti in range(len(self.temps)):
+            r = param_reductions(chosen[:, ti, :], std, allsafe=True)
+            r["latency_sum"] = float(1 - (sums[:, ti] / base).mean())
+            out.append(r)
+        return tuple(out)
+
+
+def param_reductions(params: np.ndarray, std: T.TimingParams,
+                     allsafe: bool = False) -> dict[str, float]:
+    """Mean fractional timing reductions vs `std` (the paper's Sec. 5.2
+    statistic).  params: [..., >=4] rows of (trcd, tras, twr, trp[, ..]).
+    With `allsafe`, adds the max-based reductions that are safe for ALL
+    modules (Sec. 6 system eval).  Shared by SweepResult, Profiler and
+    the controller so the statistic is defined in exactly one place."""
+    cols = ("trcd", "tras", "twr", "trp")
+    stds = (std.trcd, std.tras, std.twr, std.trp)
+    flat = np.asarray(params).reshape(-1, params.shape[-1])
+    r = {n: float(1 - (flat[:, i] / s).mean())
+         for i, (n, s) in enumerate(zip(cols, stds))}
+    if allsafe:
+        r.update({f"{n}_allsafe": float(1 - flat[:, i].max() / s)
+                  for i, (n, s) in enumerate(zip(cols, stds))})
+    return r
+
+
+def select_combos(combos: np.ndarray, ok: np.ndarray, op: Op | str,
+                  trefi_ms: np.ndarray | None = None,
+                  std: T.TimingParams = T.DDR3_1600
+                  ) -> tuple[np.ndarray, np.ndarray]:
+    """Vectorised per-module combo selection (paper Sec. 5.1 step 4):
+    among passing combos pick minimum latency sum, min-tRCD tie-break;
+    fall back to the slowest combo when nothing passes.
+
+    combos: [C, 5]; ok: [..., C] bool -> (chosen [..., 5], sums [...]).
+    Replaces the per-module Python loop with lexsort/take_along_axis.
+    """
+    op = Op.parse(op)
+    lat_sum = combos[:, op.latency_cols].sum(-1)
+    order = np.lexsort((combos[:, 0], lat_sum))        # min sum, min tRCD
+    ok_ord = np.take_along_axis(ok, np.broadcast_to(order, ok.shape), -1)
+    first = ok_ord.argmax(-1)                          # first pass in order
+    has = ok_ord.any(-1)
+    pick = np.where(has, order[first], int(lat_sum.argmax()))
+    chosen = combos[pick].astype(np.float32)           # [..., 5]
+    if trefi_ms is None:
+        chosen[..., 4] = std.trefi
+    else:
+        # trefi is per-module: broadcast over any trailing sweep axes
+        t = np.asarray(trefi_ms, np.float32)
+        chosen[..., 4] = t.reshape(t.shape + (1,) * (pick.ndim - 1))
+    return chosen, lat_sum[pick].astype(np.float32)
+
+
+@dataclasses.dataclass
+class MarginEngine:
+    """Facade that compiles a `SweepSpec` into one kernel dispatch.
+
+    `dispatch_count` increments once per kernel launch — profiling
+    campaigns are expected to cost O(1) dispatches regardless of the
+    number of temperature bins, modules, or ops (the call-count spy in
+    tests/test_sweep.py pins this down).
+    """
+
+    constants: ChargeConstants = DEFAULT_CONSTANTS
+    std: T.TimingParams = T.DDR3_1600
+    impl: str = "auto"
+    dispatch_count: int = 0
+
+    # ------------------------------------------------------------ low level
+    def margins(self, cells: np.ndarray | jnp.ndarray, combos: np.ndarray,
+                temps_combo: np.ndarray | None = None,
+                temp_c: float | None = None,
+                trefi_read: np.ndarray | None = None,
+                trefi_write: np.ndarray | None = None
+                ) -> tuple[np.ndarray, np.ndarray]:
+        """One dispatch: dense (read, write) margin grids [n, m].
+
+        Give either `temps_combo` ([m] per-combo temperature) or a
+        scalar `temp_c`.  `trefi_read`/`trefi_write`: optional [n]
+        per-cell refresh-interval overrides for the two tests.
+        """
+        from repro.kernels.charge_sim import ops as charge_ops
+        combos = np.asarray(combos, np.float32)
+        if temps_combo is None:
+            assert temp_c is not None, "need temps_combo or temp_c"
+            temps_combo = np.full((combos.shape[0],), float(temp_c),
+                                  np.float32)
+        self.dispatch_count += 1
+        read_m, write_m = charge_ops.margin_sweep(
+            jnp.asarray(cells), jnp.asarray(combos),
+            jnp.asarray(temps_combo, jnp.float32), self.constants,
+            impl=self.impl,
+            trefi_read_cells=_as_jnp(trefi_read),
+            trefi_write_cells=_as_jnp(trefi_write))
+        return np.asarray(read_m), np.asarray(write_m)
+
+    # ------------------------------------------------------------ campaign
+    def sweep(self, pop: Population, spec: SweepSpec) -> SweepResult:
+        """Run a whole declarative campaign in ONE dispatch.
+
+        Column layout of the fused grid: tests are concatenated, and
+        within a test the combo grid is tiled once per temperature bin
+        (temp-major), with the bin temperature in the per-combo
+        temperature column.  Per-module safe refresh intervals are
+        folded into the per-cell, per-op override columns.
+        """
+        n_mod = pop.n_modules
+        cpm = int(np.prod(pop.cells.shape[1:4]))     # cells per module
+        n_temps = len(spec.temps)
+        temps_arr = np.asarray(spec.temps, np.float32)
+
+        blocks, temp_cols = [], []
+        for test in spec.tests:
+            base = test.combos                        # [C, 5]
+            blocks.append(np.tile(base, (n_temps, 1)))
+            temp_cols.append(np.repeat(temps_arr, base.shape[0]))
+        combos_all = np.concatenate(blocks, axis=0)
+        temps_all = np.concatenate(temp_cols, axis=0)
+
+        trefi_mod = {op: spec.op_trefi(op, n_mod) for op in Op}
+        trefi_cells = {op: (None if trefi_mod[op] is None
+                            else np.repeat(trefi_mod[op], cpm))
+                       for op in Op}
+
+        read_m, write_m = self.margins(
+            pop.flat_cells(), combos_all, temps_all,
+            trefi_read=trefi_cells[Op.READ],
+            trefi_write=trefi_cells[Op.WRITE])
+
+        margins, ok, chosen, sums = [], [], [], []
+        off = 0
+        for test in spec.tests:
+            c = test.combos.shape[0]
+            block = (read_m if test.op is Op.READ else write_m)
+            block = block[:, off:off + n_temps * c]
+            off += n_temps * c
+            m3 = block.reshape(-1, n_temps, c)        # [n_cells, T, C]
+            ok_k = (m3.reshape(n_mod, cpm, n_temps, c) >= 0.0).all(1)
+            ch_k, s_k = select_combos(test.combos, ok_k, test.op,
+                                      trefi_mod[test.op], self.std)
+            margins.append(m3)
+            ok.append(ok_k)
+            chosen.append(ch_k)
+            sums.append(s_k)
+        return SweepResult(spec=spec, std=self.std,
+                           margins=tuple(margins), ok=tuple(ok),
+                           chosen=tuple(chosen), latency_sum=tuple(sums))
+
+
+def _as_jnp(x: np.ndarray | None) -> jnp.ndarray | None:
+    return None if x is None else jnp.asarray(x, jnp.float32)
+
+
+__all__ = ["Op", "OpSweep", "SweepSpec", "SweepResult", "MarginEngine",
+           "select_combos", "param_reductions"]

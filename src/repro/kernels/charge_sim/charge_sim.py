@@ -7,13 +7,19 @@ computation is purely elementwise over a [n_cells, n_combos] grid —
 VPU-bound on TPU — so the kernel tiles the grid into VMEM blocks with
 cells on the sublane axis and combos on the lane axis.
 
-Layout: the small per-cell (4) and per-combo (6, incl. temperature)
-parameter vectors are passed *transposed* ([4, n_cells], [6, n_combos])
-so the long axis is the 128-lane minor dimension and BlockSpecs stay
-hardware-aligned.  VMEM per grid step with the default blocks:
-4*256*4 + 6*256*4 + 2*256*256*4 B ≈ 0.53 MB — far under the ~16 MB
-budget; the grid is compute-(VPU-)bound, which is the point: one kernel
-launch replaces the week-long FPGA sweep loop.
+Layout: the small per-cell (7: 5 params + per-op trefi overrides) and
+per-combo (6, incl. temperature) parameter vectors are passed
+*transposed* ([7, n_cells], [6, n_combos]) so the long axis is the
+128-lane minor dimension and BlockSpecs stay hardware-aligned.  The
+per-combo temperature column and the per-cell, per-op refresh-interval
+overrides are what make the whole campaign fusable: every
+(module, temperature bin, read/write op) slice of the paper's Sec. 5
+sweep is just a block of the same [n_cells, n_combos] grid, so the
+multi-temperature characterization is ONE kernel launch.  VMEM per grid
+step with the default blocks: 7*256*4 + 6*256*4 + 2*256*256*4 B ≈
+0.54 MB — far under the ~16 MB budget; the grid is compute-(VPU-)bound,
+which is the point: one kernel launch replaces the week-long FPGA sweep
+loop.
 """
 
 from __future__ import annotations
@@ -34,14 +40,16 @@ _FIXED_POINT_ITERS = 8
 
 
 def _margin_block(tau_r, xfer, tau_ret85, tau_p, tau_w_c, trcd, tras, twr,
-                  trp, trefi, temp_c, c: ChargeConstants):
+                  trp, trefi_r, trefi_w, temp_c, c: ChargeConstants):
     """Elementwise margin math on a [BC, BM] block.  Mirrors
-    repro.core.charge but written block-wise for the kernel body."""
+    repro.core.charge but written block-wise for the kernel body.
+    trefi_r / trefi_w: refresh interval seen by the read / write test
+    (they differ when per-module safe intervals are folded in)."""
     hot = 1.0 + c.k_rc * jnp.maximum(temp_c - 55.0, 0.0)
     tau_r_t = tau_r * hot
     tau_w_t = tau_w_c * hot
     tau_ret = tau_ret85 * jnp.exp(c.k_ret * (85.0 - temp_c))
-    leak = jnp.exp(-trefi / tau_ret)
+    leak = jnp.exp(-trefi_r / tau_ret)
     residual = c.v_precharge * jnp.exp(-jnp.maximum(trp - c.t_p0, 0.0) / tau_p)
 
     def sense_t(q):
@@ -67,7 +75,7 @@ def _margin_block(tau_r, xfer, tau_ret85, tau_p, tau_w_c, trcd, tras, twr,
     # write steady state (worst case: flip of a freshly-written value);
     # write tests exercise worst-case coupling -> derated retention
     tau_w = tau_w_t * c.beta_w
-    leak_w = jnp.exp(-trefi / (tau_ret * c.kappa_w))
+    leak_w = jnp.exp(-trefi_w / (tau_ret * c.kappa_w))
     q_low = 0.05 + 0.0 * leak
     q_written = 1.0 - (1.0 - q_low) * jnp.exp(
         -jnp.maximum(twr + c.t_wr_base, 0.0) / tau_w)
@@ -83,7 +91,7 @@ def _margin_block(tau_r, xfer, tau_ret85, tau_p, tau_w_c, trcd, tras, twr,
 
 def _kernel(cells_t_ref, combos_t_ref, read_ref, write_ref,
             *, constants: ChargeConstants):
-    cells = cells_t_ref[...]          # [6, BC]  (5 params + trefi override)
+    cells = cells_t_ref[...]          # [7, BC]  (5 params + r/w trefi ovr)
     combos = combos_t_ref[...]        # [6, BM]
 
     def cell(i):                      # [BC, 1] column vector
@@ -92,13 +100,15 @@ def _kernel(cells_t_ref, combos_t_ref, read_ref, write_ref,
     def combo(i):                     # [1, BM] row vector
         return combos[i, :][None, :]
 
-    # per-cell refresh-interval override: row 5 of cells (< 0 => use combo's)
-    trefi_cell = cell(5)
-    trefi = jnp.where(trefi_cell > 0.0, trefi_cell, combo(4))
+    # per-cell, per-op refresh-interval overrides: rows 5 (read test) and
+    # 6 (write test) of cells (< 0 => use the combo's trefi column)
+    trefi_r_cell, trefi_w_cell = cell(5), cell(6)
+    trefi_r = jnp.where(trefi_r_cell > 0.0, trefi_r_cell, combo(4))
+    trefi_w = jnp.where(trefi_w_cell > 0.0, trefi_w_cell, combo(4))
 
     read_m, write_m = _margin_block(
         cell(0), cell(1), cell(2), cell(3), cell(4),
-        combo(0), combo(1), combo(2), combo(3), trefi, combo(5),
+        combo(0), combo(1), combo(2), combo(3), trefi_r, trefi_w, combo(5),
         constants)
     read_ref[...] = read_m
     write_ref[...] = write_m
@@ -111,11 +121,13 @@ def margin_grid(cells_t: jnp.ndarray, combos_t: jnp.ndarray,
                 interpret: bool = False,
                 bc: int = BLOCK_CELLS, bm: int = BLOCK_COMBOS
                 ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """cells_t: [6, N] (N % bc == 0), rows = (tau_r, xfer, tau_ret85,
-    tau_p, tau_w, trefi_override_or_-1); combos_t: [6, M] (M % bm == 0),
-    rows = (trcd, tras, twr, trp, trefi, temp_c).
-    Returns (read, write) margins, each [N, M]."""
+    """cells_t: [7, N] (N % bc == 0), rows = (tau_r, xfer, tau_ret85,
+    tau_p, tau_w, read_trefi_override_or_-1, write_trefi_override_or_-1);
+    combos_t: [6, M] (M % bm == 0), rows = (trcd, tras, twr, trp, trefi,
+    temp_c).  Returns (read, write) margins, each [N, M]."""
     n, m = cells_t.shape[1], combos_t.shape[1]
+    assert cells_t.shape[0] == 7 and combos_t.shape[0] == 6, \
+        (cells_t.shape, combos_t.shape)
     assert n % bc == 0 and m % bm == 0, (n, m, bc, bm)
     grid = (n // bc, m // bm)
 
@@ -124,7 +136,7 @@ def margin_grid(cells_t: jnp.ndarray, combos_t: jnp.ndarray,
         functools.partial(_kernel, constants=constants),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((6, bc), lambda i, j: (0, i)),       # cells tile
+            pl.BlockSpec((7, bc), lambda i, j: (0, i)),       # cells tile
             pl.BlockSpec((6, bm), lambda i, j: (0, j)),       # combos tile
         ],
         out_specs=[

@@ -1,10 +1,12 @@
 """Pure-jnp oracle for the charge_sim kernel: the margin-grid math from
 `repro.core.charge` evaluated densely.  Used for CPU execution and as
-the allclose reference for the Pallas kernel."""
+the allclose reference for the Pallas kernel.
+
+The jitted entry point takes the per-combo temperature as a *traced*
+array (not a static scalar), so one compilation serves every
+temperature bin of a profiling campaign."""
 
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -12,15 +14,29 @@ import jax.numpy as jnp
 from repro.core import charge
 
 
-@functools.partial(jax.jit, static_argnames=("temp_c",))
-def _jitted(cells, combos, temp_c, constants, trefi_cells):
-    return charge.combo_margins(cells, combos, temp_c, constants,
-                                trefi_cells)
+@jax.jit
+def _jitted(cells, combos, temps_combo, constants, trefi_read, trefi_write):
+    return charge.margin_sweep(cells, combos, temps_combo, constants,
+                               trefi_read, trefi_write)
+
+
+def margin_sweep(cells: jnp.ndarray, combos: jnp.ndarray,
+                 temps_combo: jnp.ndarray,
+                 constants: charge.ChargeConstants = charge.DEFAULT_CONSTANTS,
+                 trefi_read_cells: jnp.ndarray | None = None,
+                 trefi_write_cells: jnp.ndarray | None = None
+                 ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """cells: [n, 5]; combos: [m, 5]; temps_combo: [m] ->
+    (read, write) margins [n, m]."""
+    return _jitted(cells, combos, jnp.asarray(temps_combo, jnp.float32),
+                   constants, trefi_read_cells, trefi_write_cells)
 
 
 def combo_margins(cells: jnp.ndarray, combos: jnp.ndarray, temp_c: float,
                   constants: charge.ChargeConstants = charge.DEFAULT_CONSTANTS,
                   trefi_cells: jnp.ndarray | None = None
                   ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """cells: [n, 4]; combos: [m, 5] -> (read, write) margins [n, m]."""
-    return _jitted(cells, combos, float(temp_c), constants, trefi_cells)
+    """cells: [n, 5]; combos: [m, 5] -> (read, write) margins [n, m]."""
+    temps = jnp.full((combos.shape[0],), float(temp_c), jnp.float32)
+    return margin_sweep(cells, combos, temps, constants,
+                        trefi_cells, trefi_cells)

@@ -15,8 +15,9 @@ import jax               # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
+from repro import pspec  # noqa: E402
 from repro.configs import get_config, input_shapes  # noqa: E402
-from repro.configs.registry import ARCHS, SHAPES, LONG_CONTEXT_ARCHS, InputShape  # noqa: E402
+from repro.configs.registry import ARCHS, SHAPES, LONG_CONTEXT_ARCHS  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
 from repro.launch import sharding as SH  # noqa: E402
 from repro.models import transformer as TF  # noqa: E402
@@ -205,7 +206,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         return rec
 
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with pspec.set_mesh(mesh):
         specs = input_specs(arch, shape_name, mesh, cfg=cfg,
                             optimizer=optimizer, param_dtype=param_dtype)
         if shape.kind == "train":

@@ -34,9 +34,8 @@ def main():
         max_new_tokens=args.new_tokens) for i in range(args.requests)]
     for r in reqs:
         engine.submit(r)
-    while engine.waiting or any(engine.active):
-        engine.step()
-    for r in reqs:
+    done = engine.run_until_drained()
+    for r in done:
         print(f"req {r.rid}: {list(r.out)}")
 
 

@@ -13,9 +13,34 @@ import jax
 from jax.sharding import PartitionSpec as P
 
 
+def _active_mesh():
+    """The active (abstract or physical) mesh, or None.
+
+    jax >= 0.5 exposes `jax.sharding.get_abstract_mesh`; on older
+    releases fall back to the thread-local physical mesh that the
+    `with mesh:` context manager sets."""
+    get = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get is not None:
+        return get()
+    try:
+        from jax.interpreters.pxla import thread_resources
+        m = thread_resources.env.physical_mesh
+        return None if m.empty else m
+    except (ImportError, AttributeError):
+        return None
+
+
 def _mesh_axes() -> frozenset[str]:
-    m = jax.sharding.get_abstract_mesh()
+    m = _active_mesh()
     return frozenset(m.axis_names) if m is not None and m.axis_names else frozenset()
+
+
+def set_mesh(mesh):
+    """Context manager activating `mesh`: `jax.set_mesh` on jax >= 0.5,
+    the Mesh object's own context manager (thread-local physical mesh)
+    on older releases."""
+    sm = getattr(jax, "set_mesh", None)
+    return sm(mesh) if sm is not None else mesh
 
 
 def dp_axes() -> tuple[str, ...]:
@@ -43,7 +68,7 @@ def resolve(*spec) -> P:
 
 
 def axis_size(name: str) -> int:
-    m = jax.sharding.get_abstract_mesh()
+    m = _active_mesh()
     if m is None or name not in (m.axis_names or ()):
         return 1
     return m.shape[name]

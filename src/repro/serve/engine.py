@@ -44,6 +44,7 @@ class ServeEngine:
         self.active: list[Request | None] = [None] * batch_slots
         self.pos = np.zeros(batch_slots, np.int32)
         self.waiting: list[Request] = []
+        self._retired: list[Request] = []
         self._decode = jax.jit(
             lambda p, c, t, pos: TF.decode_step(p, c, t, pos, cfg,
                                                 dtype=dtype))
@@ -106,12 +107,22 @@ class ServeEngine:
                     or self.pos[s] >= self.max_len - 1):
                 req.done = True
                 self.active[s] = None
+                self._retired.append(req)
         return len(live)
 
+    def drain_retired(self) -> list[Request]:
+        """Hand back (and forget) every request retired since the last
+        drain.  Callers driving `step()` directly should drain
+        periodically so the retired list does not grow without bound."""
+        finished, self._retired = self._retired, []
+        return finished
+
     def run_until_drained(self, max_ticks: int = 1000) -> list[Request]:
-        finished: list[Request] = []
+        """Tick until every submitted request retires (or max_ticks);
+        returns all retired requests not yet drained — including any
+        finished by earlier manual `step()` calls."""
         for _ in range(max_ticks):
             if not self.waiting and all(a is None for a in self.active):
                 break
             self.step()
-        return finished
+        return self.drain_retired()

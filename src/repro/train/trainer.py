@@ -12,6 +12,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro import pspec
 from repro.checkpoint import CheckpointManager
 from repro.configs.base import ModelConfig
 from repro.data.pipeline import SyntheticLM, shard_batch
@@ -43,7 +44,7 @@ class Trainer:
             params_shape = jax.eval_shape(
                 partial(TF.init_params, cfg=cfg), key)
             self.p_sh = SH.param_shardings(cfg, mesh, params_shape)
-            with jax.set_mesh(mesh):
+            with pspec.set_mesh(mesh):
                 self.params = jax.jit(
                     partial(TF.init_params, cfg=cfg),
                     out_shardings=self.p_sh)(key)
@@ -79,7 +80,7 @@ class Trainer:
     def run(self, start_step: int = 0) -> dict[str, Any]:
         t0 = time.time()
         if self.mesh is not None:
-            with jax.set_mesh(self.mesh):
+            with pspec.set_mesh(self.mesh):
                 self._run_inner(start_step)
         else:
             self._run_inner(start_step)

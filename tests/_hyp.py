@@ -1,0 +1,65 @@
+"""Hypothesis compatibility shim.
+
+Property tests use the real `hypothesis` package when it is installed.
+In environments without it (the pinned container lacks the dep and
+nothing may be pip-installed), fall back to a tiny deterministic
+replacement: each strategy contributes a small fixed sample set and
+`@given` runs the cartesian product.  This keeps the property tests
+collectable and meaningful everywhere, at reduced case counts.
+"""
+
+from __future__ import annotations
+
+try:                                       # pragma: no cover - env dependent
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:                # pragma: no cover - env dependent
+    import itertools
+
+    HAVE_HYPOTHESIS = False
+
+    class _Samples:
+        def __init__(self, values):
+            self.values = list(values)
+
+    class _Strategies:
+        @staticmethod
+        def floats(lo, hi):
+            mid = 0.5 * (lo + hi)
+            return _Samples([lo, mid, hi, lo + 0.25 * (hi - lo),
+                             lo + 0.75 * (hi - lo)])
+
+        @staticmethod
+        def integers(lo, hi):
+            mid = (lo + hi) // 2
+            vals = sorted({lo, mid, hi})
+            return _Samples(vals)
+
+        @staticmethod
+        def sampled_from(seq):
+            return _Samples(list(seq))
+
+    st = _Strategies()
+
+    def given(*strategies):
+        def deco(fn):
+            # NOTE: no functools.wraps — pytest must see the runner's
+            # own (self-only) signature, not the property arguments,
+            # or it would try to resolve them as fixtures.
+            def runner(self=None):
+                for combo in itertools.product(
+                        *(s.values for s in strategies)):
+                    if self is None:
+                        fn(*combo)
+                    else:
+                        fn(self, *combo)
+            runner.__name__ = fn.__name__
+            runner.__doc__ = fn.__doc__
+            return runner
+        return deco
+
+    def settings(**_kwargs):
+        def deco(fn):
+            return fn
+        return deco

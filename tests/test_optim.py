@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # hypothesis or deterministic fallback
 
 from repro.optim.adamw import adamw_init, adamw_update
 from repro.optim.adamw8bit import _dequant, _quant, adamw8_init, adamw8_update

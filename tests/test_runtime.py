@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # hypothesis or deterministic fallback
 
 from repro.core import dram_sim
 from repro.core.timing import ALDRAM_55C_EVAL, DDR3_1600, TimingParams
@@ -29,6 +29,7 @@ class TestDramSim:
         fast = dram_sim.simulate(t, ALDRAM_55C_EVAL)
         assert float(fast["mean_latency_ns"]) < float(std["mean_latency_ns"])
 
+    @pytest.mark.slow
     @given(st.sampled_from(["trcd", "tras", "twr", "trp"]),
            st.floats(0.5, 0.95))
     @settings(max_examples=12, deadline=None)
@@ -43,6 +44,7 @@ class TestDramSim:
 
 
 class TestPerfModel:
+    @pytest.mark.slow          # full Fig. 4 population benchmark (~1 min)
     def test_fig4_shape(self):
         from repro.core import perf_model
         res = perf_model.evaluate(n=2048)
