@@ -1,14 +1,23 @@
 """Sec. 7.2: interaction of simultaneous timing reductions — reducing
 one parameter shrinks the opportunity to reduce another.  We trace the
 per-module (tRAS_min | tRP) frontier: the minimal passing tRAS as tRP
-is reduced."""
+is reduced — then replay the whole frontier through ONE batched
+`SimEngine` campaign to price each profiling-feasible point in
+system-level latency (every frontier row is one timing column of the
+same replay dispatch)."""
 
 from __future__ import annotations
 
+import dataclasses
+
+import jax
 import numpy as np
 
 from benchmarks.common import emit, population, profiler, timed
+from repro.core import dram_sim
+from repro.core.sim_engine import SimEngine, SimSpec
 from repro.core.sweep import Op, SweepSpec
+from repro.core.timing import DDR3_1600, stack_timing
 
 
 def run(fast: bool = False) -> dict:
@@ -29,14 +38,28 @@ def run(fast: bool = False) -> dict:
             tras_min = np.where(ok[:, sel].any(1), tras.min(1), np.nan)
             if np.isnan(tras_min).mean() < 0.5:
                 frontier[float(trp)] = float(np.nanmedian(tras_min))
+        # system-level price of every frontier point: one replay
+        # dispatch sweeps all (tRP, tRAS_min) rows over one trace
+        rows = stack_timing([
+            dataclasses.replace(DDR3_1600, trp=trp, tras=tras)
+            for trp, tras in sorted(frontier.items())])
+        trace = dram_sim.synth_trace(jax.random.PRNGKey(0),
+                                     2048 if fast else 8192, row_hit=0.5)
+        engine = SimEngine()
+        sim = engine.run(SimSpec(traces=(trace,), timings=rows))
+        sys_lat = sim.mean_latency_ns[0, 0]          # [frontier points]
     trps = sorted(frontier)
     monotone = all(frontier[a] >= frontier[b] - 1e-6
                    for a, b in zip(trps, trps[1:]))
     emit("sec72_multi_timing_interaction", t.us,
          f"tras_min@trp{{{trps[0]:.2f}}}={frontier[trps[0]]:.1f}ns vs "
          f"@trp{{{trps[-1]:.2f}}}={frontier[trps[-1]]:.1f}ns|"
-         f"interaction={'confirmed' if monotone else 'NOT confirmed'}")
-    return {"frontier": frontier, "monotone": monotone}
+         f"interaction={'confirmed' if monotone else 'NOT confirmed'}|"
+         f"sys_lat={sys_lat.min():.1f}..{sys_lat.max():.1f}ns"
+         f"|replay_dispatches={engine.dispatch_count}")
+    return {"frontier": frontier, "monotone": monotone,
+            "system_latency_ns": {t_: float(l) for t_, l
+                                  in zip(sorted(frontier), sys_lat)}}
 
 
 if __name__ == "__main__":

@@ -27,6 +27,7 @@ def main() -> None:
         "fig2_timing": fig2_timing.run,
         "fig3_population": fig3_population.run,
         "fig4_system": fig4_system.run,
+        "fig4_profiled": fig4_system.run_profiled,
         "power": power_bench.run,
         "repeatability": repeatability.run,
         "multi_timing": multi_timing.run,

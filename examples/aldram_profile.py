@@ -1,7 +1,9 @@
 """Full AL-DRAM reproduction pipeline on the 115-module population:
 refresh envelopes -> safe intervals -> timing sweeps at 55/85C ->
 per-parameter reductions vs the paper's measured numbers -> system
-speedup (Fig. 4).
+speedup (Fig. 4), both from the paper's 55C evaluation constants and —
+closing the loop — from the profiler's own TimingTable, resolved per
+temperature bin through one batched SimEngine campaign.
 
     PYTHONPATH=src python examples/aldram_profile.py [--fast]
 """
@@ -25,9 +27,14 @@ def main():
     print(json.dumps(fig2_refresh.run(fast=args.fast), indent=1))
     print("== population analysis (Fig 3 / Sec 5.2) ==")
     print(json.dumps(fig3_population.run(fast=args.fast), indent=1))
-    print("== system evaluation (Fig 4) ==")
+    print("== system evaluation (Fig 4, paper 55C constants) ==")
     print(json.dumps(fig4_system.run(fast=args.fast)["summary"],
                      indent=1, default=str))
+    print("== system evaluation (Fig 4, profiled TimingTable, "
+          "temperature-resolved) ==")
+    prof = fig4_system.run_profiled(fast=args.fast)
+    print(json.dumps({str(t): s for t, s in prof["per_temp"].items()},
+                     indent=1))
 
 
 if __name__ == "__main__":

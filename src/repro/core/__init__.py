@@ -6,5 +6,9 @@
 # into single batched kernel dispatches.
 from repro.core.sweep import (MarginEngine, Op, OpSweep, SweepResult,
                               SweepSpec)
+# The system-evaluation mirror: trace-replay campaigns compiled into
+# single batched lax.scan dispatches.
+from repro.core.sim_engine import SimEngine, SimResult, SimSpec
 
-__all__ = ["MarginEngine", "Op", "OpSweep", "SweepResult", "SweepSpec"]
+__all__ = ["MarginEngine", "Op", "OpSweep", "SweepResult", "SweepSpec",
+           "SimEngine", "SimResult", "SimSpec"]

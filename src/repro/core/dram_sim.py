@@ -1,8 +1,8 @@
 """Trace-driven DRAM bank-timing simulator (JAX lax.scan).
 
-Models an in-order memory controller with an open-page policy over
-`n_banks` banks on one rank/channel, honoring tRCD / tRAS / tRP / tWR /
-tCL.  Service latency per request:
+Models an in-order memory controller over `n_banks` banks on one
+rank/channel, honoring tRCD / tRAS / tRP / tWR / tCL.  Service latency
+per request under the default open-page policy:
 
   row hit      : tCL
   row empty    : tRCD + tCL
@@ -13,14 +13,35 @@ This is the engine behind the Fig. 4 real-system reproduction
 (`repro.core.perf_model`): the ONLY thing AL-DRAM changes is the timing
 parameters, so speedups fall out of the same trace replayed under
 standard vs adaptive timings.
+
+The replay core (`replay_one`) is written to be batched: it takes a
+stacked timing row (`TimingParams.as_row`), a validity mask (so traces
+of different lengths can be padded into one grid) and a scheduling
+`Policy`, and `repro.core.sim_engine.SimEngine` vmaps it over a whole
+(traces x policies x timing rows) campaign in ONE dispatch.
+`simulate(trace, tp)` remains as a thin single-item shim over that
+batched path.
+
+Scheduling-policy axis:
+
+  * page policy — "open" leaves the row latched after an access
+    (hits are cheap, conflicts pay the precharge at the *next* access);
+    "closed" auto-precharges after every access (no hits, no
+    conflicts: every access is a row-empty ACT once the precharge has
+    completed).
+  * FR-FCFS-lite — `frfcfs_reorder` reorders a trace host-side within a
+    bounded lookahead window, issuing the oldest row-hit first (with a
+    starvation cap), approximating a first-ready FCFS scheduler.
 """
 
 from __future__ import annotations
 
+import dataclasses
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.timing import TimingParams
 
@@ -30,6 +51,33 @@ class Trace(NamedTuple):
     bank: jnp.ndarray       # [N] int32
     row: jnp.ndarray        # [N] int32
     is_write: jnp.ndarray   # [N] bool
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    """One memory-controller scheduling policy (a campaign axis).
+
+    page: "open" (default) or "closed" (auto-precharge every access).
+    reorder_window: FR-FCFS-lite lookahead; <= 1 keeps FCFS order.
+    """
+
+    page: str = "open"
+    reorder_window: int = 0
+    # promote a row-hit over the head request only when it arrives
+    # within this slack (default ~ tRP + tRCD conflict premium):
+    # reordering toward a request that is still in flight would stall
+    # the channel longer than the conflict it avoids
+    reorder_slack_ns: float = 30.0
+
+    def __post_init__(self):
+        assert self.page in ("open", "closed"), self.page
+
+    @property
+    def closed(self) -> bool:
+        return self.page == "closed"
+
+
+OPEN_FCFS = Policy()
 
 
 def synth_trace(key, n: int, n_banks: int = 8, n_rows: int = 4096,
@@ -57,16 +105,63 @@ def synth_trace(key, n: int, n_banks: int = 8, n_rows: int = 4096,
     return Trace(arrival, bank, row, is_write)
 
 
-def simulate(trace: Trace, tp: TimingParams, n_banks: int = 8,
-             mlp_window: int = 8) -> dict[str, jnp.ndarray]:
-    """Replay a trace under timing parameters.  Returns mean/percentile
-    latency and total runtime.
+def frfcfs_reorder(trace: Trace, window: int, slack_ns: float = 30.0,
+                   max_defer: int | None = None) -> Trace:
+    """FR-FCFS-lite: greedily issue, among the next `window` pending
+    requests, the oldest one hitting the currently open row of its bank
+    (else the oldest request).  A candidate is promoted only when it
+    arrives within `slack_ns` of the head request (a hit that is still
+    in flight costs more to wait for than the conflict it avoids), and
+    a starvation cap forces the head out after `max_defer` consecutive
+    deferrals.  Host-side preprocessing: requests keep their arrival
+    timestamps, only issue order changes.
+    """
+    if window <= 1:
+        return trace
+    arrival = np.asarray(trace.arrival)
+    bank = np.asarray(trace.bank)
+    row = np.asarray(trace.row)
+    wr = np.asarray(trace.is_write)
+    n = arrival.shape[0]
+    cap = 4 * window if max_defer is None else max_defer
+    order = np.empty(n, np.int64)
+    open_row: dict[int, int] = {}
+    pend = list(range(n))
+    defer = 0
+    for k in range(n):
+        pick = 0
+        if defer < cap:
+            horizon = arrival[pend[0]] + slack_ns
+            for j in range(min(window, len(pend))):
+                idx = pend[j]
+                if (arrival[idx] <= horizon and
+                        open_row.get(int(bank[idx]), -1) == int(row[idx])):
+                    pick = j
+                    break
+        idx = pend.pop(pick)
+        defer = defer + 1 if pick > 0 else 0
+        open_row[int(bank[idx])] = int(row[idx])
+        order[k] = idx
+    return Trace(arrival[order], bank[order], row[order], wr[order])
+
+
+def replay_one(arrival, bank, row, is_write, valid, tp_row, closed,
+               n_banks: int = 8, mlp_window: int = 8):
+    """Replay one trace under one stacked timing row and page policy.
+
+    arrival/bank/row/is_write: [N] request stream; `valid`: [N] mask
+    (False entries are padding — they leave the controller state and
+    the latency statistics untouched, so differently sized traces can
+    share one batched grid).  `tp_row`: [6] `TimingParams.as_row`;
+    `closed`: scalar bool (auto-precharge page policy).  Returns
+    (per-request latency [N] with zeros at padding, total runtime).
 
     `mlp_window` models the CPU's bounded memory-level parallelism as a
     closed loop: request i cannot issue before request i-window
     completed (an out-of-order core stalls once its miss buffers fill),
     which keeps the queue bounded instead of saturating open-loop."""
-    trcd, tras, trp, twr, tcl = (tp.trcd, tp.tras, tp.trp, tp.twr, tp.tcl)
+    trcd, tras, twr, trp, tcl = (tp_row[0], tp_row[1], tp_row[2],
+                                 tp_row[3], tp_row[5])
 
     class S(NamedTuple):
         open_row: jnp.ndarray      # [B] (-1 = precharged)
@@ -77,7 +172,7 @@ def simulate(trace: Trace, tp: TimingParams, n_banks: int = 8,
         idx: jnp.ndarray           # scalar request counter
 
     def step(s: S, req):
-        t, b, r, w = req
+        t, b, r, w, v = req
         gate = s.done_ring[s.idx % mlp_window]     # i-window completion
         start = jnp.maximum(jnp.maximum(t, s.ready[b]), gate)
         is_hit = s.open_row[b] == r
@@ -95,18 +190,27 @@ def simulate(trace: Trace, tp: TimingParams, n_banks: int = 8,
             jnp.where(is_empty, start + trcd, conflict_start + trp + trcd))
         done = data_start + tcl
         wr_done_new = jnp.where(w, done + twr, s.wr_done[b])
+        # closed-page: auto-precharge after the burst — the row is never
+        # left open and the bank re-opens only after the precharge
+        # (which itself waits out tRAS-from-ACT and write recovery)
+        pre_start = jnp.maximum(jnp.maximum(done, act_time_new + tras),
+                                wr_done_new)
+        ready_new = jnp.where(closed, pre_start + trp, done)
+        row_latched = jnp.where(closed, -1, r)
 
-        s2 = S(open_row=s.open_row.at[b].set(r),
+        s2 = S(open_row=s.open_row.at[b].set(row_latched),
                act_time=s.act_time.at[b].set(act_time_new),
-               wr_done=s.wr_done.at[b].set(
-                   jnp.where(w, wr_done_new, s.wr_done[b])),
-               ready=s.ready.at[b].set(done),
+               wr_done=s.wr_done.at[b].set(wr_done_new),
+               ready=s.ready.at[b].set(ready_new),
                done_ring=s.done_ring.at[s.idx % mlp_window].set(done),
                idx=s.idx + 1)
+        # padding: keep every state component as-is and emit zero latency
+        s3 = jax.tree_util.tree_map(
+            lambda new, old: jnp.where(v, new, old), s2, s)
         # latency from *eligibility* (the closed-loop gate), not from the
         # nominal trace timestamp — under saturation the backlog belongs
         # to the CPU-side stall model, not to each DRAM access
-        return s2, done - jnp.maximum(t, gate)
+        return s3, jnp.where(v, done - jnp.maximum(t, gate), 0.0)
 
     s0 = S(open_row=jnp.full((n_banks,), -1, jnp.int32),
            act_time=jnp.zeros((n_banks,)),
@@ -115,11 +219,29 @@ def simulate(trace: Trace, tp: TimingParams, n_banks: int = 8,
            done_ring=jnp.zeros((mlp_window,)),
            idx=jnp.zeros((), jnp.int32))
     s_end, lat = jax.lax.scan(step, s0,
-                              (trace.arrival, trace.bank, trace.row,
-                               trace.is_write))
+                              (arrival, bank, row, is_write, valid))
+    # runtime includes the trailing write-recovery window: the module is
+    # busy until the last write has restored, not just until last data
+    total = jnp.maximum(s_end.ready.max(), s_end.wr_done.max())
+    return lat, total
+
+
+def simulate(trace: Trace, tp: TimingParams, n_banks: int = 8,
+             mlp_window: int = 8,
+             policy: Policy = OPEN_FCFS) -> dict[str, jnp.ndarray]:
+    """Replay one trace under one set of timing parameters.  Returns
+    mean/percentile latency and total runtime.
+
+    Thin single-item shim over the batched `sim_engine.SimEngine` path
+    (a [1 trace x 1 policy x 1 timing row] campaign), so the scalar and
+    batched replays share one code path bit-for-bit."""
+    from repro.core import sim_engine
+    res = sim_engine.default_engine().run(sim_engine.SimSpec(
+        traces=(trace,), timings=tp, policies=(policy,),
+        n_banks=n_banks, mlp_window=mlp_window))
     return {
-        "mean_latency_ns": lat.mean(),
-        "p99_latency_ns": jnp.percentile(lat, 99),
-        "total_ns": s_end.ready.max(),
-        "latencies": lat,
+        "mean_latency_ns": res.mean_latency_ns[0, 0, 0],
+        "p99_latency_ns": res.p99_latency_ns[0, 0, 0],
+        "total_ns": res.total_ns[0, 0, 0],
+        "latencies": res.latencies[0, 0, 0],
     }

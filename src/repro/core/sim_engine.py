@@ -1,0 +1,220 @@
+"""Batched trace-replay campaigns: the real-system evaluation (paper
+Sec. 6, Fig. 4) as ONE vmapped/padded `lax.scan` dispatch.
+
+Mirrors the `MarginEngine` design (`repro.core.sweep`) on the system
+side: a `SimSpec` declares the campaign axes —
+
+  * traces    — any number of request streams, padded to one length
+                with a validity mask,
+  * policies  — memory-controller scheduling policies
+                (`dram_sim.Policy`: open/closed page, FR-FCFS-lite
+                reordering window),
+  * timings   — stacked timing-parameter rows
+                (`TimingParams.as_row` / `timing.stack_timing`),
+
+and `SimEngine` compiles the whole (T x P x S) grid into a single
+jitted, triple-vmapped replay of `dram_sim.replay_one`, returning a
+structured `SimResult` of mean/p99 latency, runtime and the raw
+latency grid.  `dram_sim.simulate` is the [1 x 1 x 1] shim over this
+path, so scalar and batched replays agree bit-for-bit.
+
+`dispatch_count` increments once per replay launch — evaluation
+campaigns are expected to cost O(1) dispatches regardless of the
+number of workloads, timing sets or policies (the call-count spy in
+tests/test_dram_sim.py pins this down).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import timing as T
+from repro.core.dram_sim import (OPEN_FCFS, Policy, Trace, frfcfs_reorder,
+                                 replay_one)
+
+
+def _as_rows(timings) -> np.ndarray:
+    """Normalize the timing axis to a [S, 6] stacked-row matrix."""
+    if isinstance(timings, T.TimingParams):
+        return timings.as_row()[None, :]
+    if isinstance(timings, (list, tuple)):
+        return T.stack_timing(timings)
+    arr = np.asarray(timings, np.float32)
+    if arr.ndim == 1:
+        arr = arr[None, :]
+    assert arr.ndim == 2 and arr.shape[1] == 6, arr.shape
+    return arr
+
+
+@dataclasses.dataclass(frozen=True)
+class SimSpec:
+    """A declarative trace-replay campaign: every trace runs under every
+    policy and every timing row.  `traces` is a tuple of `Trace`s (of
+    any lengths — shorter ones are padded), or a single `Trace` whose
+    fields carry a leading batch axis."""
+
+    traces: tuple[Trace, ...]
+    timings: np.ndarray                      # [S, 6] stacked rows
+    policies: tuple[Policy, ...] = (OPEN_FCFS,)
+    n_banks: int = 8
+    mlp_window: int = 8
+
+    def __post_init__(self):
+        tr = self.traces
+        if isinstance(tr, Trace):
+            tr = (tuple(Trace(*(np.asarray(f)[i] for f in tr))
+                        for i in range(np.asarray(tr.arrival).shape[0]))
+                  if np.asarray(tr.arrival).ndim == 2 else (tr,))
+        object.__setattr__(self, "traces", tuple(tr))
+        object.__setattr__(self, "timings", _as_rows(self.timings))
+        object.__setattr__(self, "policies", tuple(self.policies))
+        assert self.traces and self.policies, "empty campaign"
+
+    @classmethod
+    def single(cls, trace: Trace, tp: T.TimingParams,
+               policy: Policy = OPEN_FCFS, **kw) -> "SimSpec":
+        return cls(traces=(trace,), timings=tp, policies=(policy,), **kw)
+
+    @property
+    def shape(self) -> tuple[int, int, int]:
+        return len(self.traces), len(self.policies), self.timings.shape[0]
+
+    # ------------------------------------------------------------ packing
+    def pack(self):
+        """Pad the traces into dense [T, P, N] request arrays (the policy
+        axis materializes FR-FCFS-lite issue orders) plus the [T, N]
+        validity mask and the per-policy closed-page flags."""
+        tr, pol = self.traces, self.policies
+        lens = [int(np.asarray(t.arrival).shape[0]) for t in tr]
+        n = max(lens)
+        tp_ = (len(tr), len(pol))
+        arrival = np.zeros(tp_ + (n,), np.float32)
+        bank = np.zeros(tp_ + (n,), np.int32)
+        row = np.zeros(tp_ + (n,), np.int32)
+        is_write = np.zeros(tp_ + (n,), bool)
+        valid = np.zeros((len(tr), n), bool)
+        for i, t in enumerate(tr):
+            valid[i, :lens[i]] = True
+            reordered: dict = {}
+            for j, p in enumerate(pol):
+                # closed-page auto-precharges after every access, so the
+                # row-hit promotion FR-FCFS-lite optimizes for cannot
+                # exist — keep FCFS order there; the O(N*window) Python
+                # reorder is cached per (window, slack) so policies
+                # sharing a reorder pay it once per trace
+                key = (None if p.closed or p.reorder_window <= 1 else
+                       (p.reorder_window, p.reorder_slack_ns))
+                if key not in reordered:
+                    reordered[key] = (t if key is None else
+                                      frfcfs_reorder(t, *key))
+                t2 = reordered[key]
+                arrival[i, j, :lens[i]] = np.asarray(t2.arrival)
+                bank[i, j, :lens[i]] = np.asarray(t2.bank)
+                row[i, j, :lens[i]] = np.asarray(t2.row)
+                is_write[i, j, :lens[i]] = np.asarray(t2.is_write)
+        closed = np.array([p.closed for p in pol])
+        return arrival, bank, row, is_write, valid, closed
+
+
+@dataclasses.dataclass(frozen=True)
+class SimResult:
+    """Result grid of one campaign; all arrays lead with [T, P, S] =
+    (traces, policies, timing rows).  `latencies` is padded to the
+    longest trace — mask with `valid` before reducing yourself."""
+
+    spec: SimSpec
+    mean_latency_ns: np.ndarray     # [T, P, S]
+    p99_latency_ns: np.ndarray      # [T, P, S]
+    total_ns: np.ndarray            # [T, P, S]
+    latencies: np.ndarray           # [T, P, S, N] (0 at padding)
+    valid: np.ndarray               # [T, N]
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1))
+def _replay_grid(n_banks, mlp_window, arrival, bank, row, is_write,
+                 valid, timings, closed):
+    """ONE dispatch: replay every (trace, policy, timing row) cell.
+
+    arrival/bank/row/is_write: [T, P, N]; valid: [T, N] (shared across
+    policies — reordering permutes only the valid prefix); timings:
+    [S, 6]; closed: [P] bool.  Returns the raw latency grid
+    [T, P, S, N] and total runtime [T, P, S] (an exact max reduction,
+    so its in-dispatch order cannot perturb bits).
+    """
+    def one(a, b, r, w, v, tp, c):
+        return replay_one(a, b, r, w, v, tp, c, n_banks, mlp_window)
+
+    f_s = jax.vmap(one, in_axes=(None, None, None, None, None, 0, None))
+    f_ps = jax.vmap(f_s, in_axes=(0, 0, 0, 0, None, None, 0))
+    f_tps = jax.vmap(f_ps, in_axes=(0, 0, 0, 0, 0, None, None))
+    return f_tps(arrival, bank, row, is_write, valid, timings, closed)
+
+
+def _masked_stats(lat: np.ndarray, valid: np.ndarray):
+    """Masked mean / interpolated p99 over the last axis, computed
+    host-side in numpy: per-row pairwise summation depends only on the
+    row length, so a [T, P, S, N] grid and the [1, 1, 1, N] shim give
+    bit-identical statistics (XLA's batched reduces do not).  The mean
+    reduces each trace's VALID PREFIX, not the zero-padded row — numpy's
+    pairwise partitioning over a padded length differs from the
+    unpadded sum, so summing padding (even zeros) would only be
+    coincidentally bit-equal."""
+    v = valid[:, None, None, :]                      # [T, 1, 1, N]
+    cnt = valid.sum(-1).astype(np.float32)[:, None, None]
+    mean = np.empty(lat.shape[:-1], np.float32)
+    for t in range(lat.shape[0]):                    # padding is a suffix
+        c = int(valid[t].sum())
+        mean[t] = lat[t, ..., :c].sum(-1, dtype=np.float32) / np.float32(c)
+    # sorting pads to +inf, so the first `cnt` slots equal the sorted
+    # valid prefix and interpolating below them is structurally exact
+    s = np.sort(np.where(v, lat, np.inf), axis=-1)
+    q = (np.float32(0.99) * (cnt - 1.0)).astype(np.float32)
+    lo = np.floor(q).astype(np.int64)
+    hi = np.ceil(q).astype(np.int64)
+    frac = q - lo.astype(np.float32)        # keep the whole path float32
+    vlo = np.take_along_axis(
+        s, np.broadcast_to(lo[..., None], s.shape[:-1] + (1,)), -1)[..., 0]
+    vhi = np.take_along_axis(
+        s, np.broadcast_to(hi[..., None], s.shape[:-1] + (1,)), -1)[..., 0]
+    return mean, vlo + (vhi - vlo) * frac
+
+
+@dataclasses.dataclass
+class SimEngine:
+    """Facade that compiles a `SimSpec` into one replay dispatch."""
+
+    dispatch_count: int = 0
+
+    def run(self, spec: SimSpec) -> SimResult:
+        arrival, bank, row, is_write, valid, closed = spec.pack()
+        self.dispatch_count += 1
+        lat, total = _replay_grid(
+            spec.n_banks, spec.mlp_window, jnp.asarray(arrival),
+            jnp.asarray(bank), jnp.asarray(row), jnp.asarray(is_write),
+            jnp.asarray(valid), jnp.asarray(spec.timings),
+            jnp.asarray(closed))
+        lat = np.asarray(lat)
+        mean, p99 = _masked_stats(lat, valid)
+        return SimResult(spec=spec, mean_latency_ns=mean,
+                         p99_latency_ns=p99, total_ns=np.asarray(total),
+                         latencies=lat, valid=valid)
+
+
+_DEFAULT: SimEngine | None = None
+
+
+def default_engine() -> SimEngine:
+    """Shared engine used by the `dram_sim.simulate` shim."""
+    global _DEFAULT
+    if _DEFAULT is None:
+        _DEFAULT = SimEngine()
+    return _DEFAULT
+
+
+__all__ = ["Policy", "OPEN_FCFS", "SimSpec", "SimResult", "SimEngine",
+           "default_engine"]

@@ -40,6 +40,19 @@ class TimingParams:
         return jnp.array([self.trcd, self.tras, self.twr, self.trp,
                           self.trefi], dtype=jnp.float32)
 
+    def as_row(self) -> np.ndarray:
+        """Stacked-row layout consumed by the batched DRAM simulator
+        (`repro.core.sim_engine`): (trcd, tras, twr, trp, trefi, tcl)."""
+        return np.array([self.trcd, self.tras, self.twr, self.trp,
+                         self.trefi, self.tcl], dtype=np.float32)
+
+    @classmethod
+    def from_row(cls, row) -> "TimingParams":
+        """Inverse of `as_row` (accepts any [>=6] float row)."""
+        r = np.asarray(row, np.float64)
+        return cls(trcd=float(r[0]), tras=float(r[1]), twr=float(r[2]),
+                   trp=float(r[3]), trefi=float(r[4]), tcl=float(r[5]))
+
     def read_sum(self) -> float:
         """Latency sum used for the read test (Fig. 3c): tRCD+tRAS+tRP."""
         return self.trcd + self.tras + self.trp
@@ -62,6 +75,12 @@ DDR3_1600 = TimingParams(trcd=13.75, tras=35.0, twr=15.0, trp=13.75)
 # The timing set used for the paper's real-system evaluation at 55C
 # (Sec. 6): reductions of 27%/32%/33%/18% for tRCD/tRAS/tWR/tRP.
 ALDRAM_55C_EVAL = DDR3_1600.scaled(1 - 0.27, 1 - 0.32, 1 - 0.33, 1 - 0.18)
+
+
+def stack_timing(params: "Sequence[TimingParams]") -> np.ndarray:
+    """Stack timing-parameter sets into the [S, 6] row matrix a batched
+    replay campaign sweeps in one dispatch (see `as_row` for columns)."""
+    return np.stack([p.as_row() for p in params], axis=0)
 
 
 def _down_grid(standard: float, lo: float, step: float = TIMING_STEP_NS) -> np.ndarray:

@@ -1,0 +1,290 @@
+"""Batched SimEngine / dram_sim tests: padded-grid replay vs the
+per-trace shim (bit-for-bit), timing monotonicity, exact service-cost
+anchors, the scheduling-policy axis, and the dispatch-count invariant
+for the Fig. 4 evaluation and the profiled-table system closure."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dram_sim, perf_model, sim_engine
+from repro.core.dram_sim import OPEN_FCFS, Policy, Trace
+from repro.core.sim_engine import SimEngine, SimSpec
+from repro.core.timing import (ALDRAM_55C_EVAL, DDR3_1600, TimingParams,
+                               stack_timing)
+
+
+def synth(seed=0, n=512, **kw):
+    return dram_sim.synth_trace(jax.random.PRNGKey(seed), n, **kw)
+
+
+@pytest.fixture(scope="module")
+def grid():
+    """A padded campaign: three trace lengths x three timing rows."""
+    traces = (synth(0, 512), synth(1, 300, row_hit=0.2),
+              synth(2, 401, write_frac=0.6))
+    rows = [DDR3_1600, ALDRAM_55C_EVAL, DDR3_1600.scaled(0.9, 0.9, 0.9, 0.9)]
+    eng = SimEngine()
+    res = eng.run(SimSpec(traces=traces, timings=stack_timing(rows)))
+    return traces, rows, res
+
+
+class TestBatchedEqualsSingle:
+    def test_bit_for_bit_vs_per_trace_simulate(self, grid):
+        """(1) every (trace, timing) cell of the padded batched grid
+        equals the single-item `simulate` shim, bitwise — including the
+        differently sized traces that exercise the validity mask."""
+        traces, rows, res = grid
+        for ti, trace in enumerate(traces):
+            n = int(trace.arrival.shape[0])
+            for si, tp in enumerate(rows):
+                one = dram_sim.simulate(trace, tp)
+                assert res.mean_latency_ns[ti, 0, si] == \
+                    np.asarray(one["mean_latency_ns"])
+                assert res.p99_latency_ns[ti, 0, si] == \
+                    np.asarray(one["p99_latency_ns"])
+                assert res.total_ns[ti, 0, si] == np.asarray(one["total_ns"])
+                assert np.array_equal(res.latencies[ti, 0, si, :n],
+                                      np.asarray(one["latencies"]))
+                assert (res.latencies[ti, 0, si, n:] == 0.0).all()
+
+    def test_masked_stats_prefix_exact_on_hostile_data(self):
+        """The padded-grid stats reduce each trace's valid prefix, so
+        they equal the unpadded row even for latencies with full
+        float32 mantissas (summing zero padding would only match by
+        coincidence of numpy's pairwise partitioning)."""
+        rng = np.random.default_rng(0)
+        lat = rng.random((2, 1, 1, 512)).astype(np.float32) * 100.0
+        valid = np.ones((2, 512), bool)
+        valid[1, 300:] = False
+        m, p = sim_engine._masked_stats(lat, valid)
+        m1, p1 = sim_engine._masked_stats(
+            np.ascontiguousarray(lat[1:, :, :, :300]), valid[1:, :300])
+        assert m[1, 0, 0] == m1[0, 0, 0]
+        assert p[1, 0, 0] == p1[0, 0, 0]
+        assert m.dtype == np.float32 and p.dtype == np.float32
+
+    def test_batched_trace_input(self):
+        """A single `Trace` with a leading batch axis is accepted."""
+        tb = perf_model.trace_batch(n=64, seed=0)
+        spec = SimSpec(traces=tb, timings=DDR3_1600)
+        assert spec.shape == (70, 1, 1)
+
+
+class TestTimingSemantics:
+    def test_monotone_tighter_never_slower(self, grid):
+        """(2) tighter timings never increase mean latency."""
+        traces, _, _ = grid
+        eng = SimEngine()
+        rows = [DDR3_1600] + [DDR3_1600.scaled(f, f, f, f)
+                              for f in (0.95, 0.85, 0.75, 0.65)]
+        res = eng.run(SimSpec(traces=traces, timings=stack_timing(rows)))
+        assert (np.diff(res.mean_latency_ns, axis=-1) <= 1e-5).all()
+
+    def test_pure_row_hits_cost_exactly_tcl(self):
+        """(3) an idle same-row stream: first access pays the ACT
+        (tRCD + tCL), every later one exactly tCL."""
+        n = 64
+        t = Trace(arrival=jnp.arange(n) * 1000.0,
+                  bank=jnp.zeros(n, jnp.int32), row=jnp.zeros(n, jnp.int32),
+                  is_write=jnp.zeros(n, bool))
+        lat = np.asarray(dram_sim.simulate(t, DDR3_1600)["latencies"])
+        assert lat[0] == DDR3_1600.trcd + DDR3_1600.tcl
+        assert np.array_equal(lat[1:], np.full(n - 1, DDR3_1600.tcl,
+                                               np.float32))
+
+    def test_total_ns_includes_write_recovery(self):
+        """Satellite: runtime covers the trailing tWR window, not just
+        the last data beat."""
+        t = Trace(arrival=jnp.zeros(1), bank=jnp.zeros(1, jnp.int32),
+                  row=jnp.zeros(1, jnp.int32), is_write=jnp.ones(1, bool))
+        out = dram_sim.simulate(t, DDR3_1600)
+        expect = DDR3_1600.trcd + DDR3_1600.tcl + DDR3_1600.twr
+        assert float(out["total_ns"]) == expect
+        assert float(out["total_ns"]) > DDR3_1600.trcd + DDR3_1600.tcl
+
+
+class TestPolicyAxis:
+    def test_closed_page_kills_row_hits(self):
+        """Auto-precharge: the idle same-row stream pays the full ACT
+        on every access instead of hitting the open row."""
+        n = 64
+        t = Trace(arrival=jnp.arange(n) * 1000.0,
+                  bank=jnp.zeros(n, jnp.int32), row=jnp.zeros(n, jnp.int32),
+                  is_write=jnp.zeros(n, bool))
+        out = dram_sim.simulate(t, DDR3_1600, policy=Policy(page="closed"))
+        lat = np.asarray(out["latencies"])
+        assert np.array_equal(
+            lat, np.full(n, DDR3_1600.trcd + DDR3_1600.tcl, np.float32))
+
+    def test_closed_page_slower_on_high_locality(self):
+        t = synth(3, 512, row_hit=0.9)
+        eng = SimEngine()
+        res = eng.run(SimSpec(traces=(t,), timings=DDR3_1600,
+                              policies=(OPEN_FCFS, Policy(page="closed"))))
+        assert res.mean_latency_ns[0, 1, 0] > res.mean_latency_ns[0, 0, 0]
+
+    def test_frfcfs_recovers_interleaved_conflicts(self):
+        """Row-interleaved same-bank stream: FCFS conflicts on every
+        access, a small reorder window recovers most of the locality."""
+        n = 256
+        t = Trace(arrival=jnp.arange(n) * 5.0, bank=jnp.zeros(n, jnp.int32),
+                  row=jnp.asarray(np.arange(n) % 2, jnp.int32),
+                  is_write=jnp.zeros(n, bool))
+        eng = SimEngine()
+        res = eng.run(SimSpec(traces=(t,), timings=DDR3_1600,
+                              policies=(OPEN_FCFS, Policy(reorder_window=4))))
+        fcfs, frf = res.mean_latency_ns[0, :, 0]
+        assert frf < 0.6 * fcfs, (fcfs, frf)
+
+    def test_closed_page_keeps_fcfs_order(self):
+        """Row-hit promotion is meaningless under auto-precharge: a
+        closed-page policy with a reorder window replays FCFS order."""
+        t = synth(5, 256)
+        eng = SimEngine()
+        res = eng.run(SimSpec(
+            traces=(t,), timings=DDR3_1600,
+            policies=(Policy(page="closed"),
+                      Policy(page="closed", reorder_window=8))))
+        assert np.array_equal(res.mean_latency_ns[0, 0],
+                              res.mean_latency_ns[0, 1])
+
+    def test_reorder_preserves_requests(self):
+        t = synth(4, 256)
+        t2 = dram_sim.frfcfs_reorder(t, window=8)
+        a = np.stack([np.asarray(f) for f in t], -1)
+        b = np.stack([np.asarray(f) for f in t2], -1)
+        assert np.array_equal(a[np.lexsort(a.T)], b[np.lexsort(b.T)])
+        assert not np.array_equal(a, b)      # it did reorder something
+
+
+class TestEvaluateBatched:
+    """Acceptance: Fig. 4 over 35 workloads x 2 core modes x N timing
+    sets costs <= 2 traced dispatches and matches the per-call path."""
+
+    def _spies(self, monkeypatch):
+        calls = {"synth": 0, "replay": 0}
+        real_synth = perf_model._synth_batch
+        real_replay = sim_engine._replay_grid
+
+        def spy_synth(*a, **k):
+            calls["synth"] += 1
+            return real_synth(*a, **k)
+
+        def spy_replay(*a, **k):
+            calls["replay"] += 1
+            return real_replay(*a, **k)
+
+        monkeypatch.setattr(perf_model, "_synth_batch", spy_synth)
+        monkeypatch.setattr(sim_engine, "_replay_grid", spy_replay)
+        return calls
+
+    def test_two_dispatches_total(self, monkeypatch):
+        calls = self._spies(monkeypatch)
+        res = perf_model.evaluate(n=256)
+        assert calls["synth"] + calls["replay"] <= 2, calls
+        assert res["dispatches"]["total"] == 2
+
+    def test_extra_timing_rows_are_free(self, monkeypatch):
+        """N timing sets ride the same two dispatches."""
+        calls = self._spies(monkeypatch)
+        rows = stack_timing([DDR3_1600.scaled(f, f, f, f)
+                             for f in (1.0, 0.9, 0.8, 0.7, 0.6)])
+        em = perf_model.evaluate_many(rows, n=256)
+        assert calls == {"synth": 1, "replay": 1}
+        assert em["mean_latency_ns"].shape == (2, 35, 1, 5)
+
+    def test_matches_per_call_path_bit_for_bit(self):
+        """The batched evaluate reproduces the old one-simulate-per-
+        (workload, mode, timing) procedure exactly."""
+        res = perf_model.evaluate(n=256)
+        key = jax.random.PRNGKey(0)
+        for multi in (False, True):
+            tag = "multi" if multi else "single"
+            for i, w in enumerate(perf_model.WORKLOADS):
+                k = jax.random.fold_in(key, i + (1000 if multi else 0))
+                old = perf_model.workload_speedup(
+                    w, DDR3_1600, ALDRAM_55C_EVAL, k, 256, multi)
+                assert res[tag][w.name] == old, (tag, w.name)
+
+    def test_trace_batch_matches_per_call_traces(self):
+        tb = perf_model.trace_batch(n=128, seed=0)
+        key = jax.random.PRNGKey(0)
+        w = perf_model.WORKLOADS[5]
+        ref = perf_model._trace_for(w, jax.random.fold_in(key, 5), 128, False)
+        for bf, rf in zip(tb, ref):
+            assert np.array_equal(np.asarray(bf)[5], np.asarray(rf))
+
+
+class TestProfiledSystemClosure:
+    """Acceptance: evaluate_system builds its timing rows from the
+    profiled TimingTable, not the hard-coded 55C constants."""
+
+    @pytest.fixture(scope="class")
+    def controller(self, small_pop):
+        from repro.core.aldram import ALDRAMController
+        from repro.core.calibration import CALIBRATED_CONSTANTS
+        from repro.core.profiler import Profiler
+        ctrl = ALDRAMController(
+            Profiler(constants=CALIBRATED_CONSTANTS, grid_step=2.5,
+                     impl="ref"),
+            temp_bins=(55.0, 70.0, 85.0))
+        ctrl.profile(small_pop)
+        return ctrl
+
+    def test_rows_come_from_profiled_table(self, controller, small_pop):
+        res = controller.evaluate_system(small_pop, n=128)
+        tbl = controller.table
+        assert np.array_equal(res["rows"][0], DDR3_1600.as_row())
+        for si in range(len(res["temps"])):
+            assert np.array_equal(res["rows"][1 + si, :4],
+                                  tbl.params[:, si, :].max(axis=0))
+        # per-temperature speedups exist and degrade (weakly) when hot
+        sp = [res["per_temp"][t]["multi_all_gmean"] for t in res["temps"]]
+        assert len(sp) == len(controller.temp_bins)
+        assert sp[0] >= sp[-1] - 1e-9
+
+    def test_lookup_many_matches_scalar_lookup(self, controller):
+        tbl = controller.table
+        rng = np.random.default_rng(0)
+        mods = rng.integers(0, tbl.params.shape[0], 32)
+        temps = rng.uniform(30.0, 95.0, 32)      # includes above-hottest
+        rows = tbl.lookup_many(mods, temps)
+        for k in range(32):
+            assert np.array_equal(rows[k],
+                                  tbl.lookup(int(mods[k]),
+                                             float(temps[k])).as_row())
+        # broadcasting works both ways: one module x many temps, and
+        # many modules x one temp
+        many_t = tbl.lookup_many(2, np.array([45.0, 85.0, 95.0]))
+        assert many_t.shape == (3, 6)
+        assert np.array_equal(many_t[0], tbl.lookup(2, 45.0).as_row())
+        many_m = tbl.lookup_many(np.arange(4), 55.0)
+        assert many_m.shape == (4, 6)
+
+    def test_multi_policy_summaries(self, controller, small_pop):
+        """Every policy of the campaign gets its own per-temperature
+        summary; per_temp is the first policy's view."""
+        res = controller.evaluate_system(
+            small_pop, temps=(55.0,), n=128,
+            policies=(OPEN_FCFS, Policy(page="closed")))
+        assert len(res["per_policy"]) == 2
+        assert res["per_temp"] == res["per_policy"][0]
+        for d in res["per_policy"]:
+            assert 55.0 in d and "multi_all_gmean" in d[55.0]
+
+    def test_system_eval_is_two_more_dispatches(self, controller,
+                                                small_pop, monkeypatch):
+        calls = {"replay": 0}
+        real = sim_engine._replay_grid
+
+        def spy(*a, **k):
+            calls["replay"] += 1
+            return real(*a, **k)
+
+        monkeypatch.setattr(sim_engine, "_replay_grid", spy)
+        controller.evaluate_system(small_pop, n=128)
+        assert calls["replay"] == 1
