@@ -1,14 +1,67 @@
 """Benchmark harness: one function per paper table/figure plus the
-framework/roofline benches.  Prints ``name,us_per_call,derived`` CSV.
+framework/roofline benches.  Prints ``name,us_per_call,derived`` CSV
+and writes a machine-readable ``BENCH_<name>.json`` summary per bench
+(wall time, dispatch counts, headline stats) so the perf trajectory
+can be tracked across PRs (CI uploads them as workflow artifacts).
 
-  python -m benchmarks.run [--fast]
+  python -m benchmarks.run [--fast] [--only NAME] [--out-dir DIR]
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
+import time
 import traceback
+
+_MAX_DEPTH = 3
+_MAX_ITEMS = 24
+
+
+def _headline(obj, depth: int = 0):
+    """Scalar-only projection of a bench's result dict: keeps the
+    JSON-serializable headline numbers, drops arrays/traces/objects so
+    the summaries stay diff-friendly."""
+    if isinstance(obj, (bool, int, float, str)) or obj is None:
+        return obj
+    try:
+        import numpy as np
+        # numpy scalars are headline numbers too — convert BEFORE the
+        # depth cutoff so np.float32 and float survive identically
+        if isinstance(obj, np.generic):
+            return obj.item()
+    except Exception:  # noqa: BLE001
+        pass
+    if depth >= _MAX_DEPTH:
+        return None
+    if isinstance(obj, dict):
+        out = {}
+        for k, v in list(obj.items())[:_MAX_ITEMS]:
+            hv = _headline(v, depth + 1)
+            if hv is not None or v is None:
+                out[str(k)] = hv
+        return out or None
+    if isinstance(obj, (list, tuple)):
+        vals = [_headline(v, depth + 1) for v in obj[:_MAX_ITEMS]]
+        vals = [v for v in vals if v is not None]
+        return vals or None
+    return None
+
+
+def _write_summary(out_dir: str, name: str, wall_s: float, fast: bool,
+                   result, error: str | None = None) -> None:
+    summary = {"name": name, "wall_s": round(wall_s, 6), "fast": fast,
+               "error": error}
+    if isinstance(result, dict):
+        if "dispatches" in result:
+            summary["dispatches"] = _headline(result["dispatches"])
+        summary["headline"] = _headline(result)
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(summary, f, indent=1, sort_keys=True)
+        f.write("\n")
 
 
 def main() -> None:
@@ -16,11 +69,14 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true",
                     help="reduced population / fewer samples")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--out-dir", default=".",
+                    help="directory for the BENCH_<name>.json summaries")
     args = ap.parse_args()
 
     from benchmarks import (fig2_refresh, fig2_timing, fig3_population,
                             fig4_system, framework, multi_timing,
-                            power_bench, repeatability, roofline)
+                            power_bench, repeatability, roofline,
+                            thermal_bench)
 
     benches = {
         "fig2_refresh": fig2_refresh.run,
@@ -28,23 +84,31 @@ def main() -> None:
         "fig3_population": fig3_population.run,
         "fig4_system": fig4_system.run,
         "fig4_profiled": fig4_system.run_profiled,
+        "thermal_bench": thermal_bench.run,
         "power": power_bench.run,
         "repeatability": repeatability.run,
         "multi_timing": multi_timing.run,
         "framework": framework.run,
         "roofline": roofline.run,
     }
+    os.makedirs(args.out_dir, exist_ok=True)
     print("name,us_per_call,derived")
     failed = []
     for name, fn in benches.items():
         if args.only and name != args.only:
             continue
+        t0 = time.monotonic()
         try:
-            fn(fast=args.fast)
+            res = fn(fast=args.fast)
+            _write_summary(args.out_dir, name, time.monotonic() - t0,
+                           args.fast, res)
         except Exception as e:  # noqa: BLE001
             failed.append(name)
             print(f"{name},0,ERROR:{type(e).__name__}:{e}", flush=True)
             traceback.print_exc(file=sys.stderr)
+            _write_summary(args.out_dir, name, time.monotonic() - t0,
+                           args.fast, None,
+                           error=f"{type(e).__name__}: {e}")
     if failed:
         raise SystemExit(f"failed: {failed}")
 

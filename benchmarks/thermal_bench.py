@@ -1,0 +1,61 @@
+"""ThermalEngine benchmark: the ONLINE half of AL-DRAM (paper Sec. 4).
+
+Replays the full workload pool with the controller's bin-switching
+logic running inside the traced scan, under the stock dynamic thermal
+scenarios (steady / diurnal ramp / cooling failure / bursty), and
+reports three deployments per scenario:
+
+  * adaptive          — in-scan selection over the profiled table
+                        stack, with hysteresis,
+  * static-worst-case — one register set provisioned for the
+                        scenario's peak sensed temperature,
+  * oracle            — zero-hysteresis adaptive (upper bound).
+
+The whole campaign — 35 workloads x 2 core modes x (scenarios +
+oracle variants) x (adaptive + static brackets) — costs exactly THREE
+traced dispatches (one trace synthesis, one adaptive replay, one
+static replay); the ``dispatches=3`` field in the derived CSV column
+is asserted by CI.  The bench also asserts the acceptance bracket:
+adaptive >= static-worst-case on every dynamic scenario.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, population, profiler, timed
+
+
+def run(fast: bool = False) -> dict:
+    from repro.core import perf_model
+    from repro.core.aldram import ALDRAMController
+    from repro.core.sim_engine import SimEngine
+
+    pop = population(fast)
+    ctrl = ALDRAMController(profiler(fast))
+    engine = SimEngine()
+    s0 = perf_model.synth_dispatch_count
+    with timed() as t:
+        ctrl.profile(pop)
+        res = ctrl.evaluate_dynamic(pop, n=1024 if fast else 4096,
+                                    engine=engine)
+    dispatches = engine.dispatch_count + (perf_model.synth_dispatch_count
+                                          - s0)
+    per = res["per_scenario"]
+    # the acceptance bracket must hold for EVERY policy of the
+    # campaign, not just the headline view
+    for pd in res["per_policy"]:
+        for name, d in pd.items():
+            assert d["adaptive_gmean"] >= d["static_worst_gmean"] - 1e-9, \
+                (name, d)
+    parts = ["{}:adapt={:.1%}/static={:.1%}/oracle={:.1%}".format(
+        name, d["adaptive_gmean"], d["static_worst_gmean"],
+        d["oracle_gmean"]) for name, d in per.items()]
+    emit("thermal_adaptive_replay", t.us,
+         "|".join(parts) + f"|dispatches={dispatches}")
+    res["dispatches"] = {"total": dispatches}
+    return res
+
+
+if __name__ == "__main__":
+    import json
+    r = run(fast=True)
+    print(json.dumps(r["per_scenario"], indent=1))

@@ -19,6 +19,14 @@ Python-loop kernel calls anywhere.  `evaluate_system()` closes the
 loop on the system side: the profiled tables feed a batched
 `repro.core.sim_engine` campaign that produces a temperature-resolved
 Fig. 4 in two more dispatches.
+
+`evaluate_dynamic()` goes one step further and exercises the *online*
+half of the mechanism: the profiled per-bin table stack
+(`TimingTable.safe_stack`, JEDEC fallback row last) rides the replay
+dispatch itself, and the controller's bin-switching logic — sensing,
+conservative round-up, down-switch hysteresis, above-hottest-bin
+JEDEC fallback — runs inside the traced `lax.scan` per request, under
+dynamic thermal scenarios (`repro.core.thermal`).
 """
 
 from __future__ import annotations
@@ -33,6 +41,19 @@ from repro.core.sweep import Op, param_reductions
 from repro.core.variation import Population
 
 DEFAULT_TEMP_BINS = (45.0, 55.0, 65.0, 75.0, 85.0)
+
+
+def default_scenarios():
+    """The stock dynamic-ambient suite for `evaluate_dynamic` /
+    `benchmarks.thermal_bench`: steady (the degenerate near-static
+    case), a diurnal ramp spanning several bins, a cooling failure
+    stepping into the hot bins mid-trace, and a bursty square wave
+    hovering around a bin edge (the hysteresis stress)."""
+    from repro.core import thermal
+    return (thermal.steady(42.0),
+            thermal.diurnal(38.0, 72.0, period_ns=1.2e5),
+            thermal.cooling_failure(44.0, 28.0, at_ns=3.0e4),
+            thermal.bursty(42.0, 16.0, period_ns=6.0e4, duty=0.5))
 
 
 @dataclasses.dataclass
@@ -56,7 +77,13 @@ class TimingTable:
         """Vectorised batched selection: pairwise (module, temperature)
         queries -> [K, 6] stacked timing rows (`TimingParams.as_row`
         layout).  `np.searchsorted` picks the smallest profiled bin >=
-        temp; queries above the hottest bin fall back to JEDEC."""
+        temp (conservative rounding UP); queries ABOVE the hottest
+        profiled bin fall back to standard JEDEC timings — the
+        controller never extrapolates reduced timings past the
+        temperatures it actually verified.  The in-scan adaptive
+        replay (`dram_sim.replay_adaptive` over `safe_stack`) applies
+        the same two rules per request, plus a down-switch hysteresis
+        (see `safe_stack`)."""
         modules, temps_c = np.broadcast_arrays(
             np.atleast_1d(np.asarray(modules, np.int64)),
             np.atleast_1d(np.asarray(temps_c, np.float64)))
@@ -70,6 +97,40 @@ class TimingTable:
         rows[:, 4] = T.STANDARD_TREFI_MS
         rows[:, 5] = T.DDR3_1600.tcl
         return rows
+
+    def safe_stack(self) -> tuple[np.ndarray, np.ndarray]:
+        """The table stack the ADAPTIVE replay selects over in-scan:
+        ([bins + 1, 6] rows, [bins] edges).
+
+        Row b is the all-module-safe row of bin b (max over modules
+        per parameter: the slowest module governs a one-register-set
+        deployment, paper Sec. 6), additionally forced bin-monotone by
+        a running max over bins — a hotter bin never carries a smaller
+        parameter than a cooler one, so in-scan bin selection can only
+        relax timings as the module cools (monotone rows also make
+        "adaptive is never slower than static-worst-case" a structural
+        guarantee, not a statistical one).  The LAST row is the JEDEC
+        fallback selected above the hottest profiled bin — identical
+        semantics to `lookup_many`, and elementwise >= every profiled
+        row since profiling only ever reduces below standard.
+
+        Hysteresis rides next to this stack at replay time
+        (`thermal.ThermalConfig.hyst_c`): switching UP through these
+        rows is immediate — the reliability invariant must hold the
+        instant the sensed temperature crosses a bin edge — while
+        switching DOWN requires the temperature to fall the hysteresis
+        margin below the cooler bin's edge, so a module hovering on an
+        edge does not thrash the timing registers.
+        """
+        m = self.params.shape[0]
+        nb = len(self.temp_bins)
+        rows = np.empty((nb + 1, 6), np.float32)
+        mods = np.arange(m)
+        for bi, tc in enumerate(self.temp_bins):
+            rows[bi] = self.lookup_many(mods, np.full(m, tc)).max(axis=0)
+        rows[:nb] = np.maximum.accumulate(rows[:nb], axis=0)
+        rows[nb] = T.DDR3_1600.as_row()
+        return rows, np.asarray(self.temp_bins, np.float32)
 
 
 class ALDRAMController:
@@ -110,7 +171,8 @@ class ALDRAMController:
         return self.table.lookup(module, temp_c)
 
     # -------------------------------------------------------------- verify
-    def verify(self, pop: Population) -> bool:
+    def verify(self, pop: Population,
+               max_grid_elems: int = 8_000_000) -> bool:
         """The zero-error invariant (the paper's 33-day stress test,
         Sec. 6): for every module and every bin, the selected timings
         must be error-free at the bin's max temperature with the safe
@@ -132,7 +194,6 @@ class ALDRAMController:
         tbl = self.table
         m, b = tbl.params.shape[:2]
         cpm = int(np.prod(pop.cells.shape[1:4]))     # cells per module
-        max_grid_elems = 8_000_000
         g = max(1, min(m, int((max_grid_elems / (cpm * b)) ** 0.5)))
 
         cells = np.asarray(pop.flat_cells()).reshape(m, cpm, -1)
@@ -220,6 +281,41 @@ class ALDRAMController:
                 "workloads": em["workloads"], "per_temp": per_policy[0],
                 "per_policy": per_policy, "policies": policies,
                 "source": "profiled-table"}
+
+    # ----------------------------------------------------- dynamic closure
+    def evaluate_dynamic(self, pop: Population, scenarios=None,
+                         config=None, n: int = 4096, seed: int = 0,
+                         policies=None, engine=None) -> dict:
+        """The paper's actual mechanism, end to end: profile the
+        population, stack the per-bin all-module-safe rows
+        (`TimingTable.safe_stack`), and replay the workload pool with
+        the controller's bin-switching logic running INSIDE the traced
+        scan — per-request temperature sensing, conservative round-up,
+        hysteresis, JEDEC fallback — under a set of dynamic thermal
+        scenarios (`repro.core.thermal`), bracketed by the
+        static-worst-case and oracle deployments.
+
+        Unlike `evaluate_system` (one static row per pre-known
+        temperature bin), nothing here is pre-reduced: the profiled
+        `TimingTable` stack itself rides the dispatch and the replay
+        decides per request which row applies.  Still O(1) traced
+        dispatches (one synthesis, one adaptive replay, one static
+        replay) regardless of how many scenarios or policies ride the
+        campaign.
+        """
+        from repro.core import dram_sim, perf_model, thermal
+        if self.table is None:
+            self.profile(pop)
+        if scenarios is None:
+            scenarios = default_scenarios()
+        policies = policies or (dram_sim.OPEN_FCFS,)
+        rows, bins = self.table.safe_stack()
+        out = perf_model.evaluate_adaptive(
+            rows, bins, scenarios, config=config, n=n, seed=seed,
+            engine=engine, policies=policies)
+        out["source"] = "profiled-table-dynamic"
+        out["policies"] = policies
+        return out
 
     # ----------------------------------------------------------- reporting
     def average_reductions(self, temp_c: float,

@@ -22,6 +22,15 @@ of different lengths can be padded into one grid) and a scheduling
 `simulate(trace, tp)` remains as a thin single-item shim over that
 batched path.
 
+`replay_adaptive` is the closed-loop variant (paper Sec. 4's online
+mechanism): the `lax.scan` state additionally carries an RC thermal
+state (`repro.core.thermal`), and each request selects its timing row
+*inside the scan* — `searchsorted` over the stacked per-bin table rows
+at the currently sensed temperature, with up-immediate/down-hysteretic
+bin switching.  Both replays share the per-request service arithmetic
+(`_service`), so a constant-temperature scenario with activity heating
+disabled reproduces the static replay bit-for-bit.
+
 Scheduling-policy axis:
 
   * page policy — "open" leaves the row latched after an access
@@ -145,6 +154,70 @@ def frfcfs_reorder(trace: Trace, window: int, slack_ns: float = 30.0,
     return Trace(arrival[order], bank[order], row[order], wr[order])
 
 
+class BankState(NamedTuple):
+    """Controller state shared by the static and adaptive scans."""
+
+    open_row: jnp.ndarray      # [B] (-1 = precharged)
+    act_time: jnp.ndarray      # [B] last ACT issue time
+    wr_done: jnp.ndarray       # [B] time last write recovery ends
+    ready: jnp.ndarray         # [B] bank ready for next command
+    done_ring: jnp.ndarray     # [W] completion times, ring buffer
+    idx: jnp.ndarray           # scalar request counter
+
+
+def _bank_state0(n_banks: int, mlp_window: int) -> BankState:
+    return BankState(open_row=jnp.full((n_banks,), -1, jnp.int32),
+                     act_time=jnp.zeros((n_banks,)),
+                     wr_done=jnp.zeros((n_banks,)),
+                     ready=jnp.zeros((n_banks,)),
+                     done_ring=jnp.zeros((mlp_window,)),
+                     idx=jnp.zeros((), jnp.int32))
+
+
+def _service(s: BankState, t, b, r, w, trcd, tras, twr, trp, tcl,
+             closed, mlp_window: int):
+    """Service ONE request: the per-request timing arithmetic, shared
+    bit-for-bit between `replay_one` (timing scalars fixed for the
+    whole trace) and `replay_adaptive` (timing scalars gathered from
+    the in-scan bin selection).  Returns (next state, raw latency,
+    row-hit flag)."""
+    gate = s.done_ring[s.idx % mlp_window]     # i-window completion
+    start = jnp.maximum(jnp.maximum(t, s.ready[b]), gate)
+    is_hit = s.open_row[b] == r
+    is_empty = s.open_row[b] == -1
+
+    # conflict: precharge may start only after tRAS from ACT and
+    # after write recovery completes
+    pre_ok = jnp.maximum(s.act_time[b] + tras, s.wr_done[b])
+    conflict_start = jnp.maximum(start, pre_ok)
+    act_time_new = jnp.where(
+        is_hit, s.act_time[b],
+        jnp.where(is_empty, start + 0.0, conflict_start + trp))
+    data_start = jnp.where(
+        is_hit, start,
+        jnp.where(is_empty, start + trcd, conflict_start + trp + trcd))
+    done = data_start + tcl
+    wr_done_new = jnp.where(w, done + twr, s.wr_done[b])
+    # closed-page: auto-precharge after the burst — the row is never
+    # left open and the bank re-opens only after the precharge
+    # (which itself waits out tRAS-from-ACT and write recovery)
+    pre_start = jnp.maximum(jnp.maximum(done, act_time_new + tras),
+                            wr_done_new)
+    ready_new = jnp.where(closed, pre_start + trp, done)
+    row_latched = jnp.where(closed, -1, r)
+
+    s2 = BankState(open_row=s.open_row.at[b].set(row_latched),
+                   act_time=s.act_time.at[b].set(act_time_new),
+                   wr_done=s.wr_done.at[b].set(wr_done_new),
+                   ready=s.ready.at[b].set(ready_new),
+                   done_ring=s.done_ring.at[s.idx % mlp_window].set(done),
+                   idx=s.idx + 1)
+    # latency from *eligibility* (the closed-loop gate), not from the
+    # nominal trace timestamp — under saturation the backlog belongs
+    # to the CPU-side stall model, not to each DRAM access
+    return s2, done - jnp.maximum(t, gate), is_hit
+
+
 def replay_one(arrival, bank, row, is_write, valid, tp_row, closed,
                n_banks: int = 8, mlp_window: int = 8):
     """Replay one trace under one stacked timing row and page policy.
@@ -163,67 +236,108 @@ def replay_one(arrival, bank, row, is_write, valid, tp_row, closed,
     trcd, tras, twr, trp, tcl = (tp_row[0], tp_row[1], tp_row[2],
                                  tp_row[3], tp_row[5])
 
-    class S(NamedTuple):
-        open_row: jnp.ndarray      # [B] (-1 = precharged)
-        act_time: jnp.ndarray      # [B] last ACT issue time
-        wr_done: jnp.ndarray       # [B] time last write recovery ends
-        ready: jnp.ndarray         # [B] bank ready for next command
-        done_ring: jnp.ndarray     # [W] completion times, ring buffer
-        idx: jnp.ndarray           # scalar request counter
-
-    def step(s: S, req):
+    def step(s: BankState, req):
         t, b, r, w, v = req
-        gate = s.done_ring[s.idx % mlp_window]     # i-window completion
-        start = jnp.maximum(jnp.maximum(t, s.ready[b]), gate)
-        is_hit = s.open_row[b] == r
-        is_empty = s.open_row[b] == -1
-
-        # conflict: precharge may start only after tRAS from ACT and
-        # after write recovery completes
-        pre_ok = jnp.maximum(s.act_time[b] + tras, s.wr_done[b])
-        conflict_start = jnp.maximum(start, pre_ok)
-        act_time_new = jnp.where(
-            is_hit, s.act_time[b],
-            jnp.where(is_empty, start + 0.0, conflict_start + trp))
-        data_start = jnp.where(
-            is_hit, start,
-            jnp.where(is_empty, start + trcd, conflict_start + trp + trcd))
-        done = data_start + tcl
-        wr_done_new = jnp.where(w, done + twr, s.wr_done[b])
-        # closed-page: auto-precharge after the burst — the row is never
-        # left open and the bank re-opens only after the precharge
-        # (which itself waits out tRAS-from-ACT and write recovery)
-        pre_start = jnp.maximum(jnp.maximum(done, act_time_new + tras),
-                                wr_done_new)
-        ready_new = jnp.where(closed, pre_start + trp, done)
-        row_latched = jnp.where(closed, -1, r)
-
-        s2 = S(open_row=s.open_row.at[b].set(row_latched),
-               act_time=s.act_time.at[b].set(act_time_new),
-               wr_done=s.wr_done.at[b].set(wr_done_new),
-               ready=s.ready.at[b].set(ready_new),
-               done_ring=s.done_ring.at[s.idx % mlp_window].set(done),
-               idx=s.idx + 1)
+        s2, lat, _ = _service(s, t, b, r, w, trcd, tras, twr, trp, tcl,
+                              closed, mlp_window)
         # padding: keep every state component as-is and emit zero latency
         s3 = jax.tree_util.tree_map(
             lambda new, old: jnp.where(v, new, old), s2, s)
-        # latency from *eligibility* (the closed-loop gate), not from the
-        # nominal trace timestamp — under saturation the backlog belongs
-        # to the CPU-side stall model, not to each DRAM access
-        return s3, jnp.where(v, done - jnp.maximum(t, gate), 0.0)
+        return s3, jnp.where(v, lat, 0.0)
 
-    s0 = S(open_row=jnp.full((n_banks,), -1, jnp.int32),
-           act_time=jnp.zeros((n_banks,)),
-           wr_done=jnp.zeros((n_banks,)),
-           ready=jnp.zeros((n_banks,)),
-           done_ring=jnp.zeros((mlp_window,)),
-           idx=jnp.zeros((), jnp.int32))
-    s_end, lat = jax.lax.scan(step, s0,
+    s_end, lat = jax.lax.scan(step, _bank_state0(n_banks, mlp_window),
                               (arrival, bank, row, is_write, valid))
     # runtime includes the trailing write-recovery window: the module is
     # busy until the last write has restored, not just until last data
     total = jnp.maximum(s_end.ready.max(), s_end.wr_done.max())
     return lat, total
+
+
+class AdaptiveState(NamedTuple):
+    """`replay_adaptive` scan state: controller + thermal loop."""
+
+    bank: BankState
+    heat: jnp.ndarray          # [B] per-bank overheat above ambient, C
+    cur_bin: jnp.ndarray       # scalar int32, currently selected bin
+    t_prev: jnp.ndarray        # scalar, last request arrival (ns)
+
+
+def replay_adaptive(arrival, bank, row, is_write, valid, table, bins,
+                    scn_row, tcfg_row, closed,
+                    n_banks: int = 8, mlp_window: int = 8):
+    """Closed-loop replay: per-request in-scan timing-bin selection.
+
+    `table`: [S+1, 6] stacked timing rows — one per temperature bin
+    plus the JEDEC fallback row LAST (selected whenever the sensed
+    temperature exceeds the hottest profiled bin, mirroring
+    `aldram.TimingTable.lookup_many`).  `bins`: [S] ascending bin
+    edges (C).  `scn_row`: [thermal.SCN_COLS] ambient-scenario row;
+    `tcfg_row`: `thermal.ThermalConfig.as_row()`.
+
+    Per request the scan (1) decays the per-bank heat toward the
+    scenario ambient over the inter-arrival gap, (2) senses
+    ambient + summed bank overheat, (3) re-selects the timing bin via
+    `searchsorted` — UP-switches are immediate (reliability never
+    waits), DOWN-switches require the sensed temperature to fall the
+    hysteresis margin below the cooler bin's edge (no register
+    thrash), (4) services the request with the selected row's timings
+    (`_service`, shared with the static replay), and (5) deposits the
+    access energy of `repro.core.power` — a miss pays the ACT/PRE pair
+    plus the row-active window of the *selected* tRAS — as heat on the
+    accessed bank.
+
+    Returns (latency [N], total runtime, sensed temperature [N],
+    selected bin [N] int32 with -1 at padding, end-of-trace per-bank
+    overheat [B] in C — the bank-resolved footprint of the access
+    stream, so hot banks are attributable even though the module-level
+    sensor reads their sum).  With `c_heat = 0` and a steady scenario
+    this reduces to `replay_one` of the constant row, bit-for-bit."""
+    from repro.core.power import access_energy_from_terms
+    from repro.core.thermal import ambient_at
+    tau, c_heat, hyst_c = tcfg_row[0], tcfg_row[1], tcfg_row[2]
+    e_burst, e_act_pre, p_as = tcfg_row[3], tcfg_row[4], tcfg_row[5]
+    hyst = hyst_c * scn_row[8]                   # per-scenario scale
+
+    def step(s: AdaptiveState, req):
+        t, b, r, w, v = req
+        dt = jnp.maximum(t - s.t_prev, 0.0)
+        heat = s.heat * jnp.exp(-dt / tau)
+        sensed = ambient_at(scn_row, t) + heat.sum()
+        # conservative rounding UP (smallest bin edge >= sensed); the
+        # index len(bins) selects the JEDEC fallback row
+        up = jnp.searchsorted(bins, sensed, side="left")
+        # down-switch only once sensed has fallen `hyst` below the
+        # cooler bin's edge; up-switches bypass the hysteresis entirely
+        down = jnp.searchsorted(bins, sensed + hyst, side="left")
+        new_bin = jnp.maximum(up, jnp.minimum(s.cur_bin, down))
+        tp = table[new_bin]
+        s2b, lat, is_hit = _service(s.bank, t, b, r, w, tp[0], tp[1],
+                                    tp[2], tp[3], tp[5], closed,
+                                    mlp_window)
+        # closed loop: the heat deposit depends on the row-active
+        # window of the timings we just selected (same formula as the
+        # host-side power model, by construction)
+        miss = 1.0 - is_hit.astype(jnp.float32)
+        energy = access_energy_from_terms(e_burst, e_act_pre, p_as,
+                                          miss, tp[1])
+        s2 = AdaptiveState(bank=s2b,
+                           heat=heat.at[b].add(c_heat * energy),
+                           cur_bin=new_bin.astype(jnp.int32),
+                           t_prev=t + 0.0)
+        s3 = jax.tree_util.tree_map(
+            lambda new, old: jnp.where(v, new, old), s2, s)
+        return s3, (jnp.where(v, lat, 0.0),
+                    jnp.where(v, sensed, 0.0),
+                    jnp.where(v, new_bin.astype(jnp.int32), -1))
+
+    s0 = AdaptiveState(bank=_bank_state0(n_banks, mlp_window),
+                       heat=jnp.zeros((n_banks,)),
+                       cur_bin=jnp.zeros((), jnp.int32),
+                       t_prev=jnp.zeros(()))
+    s_end, (lat, temp, bin_sel) = jax.lax.scan(
+        step, s0, (arrival, bank, row, is_write, valid))
+    total = jnp.maximum(s_end.bank.ready.max(), s_end.bank.wr_done.max())
+    return lat, total, temp, bin_sel, s_end.heat
 
 
 def simulate(trace: Trace, tp: TimingParams, n_banks: int = 8,

@@ -8,11 +8,20 @@ AL-DRAM reduces E two ways: the shorter tRAS shrinks the row-active
 (IDD3N) window per miss, and the end-to-end speedup shrinks the
 background term (the paper's "power" figure is energy for the same
 work, which is why it tracks the speedup).
+
+The same decomposition drives the closed-loop thermal model
+(`repro.core.thermal` / `dram_sim.replay_adaptive`): each replayed
+access deposits `access_energy`-proportional heat on its bank, with
+the row-hit flag and the *selected* tRAS taken from the live replay
+state — `energy_terms` exports the (e_burst, e_act_pre,
+p_act_standby) triple the in-scan accounting consumes.
 """
 
 from __future__ import annotations
 
 import dataclasses
+
+import numpy as np
 
 from repro.core.timing import TimingParams, DDR3_1600, ALDRAM_55C_EVAL
 
@@ -28,9 +37,31 @@ class PowerParams:
     p_act_standby: float = 0.055     # per ns of row-active window
 
 
+def energy_terms(pw: PowerParams) -> np.ndarray:
+    """(e_burst, e_act_pre, p_act_standby) — the per-access energy
+    decomposition in the order the adaptive replay scan consumes it
+    (`thermal.ThermalConfig.as_row`)."""
+    return np.array([pw.e_burst, pw.e_act_pre, pw.p_act_standby],
+                    np.float32)
+
+
+def access_energy_from_terms(e_burst, e_act_pre, p_act_standby, miss,
+                             tras):
+    """Energy of one access from the decomposed terms.  Pure
+    arithmetic (no dtype/host assumptions) so it is THE single formula
+    for both the host float path (`access_energy`) and the traced jnp
+    heat deposit in `dram_sim.replay_adaptive` — changes to the
+    decomposition cannot silently diverge between the two."""
+    return e_burst + miss * (e_act_pre + p_act_standby * tras)
+
+
 def access_energy(tp: TimingParams, row_hit: float, pw: PowerParams) -> float:
-    miss = 1.0 - row_hit
-    return pw.e_burst + miss * (pw.e_act_pre + pw.p_act_standby * tp.tras)
+    # pure Python floats here: the host path keeps its float64
+    # precision; only the traced scan consumes the float32
+    # `energy_terms` row
+    return float(access_energy_from_terms(
+        pw.e_burst, pw.e_act_pre, pw.p_act_standby, 1.0 - row_hit,
+        tp.tras))
 
 
 def power_reduction(row_hit: float = 0.55, speedup: float = 0.105,

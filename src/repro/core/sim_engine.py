@@ -18,6 +18,15 @@ structured `SimResult` of mean/p99 latency, runtime and the raw
 latency grid.  `dram_sim.simulate` is the [1 x 1 x 1] shim over this
 path, so scalar and batched replays agree bit-for-bit.
 
+Attaching a `thermal.ThermalSpec` opens the fourth campaign axis —
+thermal scenarios — and switches the replay to the closed-loop
+`dram_sim.replay_adaptive`: the timing axis is then a stack of TABLES
+([K, bins+1, 6], JEDEC fallback row last) whose rows the in-scan
+controller selects per request from the RC-modelled temperature, and
+the whole (T x P x K x C) grid is STILL one quadruple-vmapped
+dispatch.  The static path is the degenerate case (no thermal axis)
+and is left byte-for-byte untouched.
+
 `dispatch_count` increments once per replay launch — evaluation
 campaigns are expected to cost O(1) dispatches regardless of the
 number of workloads, timing sets or policies (the call-count spy in
@@ -35,7 +44,8 @@ import numpy as np
 
 from repro.core import timing as T
 from repro.core.dram_sim import (OPEN_FCFS, Policy, Trace, frfcfs_reorder,
-                                 replay_one)
+                                 replay_adaptive, replay_one)
+from repro.core.thermal import ThermalSpec
 
 
 def _as_rows(timings) -> np.ndarray:
@@ -51,6 +61,18 @@ def _as_rows(timings) -> np.ndarray:
     return arr
 
 
+def _as_tables(timings, n_bins: int) -> np.ndarray:
+    """Normalize the adaptive timing axis to [K, n_bins + 1, 6] table
+    stacks (per-bin rows + the JEDEC fallback row last)."""
+    arr = np.asarray(timings, np.float32)
+    if arr.ndim == 2:
+        arr = arr[None, :, :]
+    assert arr.ndim == 3 and arr.shape[2] == 6, arr.shape
+    assert arr.shape[1] == n_bins + 1, \
+        f"table stack needs {n_bins}+1 rows (JEDEC last), got {arr.shape}"
+    return arr
+
+
 @dataclasses.dataclass(frozen=True)
 class SimSpec:
     """A declarative trace-replay campaign: every trace runs under every
@@ -59,10 +81,13 @@ class SimSpec:
     fields carry a leading batch axis."""
 
     traces: tuple[Trace, ...]
-    timings: np.ndarray                      # [S, 6] stacked rows
+    timings: np.ndarray                      # [S, 6] rows | [K, S+1, 6]
     policies: tuple[Policy, ...] = (OPEN_FCFS,)
     n_banks: int = 8
     mlp_window: int = 8
+    # attaching a thermal axis switches to the closed-loop adaptive
+    # replay; `timings` is then a stack of per-bin TABLES, not rows
+    thermal: ThermalSpec | None = None
 
     def __post_init__(self):
         tr = self.traces
@@ -71,7 +96,10 @@ class SimSpec:
                         for i in range(np.asarray(tr.arrival).shape[0]))
                   if np.asarray(tr.arrival).ndim == 2 else (tr,))
         object.__setattr__(self, "traces", tuple(tr))
-        object.__setattr__(self, "timings", _as_rows(self.timings))
+        object.__setattr__(
+            self, "timings",
+            _as_rows(self.timings) if self.thermal is None else
+            _as_tables(self.timings, len(self.thermal.temp_bins)))
         object.__setattr__(self, "policies", tuple(self.policies))
         assert self.traces and self.policies, "empty campaign"
 
@@ -81,8 +109,10 @@ class SimSpec:
         return cls(traces=(trace,), timings=tp, policies=(policy,), **kw)
 
     @property
-    def shape(self) -> tuple[int, int, int]:
-        return len(self.traces), len(self.policies), self.timings.shape[0]
+    def shape(self) -> tuple[int, ...]:
+        base = (len(self.traces), len(self.policies), self.timings.shape[0])
+        return (base if self.thermal is None else
+                base + (len(self.thermal.scenarios),))
 
     # ------------------------------------------------------------ packing
     def pack(self):
@@ -124,15 +154,24 @@ class SimSpec:
 @dataclasses.dataclass(frozen=True)
 class SimResult:
     """Result grid of one campaign; all arrays lead with [T, P, S] =
-    (traces, policies, timing rows).  `latencies` is padded to the
-    longest trace — mask with `valid` before reducing yourself."""
+    (traces, policies, timing rows) — or [T, P, K, C] = (traces,
+    policies, table stacks, thermal scenarios) for adaptive campaigns.
+    `latencies` is padded to the longest trace — mask with `valid`
+    before reducing yourself.  The `temp_*`/`bin_*` diagnostics are
+    populated only on the adaptive path."""
 
     spec: SimSpec
-    mean_latency_ns: np.ndarray     # [T, P, S]
-    p99_latency_ns: np.ndarray      # [T, P, S]
-    total_ns: np.ndarray            # [T, P, S]
-    latencies: np.ndarray           # [T, P, S, N] (0 at padding)
+    mean_latency_ns: np.ndarray     # [T, P, S] | [T, P, K, C]
+    p99_latency_ns: np.ndarray      # same leading shape
+    total_ns: np.ndarray            # same leading shape
+    latencies: np.ndarray           # [..., N] (0 at padding)
     valid: np.ndarray               # [T, N]
+    temps: np.ndarray | None = None         # [T, P, K, C, N] sensed C
+    bins: np.ndarray | None = None          # [T, P, K, C, N] (-1 pad)
+    temp_max: np.ndarray | None = None      # [T, P, K, C]
+    temp_mean: np.ndarray | None = None     # [T, P, K, C]
+    bin_switches: np.ndarray | None = None  # [T, P, K, C]
+    bank_heat: np.ndarray | None = None     # [T, P, K, C, B] end C
 
 
 @functools.partial(jax.jit, static_argnums=(0, 1))
@@ -155,6 +194,32 @@ def _replay_grid(n_banks, mlp_window, arrival, bank, row, is_write,
     return f_tps(arrival, bank, row, is_write, valid, timings, closed)
 
 
+@functools.partial(jax.jit, static_argnums=(0, 1))
+def _replay_grid_adaptive(n_banks, mlp_window, arrival, bank, row,
+                          is_write, valid, tables, bins, scns, tcfg,
+                          closed):
+    """ONE dispatch: closed-loop replay of every (trace, policy, table
+    stack, thermal scenario) cell.
+
+    arrival/bank/row/is_write: [T, P, N]; valid: [T, N]; tables:
+    [K, S+1, 6] (JEDEC fallback row last); bins: [S]; scns:
+    [C, thermal.SCN_COLS]; tcfg: [6] `ThermalConfig.as_row`; closed:
+    [P] bool.  Returns ([T, P, K, C, N] latency, [T, P, K, C] total,
+    [T, P, K, C, N] sensed temperature, [T, P, K, C, N] selected bin,
+    [T, P, K, C, B] end-of-trace per-bank overheat).
+    """
+    def one(a, b, r, w, v, tbl, scn, c):
+        return replay_adaptive(a, b, r, w, v, tbl, bins, scn, tcfg, c,
+                               n_banks, mlp_window)
+
+    f_c = jax.vmap(one, in_axes=(None,) * 5 + (None, 0, None))
+    f_kc = jax.vmap(f_c, in_axes=(None,) * 5 + (0, None, None))
+    f_pkc = jax.vmap(f_kc, in_axes=(0, 0, 0, 0, None, None, None, 0))
+    f_tpkc = jax.vmap(f_pkc, in_axes=(0, 0, 0, 0, 0, None, None, None))
+    return f_tpkc(arrival, bank, row, is_write, valid, tables, scns,
+                  closed)
+
+
 def _masked_stats(lat: np.ndarray, valid: np.ndarray):
     """Masked mean / interpolated p99 over the last axis, computed
     host-side in numpy: per-row pairwise summation depends only on the
@@ -163,9 +228,13 @@ def _masked_stats(lat: np.ndarray, valid: np.ndarray):
     reduces each trace's VALID PREFIX, not the zero-padded row — numpy's
     pairwise partitioning over a padded length differs from the
     unpadded sum, so summing padding (even zeros) would only be
-    coincidentally bit-equal."""
-    v = valid[:, None, None, :]                      # [T, 1, 1, N]
-    cnt = valid.sum(-1).astype(np.float32)[:, None, None]
+    coincidentally bit-equal.  Works for any number of campaign axes
+    between the trace axis and the request axis ([T, P, S, N] static,
+    [T, P, K, C, N] adaptive)."""
+    mid = (1,) * (lat.ndim - 2)
+    v = valid.reshape((valid.shape[0],) + mid + (valid.shape[1],))
+    cnt = valid.sum(-1).astype(np.float32).reshape(
+        (valid.shape[0],) + mid)
     mean = np.empty(lat.shape[:-1], np.float32)
     for t in range(lat.shape[0]):                    # padding is a suffix
         c = int(valid[t].sum())
@@ -186,23 +255,54 @@ def _masked_stats(lat: np.ndarray, valid: np.ndarray):
 
 @dataclasses.dataclass
 class SimEngine:
-    """Facade that compiles a `SimSpec` into one replay dispatch."""
+    """Facade that compiles a `SimSpec` into one replay dispatch —
+    static (T x P x S) or, with a thermal axis, adaptive
+    (T x P x K x C); either way ONE launch per `run`."""
 
     dispatch_count: int = 0
 
     def run(self, spec: SimSpec) -> SimResult:
         arrival, bank, row, is_write, valid, closed = spec.pack()
         self.dispatch_count += 1
-        lat, total = _replay_grid(
+        if spec.thermal is None:
+            lat, total = _replay_grid(
+                spec.n_banks, spec.mlp_window, jnp.asarray(arrival),
+                jnp.asarray(bank), jnp.asarray(row),
+                jnp.asarray(is_write), jnp.asarray(valid),
+                jnp.asarray(spec.timings), jnp.asarray(closed))
+            lat = np.asarray(lat)
+            mean, p99 = _masked_stats(lat, valid)
+            return SimResult(spec=spec, mean_latency_ns=mean,
+                             p99_latency_ns=p99,
+                             total_ns=np.asarray(total),
+                             latencies=lat, valid=valid)
+
+        scns, bins, tcfg = spec.thermal.pack()
+        lat, total, temps, bin_sel, bank_heat = _replay_grid_adaptive(
             spec.n_banks, spec.mlp_window, jnp.asarray(arrival),
             jnp.asarray(bank), jnp.asarray(row), jnp.asarray(is_write),
             jnp.asarray(valid), jnp.asarray(spec.timings),
+            jnp.asarray(bins), jnp.asarray(scns), jnp.asarray(tcfg),
             jnp.asarray(closed))
-        lat = np.asarray(lat)
+        lat, temps, bin_sel = (np.asarray(lat), np.asarray(temps),
+                               np.asarray(bin_sel))
         mean, p99 = _masked_stats(lat, valid)
+        # thermal diagnostics over each trace's valid prefix
+        tmax = np.empty(lat.shape[:-1], np.float32)
+        tmean = np.empty(lat.shape[:-1], np.float32)
+        switches = np.empty(lat.shape[:-1], np.int64)
+        for t in range(lat.shape[0]):                # padding is a suffix
+            c = int(valid[t].sum())
+            tmax[t] = temps[t, ..., :c].max(-1)
+            tmean[t] = temps[t, ..., :c].mean(-1)
+            switches[t] = (np.diff(bin_sel[t, ..., :c], axis=-1)
+                           != 0).sum(-1)
         return SimResult(spec=spec, mean_latency_ns=mean,
                          p99_latency_ns=p99, total_ns=np.asarray(total),
-                         latencies=lat, valid=valid)
+                         latencies=lat, valid=valid, temps=temps,
+                         bins=bin_sel, temp_max=tmax, temp_mean=tmean,
+                         bin_switches=switches,
+                         bank_heat=np.asarray(bank_heat))
 
 
 _DEFAULT: SimEngine | None = None
@@ -217,4 +317,4 @@ def default_engine() -> SimEngine:
 
 
 __all__ = ["Policy", "OPEN_FCFS", "SimSpec", "SimResult", "SimEngine",
-           "default_engine"]
+           "ThermalSpec", "default_engine"]

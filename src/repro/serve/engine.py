@@ -51,7 +51,20 @@ class ServeEngine:
 
     # ---------------------------------------------------------------- admin
     def submit(self, req: Request):
+        """Queue a request.  Oversized prompts are rejected HERE, before
+        they join the queue — failing later, mid-tick, would abort
+        service for every other active slot (`_prefill_into` keeps the
+        same check as a backstop for direct callers)."""
+        self._check_fits(req)
         self.waiting.append(req)
+
+    def _check_fits(self, req: Request):
+        if len(req.prompt) >= self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt length {len(req.prompt)} "
+                f"does not fit the shared KV cache (max_len="
+                f"{self.max_len} incl. one decode slot); raise max_len "
+                "or truncate the prompt")
 
     def _admit(self):
         for slot in range(self.slots):
@@ -62,7 +75,15 @@ class ServeEngine:
     def _prefill_into(self, slot: int, req: Request):
         """Prefill a single request and splice its cache into the shared
         batch cache at `slot` (host-side cache surgery keeps the decode
-        step's shapes static)."""
+        step's shapes static).
+
+        Rejects prompts that do not fit the shared cache: splicing a
+        longer-than-`max_len` prefill would silently corrupt the cache
+        (negative pad widths / clipped writes), and a prompt of exactly
+        `max_len` leaves no slot for the first decoded token.
+        `submit` applies the same check up front so queued requests
+        never fail mid-tick."""
+        self._check_fits(req)
         tokens = jnp.asarray(req.prompt, jnp.int32)[None, :]
         logits, cache1 = TF.prefill(self.params, tokens, self.cfg,
                                     max_len=self.max_len, dtype=self.dtype)

@@ -88,6 +88,34 @@ class TestController:
         error-free for its module at its bin's max temperature."""
         assert controller.verify(small_pop)
 
+    def test_verify_chunked_module_groups(self, controller, small_pop,
+                                          monkeypatch):
+        """Forcing a tiny `max_grid_elems` drives the g < m chunked
+        path: several margin dispatches over module groups, same
+        verdict as the single-dispatch grid."""
+        m = controller.table.params.shape[0]
+        b = controller.table.params.shape[1]
+        cpm = int(np.prod(small_pop.cells.shape[1:4]))
+        calls = {"n": 0, "rows": []}
+        real = controller.engine.margins
+
+        def spy(cells, combos, **kw):
+            calls["n"] += 1
+            calls["rows"].append((np.asarray(cells).shape[0],
+                                  np.asarray(combos).shape[0]))
+            return real(cells, combos, **kw)
+
+        monkeypatch.setattr(controller.engine, "margins", spy)
+        # small enough that each group is a single module: g == 1
+        assert controller.verify(small_pop, max_grid_elems=cpm * b)
+        assert calls["n"] == m, calls
+        assert all(r == (cpm, b) for r in calls["rows"]), calls["rows"]
+
+        calls["n"], calls["rows"] = 0, []
+        # the default budget keeps the tested size one dispatch
+        assert controller.verify(small_pop)
+        assert calls["n"] == 1 and calls["rows"][0] == (m * cpm, m * b)
+
     def test_reductions_deeper_when_cooler(self, controller):
         r55 = controller.average_reductions(55.0)
         r85 = controller.average_reductions(85.0)

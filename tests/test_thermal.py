@@ -1,0 +1,304 @@
+"""Closed-loop ThermalEngine tests: scenario generators, the adaptive
+replay's bit-identity with the static path under a constant-temperature
+scenario, hysteresis semantics, the bin-monotone safe_stack envelope,
+the O(1)-dispatch invariant of the dynamic campaign, and the
+adaptive >= static-worst-case acceptance bracket."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dram_sim, perf_model, sim_engine, thermal
+from repro.core.sim_engine import SimEngine, SimSpec
+from repro.core.thermal import (ThermalConfig, ThermalSpec, bursty,
+                                cooling_failure, diurnal, steady)
+from repro.core.timing import ALDRAM_55C_EVAL, DDR3_1600, stack_timing
+
+
+def synth(seed=0, n=512, **kw):
+    return dram_sim.synth_trace(jax.random.PRNGKey(seed), n, **kw)
+
+
+STACK3 = stack_timing([ALDRAM_55C_EVAL,
+                       DDR3_1600.scaled(0.9, 0.9, 0.9, 0.9),
+                       DDR3_1600])                    # JEDEC fallback last
+BINS2 = (45.0, 55.0)
+
+
+class TestScenarios:
+    def test_ambient_device_matches_host(self):
+        scns = (steady(47.0), diurnal(35.0, 65.0, period_ns=5e4),
+                cooling_failure(40.0, 25.0, at_ns=1e4),
+                bursty(42.0, 12.0, period_ns=2e4, duty=0.3))
+        ts = np.linspace(0.0, 2.0e5, 97)
+        for s in scns:
+            row = jnp.asarray(s.as_row())
+            dev = np.asarray(jax.vmap(
+                lambda t: thermal.ambient_at(row, t))(jnp.asarray(
+                    ts, jnp.float32)))
+            host = np.array([thermal.ambient_at_host(s, t) for t in ts])
+            np.testing.assert_allclose(dev, host, rtol=1e-5, atol=1e-4)
+
+    def test_oracle_variant_only_drops_hysteresis(self):
+        s = diurnal(35.0, 65.0)
+        o = s.oracle()
+        assert o.hyst_scale == 0.0 and s.hyst_scale == 1.0
+        assert np.array_equal(o.as_row()[:8], s.as_row()[:8])
+
+    def test_spec_validates(self):
+        with pytest.raises(AssertionError):
+            ThermalSpec(scenarios=(), temp_bins=BINS2)
+        with pytest.raises(AssertionError):
+            ThermalSpec(scenarios=(steady(40.0),), temp_bins=(55.0, 45.0))
+        # table stacks must carry bins+1 rows (JEDEC fallback last)
+        with pytest.raises(AssertionError):
+            SimSpec(traces=(synth(0, 64),), timings=STACK3[:2],
+                    thermal=ThermalSpec(scenarios=(steady(40.0),),
+                                        temp_bins=BINS2))
+
+
+class TestAdaptiveReplay:
+    @pytest.fixture(scope="class")
+    def const_grid(self):
+        """Padded two-trace campaign under a constant-temperature
+        scenario with activity heating disabled — the degenerate case
+        that must reproduce the static path bit-for-bit."""
+        traces = (synth(0, 400), synth(1, 257, row_hit=0.3))
+        tspec = ThermalSpec(scenarios=(steady(50.0),), temp_bins=BINS2,
+                            config=ThermalConfig(c_heat=0.0))
+        eng = SimEngine()
+        res_a = eng.run(SimSpec(traces=traces, timings=STACK3,
+                                thermal=tspec))
+        # steady 50C rounds up to the 55C bin -> row 1 of the stack
+        res_s = eng.run(SimSpec(traces=traces, timings=STACK3[1:2]))
+        return res_a, res_s
+
+    def test_constant_scenario_bit_identical_to_static(self, const_grid):
+        res_a, res_s = const_grid
+        assert res_a.mean_latency_ns.shape == (2, 1, 1, 1)
+        assert np.array_equal(res_a.latencies[:, :, 0],
+                              res_s.latencies)
+        assert np.array_equal(res_a.mean_latency_ns[:, :, 0, 0],
+                              res_s.mean_latency_ns[:, :, 0])
+        assert np.array_equal(res_a.p99_latency_ns[:, :, 0, 0],
+                              res_s.p99_latency_ns[:, :, 0])
+        assert np.array_equal(res_a.total_ns[:, :, 0, 0],
+                              res_s.total_ns[:, :, 0])
+
+    def test_constant_scenario_never_switches(self, const_grid):
+        res_a, _ = const_grid
+        assert (res_a.bin_switches == 0).all()
+        assert np.allclose(res_a.temp_max, 50.0)
+        # valid prefix selects the 55C bin (index 1), padding is -1
+        assert (res_a.bins[0, 0, 0, 0] == 1).all()
+        assert (res_a.bins[1, 0, 0, 0, 257:] == -1).all()
+        assert (res_a.bins[1, 0, 0, 0, :257] == 1).all()
+
+    def test_heating_raises_temperature_and_bins(self):
+        """With activity heating on, a busy trace self-heats above the
+        ambient; hotter bins (higher index) get selected."""
+        t = synth(2, 1024, inter_arrival_ns=4.0)
+        tspec = ThermalSpec(
+            scenarios=(steady(44.0),), temp_bins=BINS2,
+            config=ThermalConfig(c_heat=2e-4, tau_ns=2e5))
+        res = SimEngine().run(SimSpec(traces=(t,), timings=STACK3,
+                                      thermal=tspec))
+        assert res.temp_max[0, 0, 0, 0] > 44.5
+        b = res.bins[0, 0, 0, 0]
+        assert b.min() >= 0 and b.max() <= 2
+        assert b.max() > b[0], "self-heating must climb at least one bin"
+
+    def test_hysteresis_prevents_register_thrash(self):
+        """A square-wave ambient hovering on a bin edge: the oracle
+        (hyst = 0) thrashes on every crossing, the hysteretic
+        controller up-switches once and holds."""
+        t = synth(3, 1024, inter_arrival_ns=40.0)
+        # cool first phase (48C), hot second (52C): the first crossing
+        # is a visible up-switch, then hysteresis (5C) holds the bin
+        scn = bursty(52.0, -4.0, period_ns=4000.0, duty=0.5)
+        tspec = ThermalSpec(
+            scenarios=(scn, scn.oracle()), temp_bins=(50.0,),
+            config=ThermalConfig(c_heat=0.0, hyst_c=5.0))
+        res = SimEngine().run(SimSpec(
+            traces=(t,), timings=STACK3[np.array([0, 2])],
+            thermal=tspec))
+        hyst_sw = int(res.bin_switches[0, 0, 0, 0])
+        oracle_sw = int(res.bin_switches[0, 0, 0, 1])
+        assert hyst_sw == 1, hyst_sw     # one up-switch, then held
+        assert oracle_sw > 10, oracle_sw
+        # hysteresis is conservative: it never selects a cooler bin
+        # than the oracle at the same instant
+        n = 1024
+        assert (res.bins[0, 0, 0, 0, :n]
+                >= res.bins[0, 0, 0, 1, :n]).all()
+
+    def test_up_switch_is_immediate(self):
+        """A cooling failure must move to the hotter bin the moment the
+        sensed temperature crosses the edge — hysteresis only delays
+        DOWN-switches (reliability never waits)."""
+        n = 256
+        t = dram_sim.Trace(arrival=jnp.arange(n) * 100.0,
+                           bank=jnp.zeros(n, jnp.int32),
+                           row=jnp.zeros(n, jnp.int32),
+                           is_write=jnp.zeros(n, bool))
+        tspec = ThermalSpec(
+            scenarios=(cooling_failure(40.0, 30.0, at_ns=5000.0),),
+            temp_bins=BINS2,
+            config=ThermalConfig(c_heat=0.0, hyst_c=10.0))
+        res = SimEngine().run(SimSpec(traces=(t,), timings=STACK3,
+                                      thermal=tspec))
+        b = np.asarray(res.bins[0, 0, 0, 0])
+        # requests before 5000 ns see 40C (bin 0); from the step on,
+        # 70C exceeds the hottest bin -> JEDEC fallback row (index 2)
+        assert (b[:50] == 0).all()
+        assert (b[50:] == 2).all()
+
+    def test_bank_heat_attributes_hot_banks(self):
+        """The end-of-trace per-bank overheat singles out the bank the
+        access stream actually hammered."""
+        n = 512
+        t = dram_sim.Trace(arrival=jnp.arange(n) * 10.0,
+                           bank=jnp.asarray(np.where(np.arange(n) % 4,
+                                                     3, 1), jnp.int32),
+                           row=jnp.asarray(np.arange(n), jnp.int32),
+                           is_write=jnp.zeros(n, bool))
+        tspec = ThermalSpec(scenarios=(steady(44.0),), temp_bins=BINS2,
+                            config=ThermalConfig(c_heat=1e-4))
+        res = SimEngine().run(SimSpec(traces=(t,), timings=STACK3,
+                                      thermal=tspec))
+        heat = res.bank_heat[0, 0, 0, 0]
+        assert heat.shape == (8,)
+        assert heat.argmax() == 3          # 3 of every 4 accesses
+        assert heat[1] > 0.0 and heat[3] > 3.0 * heat[1] * 0.5
+        assert heat[[0, 2, 4, 5, 6, 7]].max() == 0.0
+
+    def test_above_hottest_bin_uses_jedec_row(self):
+        """Sensed temperatures above every profiled bin must replay
+        standard JEDEC timings (the fallback row), bit-for-bit."""
+        traces = (synth(4, 300),)
+        tspec = ThermalSpec(scenarios=(steady(95.0),), temp_bins=BINS2,
+                            config=ThermalConfig(c_heat=0.0))
+        eng = SimEngine()
+        res_a = eng.run(SimSpec(traces=traces, timings=STACK3,
+                                thermal=tspec))
+        res_s = eng.run(SimSpec(traces=traces, timings=DDR3_1600))
+        assert (res_a.bins[0, 0, 0, 0] == 2).all()
+        assert np.array_equal(res_a.latencies[:, :, 0],
+                              res_s.latencies)
+
+
+class TestDynamicCampaign:
+    """evaluate_adaptive: O(1) dispatches + the acceptance bracket."""
+
+    def _spies(self, monkeypatch):
+        calls = {"synth": 0, "static": 0, "adaptive": 0}
+        real_synth = perf_model._synth_batch
+        real_static = sim_engine._replay_grid
+        real_adaptive = sim_engine._replay_grid_adaptive
+
+        def spy(name, real):
+            def f(*a, **k):
+                calls[name] += 1
+                return real(*a, **k)
+            return f
+
+        monkeypatch.setattr(perf_model, "_synth_batch",
+                            spy("synth", real_synth))
+        monkeypatch.setattr(sim_engine, "_replay_grid",
+                            spy("static", real_static))
+        monkeypatch.setattr(sim_engine, "_replay_grid_adaptive",
+                            spy("adaptive", real_adaptive))
+        return calls
+
+    @pytest.mark.parametrize("n_scn", [2, 4])
+    def test_three_dispatches_regardless_of_scenarios(self, monkeypatch,
+                                                      n_scn):
+        calls = self._spies(monkeypatch)
+        scns = (steady(42.0), diurnal(38.0, 72.0),
+                cooling_failure(44.0, 28.0), bursty(42.0, 16.0))[:n_scn]
+        res = perf_model.evaluate_adaptive(STACK3, BINS2, scns, n=128)
+        assert calls == {"synth": 1, "static": 1, "adaptive": 1}, calls
+        assert res["adaptive"].shape == (2, 35, 1, n_scn)
+
+    def test_per_policy_summaries(self):
+        """Every policy of the campaign gets its own per-scenario
+        bracket; per_scenario is the first policy's view."""
+        res = perf_model.evaluate_adaptive(
+            STACK3, BINS2, (diurnal(38.0, 72.0),), n=128,
+            policies=(dram_sim.OPEN_FCFS,
+                      dram_sim.Policy(page="closed")))
+        assert len(res["per_policy"]) == 2
+        assert res["per_scenario"] == res["per_policy"][0]
+        for pd in res["per_policy"]:
+            d = pd["diurnal38-72C"]
+            assert d["adaptive_gmean"] >= d["static_worst_gmean"] - 1e-9
+            assert d["oracle_gmean"] >= d["adaptive_gmean"] - 1e-9
+
+    def test_brackets_and_worst_bin(self):
+        scns = (diurnal(38.0, 72.0, period_ns=1.2e5),
+                cooling_failure(44.0, 28.0, at_ns=3e4))
+        res = perf_model.evaluate_adaptive(STACK3, BINS2, scns, n=256)
+        for name, d in res["per_scenario"].items():
+            assert d["adaptive_gmean"] >= d["static_worst_gmean"] - 1e-9
+            assert d["oracle_gmean"] >= d["adaptive_gmean"] - 1e-9
+        # both scenarios exceed the hottest profiled bin: the static
+        # bracket must fall back to JEDEC (worst_bin None -> speedup 0)
+        assert res["per_scenario"][scns[0].name]["worst_bin"] is None
+        np.testing.assert_allclose(res["static_worst"], 0.0, atol=1e-12)
+
+
+class TestProfiledDynamicClosure:
+    """evaluate_dynamic on a real profiled table."""
+
+    @pytest.fixture(scope="class")
+    def controller(self, small_pop):
+        from repro.core.aldram import ALDRAMController
+        from repro.core.calibration import CALIBRATED_CONSTANTS
+        from repro.core.profiler import Profiler
+        ctrl = ALDRAMController(
+            Profiler(constants=CALIBRATED_CONSTANTS, grid_step=2.5,
+                     impl="ref"),
+            temp_bins=(55.0, 70.0, 85.0))
+        ctrl.profile(small_pop)
+        return ctrl
+
+    def test_safe_stack_monotone_envelope(self, controller):
+        rows, bins = controller.table.safe_stack()
+        assert rows.shape == (4, 6)
+        assert np.array_equal(bins, [55.0, 70.0, 85.0])
+        assert np.array_equal(rows[-1], DDR3_1600.as_row())
+        # hotter bins never carry smaller parameters (incl. fallback)
+        assert (np.diff(rows, axis=0) >= -1e-6).all()
+        # each bin row covers the all-module-safe lookup of that bin
+        m = controller.table.params.shape[0]
+        for bi, tc in enumerate(controller.table.temp_bins):
+            lk = controller.table.lookup_many(
+                np.arange(m), np.full(m, tc)).max(axis=0)
+            assert (rows[bi] >= lk - 1e-6).all()
+
+    def test_dynamic_beats_static_worst_everywhere(self, controller,
+                                                   small_pop):
+        res = controller.evaluate_dynamic(small_pop, n=256)
+        assert res["source"] == "profiled-table-dynamic"
+        assert len(res["per_scenario"]) == 4
+        for name, d in res["per_scenario"].items():
+            assert d["adaptive_gmean"] >= d["static_worst_gmean"] - 1e-9
+            assert d["oracle_gmean"] >= d["adaptive_gmean"] - 1e-9
+        dyn = res["per_scenario"]["diurnal38-72C"]
+        assert dyn["adaptive_gmean"] > dyn["static_worst_gmean"], \
+            "a multi-bin ramp must leave measurable adaptive headroom"
+
+    def test_two_replay_dispatches(self, controller, small_pop,
+                                   monkeypatch):
+        calls = {"n": 0}
+        for name in ("_replay_grid", "_replay_grid_adaptive"):
+            real = getattr(sim_engine, name)
+
+            def spy(*a, _real=real, **k):
+                calls["n"] += 1
+                return _real(*a, **k)
+
+            monkeypatch.setattr(sim_engine, name, spy)
+        controller.evaluate_dynamic(small_pop, n=128)
+        assert calls["n"] == 2, calls

@@ -114,6 +114,34 @@ def test_serve_engine_matches_reference_decode(tiny, key):
     assert req.out == ref_out, (req.out, ref_out)
 
 
+def test_serve_engine_rejects_oversized_prompt(tiny, key):
+    """An over-long prompt must raise instead of silently corrupting
+    the shared KV cache splice — and leave other slots untouched."""
+    from repro.serve.engine import Request, ServeEngine
+    cfg, params = tiny
+    eng = ServeEngine(params, cfg, batch_slots=2, max_len=16,
+                      dtype=jnp.float32)
+    ok = Request(rid=0, prompt=np.arange(6, dtype=np.int32) % cfg.vocab_size,
+                 max_new_tokens=3)
+    too_long = Request(rid=1, prompt=np.zeros(16, np.int32),
+                       max_new_tokens=3)      # == max_len: no decode slot
+    way_too_long = Request(rid=2, prompt=np.zeros(33, np.int32),
+                           max_new_tokens=3)
+    eng.submit(ok)
+    for bad in (too_long, way_too_long):
+        # rejected at submit time: a bad request must never reach the
+        # queue and stall other requests mid-tick
+        with pytest.raises(ValueError, match="does not fit"):
+            eng.submit(bad)
+        assert not bad.out, "no token may be emitted for a rejected prompt"
+        assert bad not in eng.waiting
+        # the backstop in _prefill_into guards direct callers too
+        with pytest.raises(ValueError, match="does not fit"):
+            eng._prefill_into(1, bad)
+    eng.run_until_drained()
+    assert len(ok.out) == 3
+
+
 def test_serve_engine_batches_multiple_requests(tiny, key):
     from repro.serve.engine import Request, ServeEngine
     cfg, params = tiny
