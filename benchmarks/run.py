@@ -1,10 +1,17 @@
 """Benchmark harness: one function per paper table/figure plus the
 framework/roofline benches.  Prints ``name,us_per_call,derived`` CSV
 and writes a machine-readable ``BENCH_<name>.json`` summary per bench
-(wall time, dispatch counts, headline stats) so the perf trajectory
-can be tracked across PRs (CI uploads them as workflow artifacts).
+(wall time, dispatch counts, headline stats) to the REPO ROOT by
+default, so the perf trajectory is tracked across PRs (committed
+baselines; CI also uploads them as workflow artifacts and gates the
+sim_bench fast wall time against the committed baseline).
 
   python -m benchmarks.run [--fast] [--only NAME] [--out-dir DIR]
+                           [--repeat N]
+
+``--repeat N`` runs each bench N times and reports the MEDIAN wall
+time (the per-run walls are kept in the summary), so one-off noise on
+shared runners doesn't pollute the trajectory.
 """
 
 from __future__ import annotations
@@ -12,12 +19,14 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import statistics
 import sys
 import time
 import traceback
 
 _MAX_DEPTH = 3
 _MAX_ITEMS = 24
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def _headline(obj, depth: int = 0):
@@ -50,10 +59,15 @@ def _headline(obj, depth: int = 0):
     return None
 
 
-def _write_summary(out_dir: str, name: str, wall_s: float, fast: bool,
-                   result, error: str | None = None) -> None:
-    summary = {"name": name, "wall_s": round(wall_s, 6), "fast": fast,
-               "error": error}
+def _write_summary(out_dir: str, name: str, walls: list[float],
+                   fast: bool, result,
+                   error: str | None = None) -> None:
+    summary = {"name": name,
+               "wall_s": round(statistics.median(walls), 6),
+               "fast": fast, "error": error}
+    if len(walls) > 1:
+        summary["repeats"] = len(walls)
+        summary["wall_s_all"] = [round(w, 6) for w in walls]
     if isinstance(result, dict):
         if "dispatches" in result:
             summary["dispatches"] = _headline(result["dispatches"])
@@ -69,14 +83,19 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true",
                     help="reduced population / fewer samples")
     ap.add_argument("--only", default=None)
-    ap.add_argument("--out-dir", default=".",
-                    help="directory for the BENCH_<name>.json summaries")
+    ap.add_argument("--out-dir", default=_REPO_ROOT,
+                    help="directory for the BENCH_<name>.json summaries "
+                         "(default: the repo root, so baselines are "
+                         "committed and tracked across PRs)")
+    ap.add_argument("--repeat", type=int, default=1,
+                    help="run each bench N times; report the median "
+                         "wall time")
     args = ap.parse_args()
 
     from benchmarks import (fig2_refresh, fig2_timing, fig3_population,
                             fig4_system, framework, multi_timing,
                             power_bench, repeatability, roofline,
-                            thermal_bench)
+                            sim_bench, thermal_bench)
 
     benches = {
         "fig2_refresh": fig2_refresh.run,
@@ -84,6 +103,7 @@ def main() -> None:
         "fig3_population": fig3_population.run,
         "fig4_system": fig4_system.run,
         "fig4_profiled": fig4_system.run_profiled,
+        "sim_bench": sim_bench.run,
         "thermal_bench": thermal_bench.run,
         "power": power_bench.run,
         "repeatability": repeatability.run,
@@ -97,18 +117,22 @@ def main() -> None:
     for name, fn in benches.items():
         if args.only and name != args.only:
             continue
-        t0 = time.monotonic()
-        try:
-            res = fn(fast=args.fast)
-            _write_summary(args.out_dir, name, time.monotonic() - t0,
-                           args.fast, res)
-        except Exception as e:  # noqa: BLE001
+        walls, res, err = [], None, None
+        for _ in range(max(1, args.repeat)):
+            t0 = time.monotonic()
+            try:
+                res = fn(fast=args.fast)
+            except Exception as e:  # noqa: BLE001
+                err = f"{type(e).__name__}: {e}"
+                print(f"{name},0,ERROR:{err}", flush=True)
+                traceback.print_exc(file=sys.stderr)
+            walls.append(time.monotonic() - t0)
+            if err:
+                break
+        if err:
             failed.append(name)
-            print(f"{name},0,ERROR:{type(e).__name__}:{e}", flush=True)
-            traceback.print_exc(file=sys.stderr)
-            _write_summary(args.out_dir, name, time.monotonic() - t0,
-                           args.fast, None,
-                           error=f"{type(e).__name__}: {e}")
+        _write_summary(args.out_dir, name, walls, args.fast, res,
+                       error=err)
     if failed:
         raise SystemExit(f"failed: {failed}")
 

@@ -1,0 +1,115 @@
+"""Device-resident campaign fast path: end-to-end pipeline benchmark.
+
+Replays the Fig. 4-scale campaign — the paper's 35 multi-core
+workload traces (n = 8192 requests) x 2 FR-FCFS scheduling policies
+(16- and 64-entry transaction queues, the range real DDR3/4
+controllers ship) x 16 stacked timing rows — through both SimEngine
+pipelines and reports the end-to-end wall-clock ratio:
+
+  * reference — the pre-fast-path pipeline exactly as PR 2/3 ran it:
+    `pack()` materializes FR-FCFS issue orders with the O(N * window)
+    pure-Python loop (the cross-call reorder cache is cleared each
+    rep, faithful to the per-call-only caching it used to have), ONE
+    replay dispatch, raw [T, P, S, N] latency transfer, host numpy
+    `_masked_stats`.
+  * fast — SimEngine defaults: the FR-FCFS prepass AND the masked
+    mean/p99 reductions ride INSIDE the one replay dispatch
+    (`reorder="device"`, `stats="device"`), and only [T, P, S]-shaped
+    summaries cross the host boundary.
+
+Both pipelines share the same jitted replay core (bit-identical raw
+latencies), so the ratio isolates what the fast path eliminates: the
+host prepass, the host reductions and the O(grid * N) transfer.
+Wall times are medians over `reps` runs after an untimed compile
+warm-up.  The bench asserts the acceptance contract — device stats
+within 1e-5 relative of the host reference, one replay launch per
+campaign — and the ``dispatches=1`` CSV field plus the committed
+``BENCH_sim_bench.json`` wall-time baseline are checked by CI.
+"""
+
+from __future__ import annotations
+
+import statistics
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+
+
+def run(fast: bool = False) -> dict:
+    from repro.core import dram_sim, perf_model
+    from repro.core.dram_sim import Policy, Trace
+    from repro.core.sim_engine import SimEngine, SimSpec
+    from repro.core.timing import DDR3_1600, stack_timing
+
+    n = 1024 if fast else 8192
+    n_rows = 8 if fast else 16
+    reps = 2 if fast else 3
+
+    # the multi-core half of the Fig. 4 pool (rows 35:70 of the
+    # batched synthesis — one traced dispatch)
+    tb = perf_model.trace_batch(n=n, seed=0)
+    traces = Trace(*(np.asarray(f)[35:70] for f in tb))
+    rows = stack_timing([DDR3_1600.scaled(f, f, f, f)
+                         for f in np.linspace(1.0, 0.6, n_rows)])
+    policies = (Policy(reorder_window=16), Policy(reorder_window=64))
+    spec = SimSpec(traces=traces, timings=rows, policies=policies)
+
+    fast_eng = SimEngine()                                 # device/device
+    ref_eng = SimEngine(stats="host", reorder="host")      # the old path
+
+    fast_eng.run(spec)                       # untimed compile warm-up
+    dram_sim._REORDER_CACHE.clear()
+    res_ref = ref_eng.run(spec)
+
+    t_fast = []
+    for _ in range(reps):
+        t0 = time.monotonic()
+        res_fast = fast_eng.run(spec)
+        t_fast.append(time.monotonic() - t0)
+    t_ref = []
+    for _ in range(reps):
+        # pre-fast-path pack() re-paid the Python reorder every call
+        dram_sim._REORDER_CACHE.clear()
+        t0 = time.monotonic()
+        res_ref = ref_eng.run(spec)
+        t_ref.append(time.monotonic() - t0)
+
+    med_fast = statistics.median(t_fast)
+    med_ref = statistics.median(t_ref)
+    speedup = med_ref / med_fast
+
+    # acceptance: device stats within 1e-5 relative of the host
+    # reference, and the whole campaign is ONE replay launch
+    rel = max(
+        float(np.abs(res_fast.mean_latency_ns
+                     / res_ref.mean_latency_ns - 1.0).max()),
+        float(np.abs(res_fast.p99_latency_ns
+                     / res_ref.p99_latency_ns - 1.0).max()))
+    assert rel <= 1e-5, rel
+    assert np.array_equal(res_fast.total_ns, res_ref.total_ns)
+    assert res_fast.latencies is None, "collect-gated output leaked"
+    dispatches_per_run = 1                  # pinned by the spy tests
+    assert fast_eng.dispatch_count == 1 + reps
+
+    emit("sim_fastpath_campaign", med_fast * 1e6,
+         "speedup={:.1f}x|ref={:.2f}s|fast={:.2f}s|grid=35x2x{}|n={}|"
+         "stats_rel={:.1e}|dispatches={}".format(
+             speedup, med_ref, med_fast, n_rows, n, rel,
+             dispatches_per_run))
+    return {
+        "speedup": speedup, "ref_s": med_ref, "fast_s": med_fast,
+        "ref_s_all": t_ref, "fast_s_all": t_fast,
+        "stats_rel_err": rel, "n": n,
+        "grid": f"35x2x{n_rows}",
+        "windows": [p.reorder_window for p in policies],
+        "dispatches": {"replay_per_run": dispatches_per_run,
+                       "synth": 1},
+    }
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps({k: v for k, v in run().items()
+                      if not k.endswith("_all")}, indent=1))

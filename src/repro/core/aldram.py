@@ -27,6 +27,12 @@ dispatch itself, and the controller's bin-switching logic — sensing,
 conservative round-up, down-switch hysteresis, above-hottest-bin
 JEDEC fallback — runs inside the traced `lax.scan` per request, under
 dynamic thermal scenarios (`repro.core.thermal`).
+
+Both system closures inherit the engine's device-resident fast path:
+the statistics and thermal diagnostics they consume (mean latencies,
+temp_max, bin_switches) reduce in-dispatch and only [grid]-shaped
+summaries reach the host — a profile-to-Fig.4 campaign never
+materializes O(grid x requests) arrays host-side.
 """
 
 from __future__ import annotations

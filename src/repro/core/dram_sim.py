@@ -14,12 +14,17 @@ This is the engine behind the Fig. 4 real-system reproduction
 parameters, so speedups fall out of the same trace replayed under
 standard vs adaptive timings.
 
-The replay core (`replay_one`) is written to be batched: it takes a
-stacked timing row (`TimingParams.as_row`), a validity mask (so traces
-of different lengths can be padded into one grid) and a scheduling
-`Policy`, and `repro.core.sim_engine.SimEngine` vmaps it over a whole
-(traces x policies x timing rows) campaign in ONE dispatch.
-`simulate(trace, tp)` remains as a thin single-item shim over that
+The replay core is written to be batched: it takes stacked timing
+rows (`TimingParams.as_row`), a validity mask (so traces of different
+lengths can be padded into one grid) and a scheduling `Policy`, and
+`repro.core.sim_engine.SimEngine` runs a whole (traces x policies x
+timing rows) campaign in ONE dispatch.  `replay_one` is the one-row
+reference scan; `replay_rows` is the engine's core — the timing-row
+axis rides the minor lane axis of the carried bank state (the same
+layout as the `repro.kernels.replay` Pallas kernel), which pays the
+per-request bank gather/scatter once per (trace, policy) step instead
+of once per timing row (~4x on CPU, bit-identical).
+`simulate(trace, tp)` remains as a thin single-item shim over the
 batched path.
 
 `replay_adaptive` is the closed-loop variant (paper Sec. 4's online
@@ -41,6 +46,11 @@ Scheduling-policy axis:
   * FR-FCFS-lite — `frfcfs_reorder` reorders a trace host-side within a
     bounded lookahead window, issuing the oldest row-hit first (with a
     starvation cap), approximating a first-ready FCFS scheduler.
+    `frfcfs_perm` is the jitted JAX formulation of the same scheduler
+    (a `lax.scan` over the pending window) that `sim_engine` runs as a
+    prepass INSIDE the campaign dispatch — parity-tested
+    request-for-request against the Python reference, which is retained
+    as the host path (and cached across `SimSpec.pack()` calls).
 """
 
 from __future__ import annotations
@@ -114,25 +124,26 @@ def synth_trace(key, n: int, n_banks: int = 8, n_rows: int = 4096,
     return Trace(arrival, bank, row, is_write)
 
 
-def frfcfs_reorder(trace: Trace, window: int, slack_ns: float = 30.0,
-                   max_defer: int | None = None) -> Trace:
-    """FR-FCFS-lite: greedily issue, among the next `window` pending
-    requests, the oldest one hitting the currently open row of its bank
-    (else the oldest request).  A candidate is promoted only when it
-    arrives within `slack_ns` of the head request (a hit that is still
-    in flight costs more to wait for than the conflict it avoids), and
-    a starvation cap forces the head out after `max_defer` consecutive
-    deferrals.  Host-side preprocessing: requests keep their arrival
-    timestamps, only issue order changes.
+def frfcfs_order(trace: Trace, window: int, slack_ns: float = 30.0,
+                 max_defer: int | None = None) -> np.ndarray:
+    """Issue-order permutation of the FR-FCFS-lite Python reference:
+    greedily issue, among the next `window` pending requests, the
+    oldest one hitting the currently open row of its bank (else the
+    oldest request).  A candidate is promoted only when it arrives
+    within `slack_ns` of the head request (a hit that is still in
+    flight costs more to wait for than the conflict it avoids), and a
+    starvation cap forces the head out after `max_defer` consecutive
+    deferrals.
+
+    All horizon arithmetic is float32 so the device formulation
+    (`frfcfs_perm`) can match it request-for-request.
     """
-    if window <= 1:
-        return trace
-    arrival = np.asarray(trace.arrival)
+    arrival = np.asarray(trace.arrival, np.float32)
     bank = np.asarray(trace.bank)
     row = np.asarray(trace.row)
-    wr = np.asarray(trace.is_write)
     n = arrival.shape[0]
     cap = 4 * window if max_defer is None else max_defer
+    slack = np.float32(slack_ns)
     order = np.empty(n, np.int64)
     open_row: dict[int, int] = {}
     pend = list(range(n))
@@ -140,7 +151,7 @@ def frfcfs_reorder(trace: Trace, window: int, slack_ns: float = 30.0,
     for k in range(n):
         pick = 0
         if defer < cap:
-            horizon = arrival[pend[0]] + slack_ns
+            horizon = np.float32(arrival[pend[0]] + slack)
             for j in range(min(window, len(pend))):
                 idx = pend[j]
                 if (arrival[idx] <= horizon and
@@ -151,7 +162,102 @@ def frfcfs_reorder(trace: Trace, window: int, slack_ns: float = 30.0,
         defer = defer + 1 if pick > 0 else 0
         open_row[int(bank[idx])] = int(row[idx])
         order[k] = idx
-    return Trace(arrival[order], bank[order], row[order], wr[order])
+    return order
+
+
+# Host-reorder results cached across `SimSpec.pack()` calls: repeated
+# campaigns over the same traces (benchmark repeats, profile-then-replay
+# pipelines) pay the O(N*window) Python prepass once.  Keyed on the
+# identity of the trace's arrival array plus the policy knobs; the
+# cached entry holds a strong reference to that array, which keeps the
+# id() stable (no false hits from id reuse after GC).
+_REORDER_CACHE: "dict[tuple, tuple]" = {}
+_REORDER_CACHE_MAX = 128
+
+
+def frfcfs_reorder(trace: Trace, window: int, slack_ns: float = 30.0,
+                   max_defer: int | None = None) -> Trace:
+    """FR-FCFS-lite host-side preprocessing (see `frfcfs_order`):
+    requests keep their arrival timestamps, only issue order changes.
+    Results are cached across calls keyed on (trace identity, window,
+    slack, cap)."""
+    if window <= 1:
+        return trace
+    key = (id(trace.arrival), window, float(slack_ns), max_defer)
+    hit = _REORDER_CACHE.get(key)
+    if hit is not None and hit[0] is trace.arrival:
+        # refresh the LRU position: dicts keep re-assigned keys at
+        # their ORIGINAL insertion slot, so pop + re-insert
+        _REORDER_CACHE.pop(key)
+        _REORDER_CACHE[key] = hit
+        return hit[1]
+    order = frfcfs_order(trace, window, slack_ns, max_defer)
+    arrival = np.asarray(trace.arrival)
+    out = Trace(arrival[order], np.asarray(trace.bank)[order],
+                np.asarray(trace.row)[order],
+                np.asarray(trace.is_write)[order])
+    while len(_REORDER_CACHE) >= _REORDER_CACHE_MAX:
+        _REORDER_CACHE.pop(next(iter(_REORDER_CACHE)))
+    _REORDER_CACHE[key] = (trace.arrival, out)
+    return out
+
+
+def frfcfs_perm(arrival, bank, row, valid, window, slack_ns, cap,
+                max_window: int, n_banks: int = 8):
+    """Device formulation of `frfcfs_order`: the issue-order
+    permutation [N] (int32) of one padded request stream, computed by a
+    `lax.scan` whose carry holds the first `max_window` PENDING
+    requests (the only candidates FR-FCFS-lite ever promotes), the
+    per-bank open rows, and the starvation counter.  O(N * max_window)
+    vector work instead of the O(N * window) Python loop, and it vmaps
+    over the (trace x policy) axes of a campaign so the reorder runs as
+    a prepass INSIDE the replay dispatch.
+
+    `window`, `slack_ns` and `cap` are traced scalars (per-policy
+    columns of a batched campaign); `max_window` is the static buffer
+    size (>= every policy's window, <= N).  `window <= 1` degenerates
+    to the identity permutation, which is how closed-page and FCFS
+    policies ride the same dispatch.  Padding (`valid` False) must be a
+    suffix: padded slots are never promoted, so they drain in order
+    after the last real request — exactly the Python reference applied
+    to the unpadded prefix.
+    """
+    n = arrival.shape[0]
+    w = max_window
+    slots = jnp.arange(w, dtype=jnp.int32)
+    slack = jnp.asarray(slack_ns, jnp.float32)
+    state0 = (arrival[:w], bank[:w], row[:w], valid[:w],
+              jnp.arange(w, dtype=jnp.int32),
+              jnp.full((n_banks,), -1, jnp.int32),     # open rows
+              jnp.zeros((), jnp.int32),                # defer counter
+              jnp.asarray(w, jnp.int32))               # next refill
+
+    def step(st, _):
+        a_buf, b_buf, r_buf, v_buf, i_buf, open_row, defer, nxt = st
+        hit = open_row[b_buf] == r_buf
+        horizon = a_buf[0] + slack
+        elig = (hit & (a_buf <= horizon) & v_buf & (slots < window))
+        promo = elig.any() & (defer < cap)
+        pick = jnp.where(promo, jnp.argmax(elig), 0).astype(jnp.int32)
+        out = i_buf[pick]
+        open_row = open_row.at[b_buf[pick]].set(r_buf[pick])
+        defer = jnp.where(pick > 0, defer + 1, 0)
+        # shift the buffer left past the picked slot; the freed last
+        # slot refills from the stream (sentinel once it runs dry)
+        nxt_c = jnp.minimum(nxt, n - 1)
+        src = jnp.where(slots >= pick, slots + 1, slots)
+
+        def shift(buf, fill):
+            return jnp.concatenate([buf, fill[None]])[src]
+
+        st2 = (shift(a_buf, arrival[nxt_c]), shift(b_buf, bank[nxt_c]),
+               shift(r_buf, row[nxt_c]),
+               shift(v_buf, valid[nxt_c] & (nxt < n)),
+               shift(i_buf, nxt_c), open_row, defer, nxt + 1)
+        return st2, out
+
+    _, perm = jax.lax.scan(step, state0, None, length=n)
+    return perm
 
 
 class BankState(NamedTuple):
@@ -174,48 +280,67 @@ def _bank_state0(n_banks: int, mlp_window: int) -> BankState:
                      idx=jnp.zeros((), jnp.int32))
 
 
-def _service(s: BankState, t, b, r, w, trcd, tras, twr, trp, tcl,
-             closed, mlp_window: int):
-    """Service ONE request: the per-request timing arithmetic, shared
-    bit-for-bit between `replay_one` (timing scalars fixed for the
-    whole trace) and `replay_adaptive` (timing scalars gathered from
-    the in-scan bin selection).  Returns (next state, raw latency,
-    row-hit flag)."""
-    gate = s.done_ring[s.idx % mlp_window]     # i-window completion
-    start = jnp.maximum(jnp.maximum(t, s.ready[b]), gate)
-    is_hit = s.open_row[b] == r
-    is_empty = s.open_row[b] == -1
+def service_math(t, gate, open_b, act_b, wrd_b, rdy_b, rf, w, trcd,
+                 tras, twr, trp, tcl, closed):
+    """The per-request timing arithmetic on ALREADY-GATHERED bank
+    state — pure elementwise jnp, shared verbatim by the three replay
+    layouts (`_service`'s scalar gathers, `replay_rows`' timing-row
+    lane vectors, the Pallas kernel's [banks, lanes] tiles), so the
+    timing model lives in exactly one place and their bit-identical
+    contract is structural rather than copy-discipline.
 
+    `open_b`/`rf` carry the open-row id in the caller's dtype (int32
+    or float32 — exact for row ids below 2**24; -1 = precharged).
+    Returns (row_latched, act_new, wr_done_new, ready_new, done,
+    latency, is_hit).  Latency is measured from *eligibility* (the
+    closed-loop gate), not the nominal trace timestamp — under
+    saturation the backlog belongs to the CPU-side stall model, not
+    to each DRAM access."""
+    start = jnp.maximum(jnp.maximum(t, rdy_b), gate)
+    is_hit = open_b == rf
+    is_empty = open_b == -1
     # conflict: precharge may start only after tRAS from ACT and
     # after write recovery completes
-    pre_ok = jnp.maximum(s.act_time[b] + tras, s.wr_done[b])
+    pre_ok = jnp.maximum(act_b + tras, wrd_b)
     conflict_start = jnp.maximum(start, pre_ok)
-    act_time_new = jnp.where(
-        is_hit, s.act_time[b],
+    act_new = jnp.where(
+        is_hit, act_b,
         jnp.where(is_empty, start + 0.0, conflict_start + trp))
     data_start = jnp.where(
         is_hit, start,
         jnp.where(is_empty, start + trcd, conflict_start + trp + trcd))
     done = data_start + tcl
-    wr_done_new = jnp.where(w, done + twr, s.wr_done[b])
+    wrd_new = jnp.where(w, done + twr, wrd_b)
     # closed-page: auto-precharge after the burst — the row is never
     # left open and the bank re-opens only after the precharge
     # (which itself waits out tRAS-from-ACT and write recovery)
-    pre_start = jnp.maximum(jnp.maximum(done, act_time_new + tras),
-                            wr_done_new)
+    pre_start = jnp.maximum(jnp.maximum(done, act_new + tras), wrd_new)
     ready_new = jnp.where(closed, pre_start + trp, done)
-    row_latched = jnp.where(closed, -1, r)
+    row_latched = jnp.where(closed, jnp.full_like(rf, -1), rf)
+    return (row_latched, act_new, wrd_new, ready_new, done,
+            done - jnp.maximum(t, gate), is_hit)
 
+
+def _service(s: BankState, t, b, r, w, trcd, tras, twr, trp, tcl,
+             closed, mlp_window: int):
+    """Service ONE request: gathers bank `b`'s state, applies
+    `service_math`, scatters the update back.  Shared bit-for-bit
+    between `replay_one` (timing scalars fixed for the whole trace)
+    and `replay_adaptive` (timing scalars gathered from the in-scan
+    bin selection).  Returns (next state, raw latency, row-hit
+    flag)."""
+    gate = s.done_ring[s.idx % mlp_window]     # i-window completion
+    (row_latched, act_new, wrd_new, ready_new, done, lat,
+     is_hit) = service_math(t, gate, s.open_row[b], s.act_time[b],
+                            s.wr_done[b], s.ready[b], r, w, trcd, tras,
+                            twr, trp, tcl, closed)
     s2 = BankState(open_row=s.open_row.at[b].set(row_latched),
-                   act_time=s.act_time.at[b].set(act_time_new),
-                   wr_done=s.wr_done.at[b].set(wr_done_new),
+                   act_time=s.act_time.at[b].set(act_new),
+                   wr_done=s.wr_done.at[b].set(wrd_new),
                    ready=s.ready.at[b].set(ready_new),
                    done_ring=s.done_ring.at[s.idx % mlp_window].set(done),
                    idx=s.idx + 1)
-    # latency from *eligibility* (the closed-loop gate), not from the
-    # nominal trace timestamp — under saturation the backlog belongs
-    # to the CPU-side stall model, not to each DRAM access
-    return s2, done - jnp.maximum(t, gate), is_hit
+    return s2, lat, is_hit
 
 
 def replay_one(arrival, bank, row, is_write, valid, tp_row, closed,
@@ -251,6 +376,55 @@ def replay_one(arrival, bank, row, is_write, valid, tp_row, closed,
     # busy until the last write has restored, not just until last data
     total = jnp.maximum(s_end.ready.max(), s_end.wr_done.max())
     return lat, total
+
+
+def replay_rows(arrival, bank, row, is_write, valid, timings, closed,
+                n_banks: int = 8, mlp_window: int = 8):
+    """Replay one trace under a whole [S, 6] STACK of timing rows in
+    one `lax.scan` — the timing-row axis rides the minor (lane) axis
+    of the carried bank state ([B, 4, S] packed as open-row/act/
+    wr-done/ready, done-ring [W, S]) instead of an outer vmap, so the
+    per-request bank gather/scatter and the one-hot request masks are
+    paid once per (trace, policy) step rather than once per timing
+    row.  ~4x faster than `vmap(replay_one)` over rows on CPU and the
+    same layout the Pallas replay kernel uses on TPU; bit-identical to
+    `replay_one` per row (same `_service` arithmetic, same operation
+    order — the open row is carried as float32, exact for row ids
+    below 2**24).
+
+    Returns (per-request latency [S, N] with zeros at padding, total
+    runtime [S]).  Padding must be a suffix of `valid` (the ring gate
+    is masked, not re-indexed — same contract as the Pallas kernel).
+    """
+    trcd, tras, twr, trp, tcl = (timings[:, 0], timings[:, 1],
+                                 timings[:, 2], timings[:, 3],
+                                 timings[:, 5])
+    s_rows = timings.shape[0]
+
+    def step(st, req):
+        bs, ring, idx = st              # [B, 4, S], [W, S], scalar
+        t, b, r, w, v = req
+        rowb = bs[b]                    # [4, S] one gather per request
+        gate = ring[idx % mlp_window]   # [S]
+        rf = r.astype(jnp.float32)
+        (latched, act_new, wrd_new, rdy_new, done, lat,
+         _) = service_math(t, gate, rowb[0], rowb[1], rowb[2], rowb[3],
+                           rf, w, trcd, tras, twr, trp, tcl, closed)
+        new_row = jnp.stack([jnp.broadcast_to(latched, (s_rows,)),
+                             act_new, wrd_new, rdy_new])
+        bs2 = bs.at[b].set(jnp.where(v, new_row, rowb))
+        ring2 = ring.at[idx % mlp_window].set(jnp.where(v, done, gate))
+        return ((bs2, ring2, idx + v.astype(jnp.int32)),
+                jnp.where(v, lat, 0.0))
+
+    bs0 = jnp.concatenate([jnp.full((n_banks, 1, s_rows), -1.0),
+                           jnp.zeros((n_banks, 3, s_rows))], axis=1)
+    (bse, _, _), lat = jax.lax.scan(
+        step, (bs0, jnp.zeros((mlp_window, s_rows)),
+               jnp.zeros((), jnp.int32)),
+        (arrival, bank, row, is_write, valid))
+    total = jnp.maximum(bse[:, 3].max(0), bse[:, 2].max(0))
+    return lat.T, total                  # [S, N], [S]
 
 
 class AdaptiveState(NamedTuple):

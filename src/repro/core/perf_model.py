@@ -20,8 +20,13 @@ vmapped dispatch and replays them against arbitrarily many stacked
 timing rows (and scheduling policies) in ONE more — `evaluate` is the
 two-row (standard vs adaptive) instantiation, and kernel launches
 never scale with the number of workloads, timing sets or policies.
-`workload_speedup` keeps the old per-trace reference path (via the
-`dram_sim.simulate` shim) for equivalence tests.
+With the default engine the campaign is fully device-resident
+(in-dispatch FR-FCFS prepass and statistics; only the [modes,
+workloads, P, S] summaries are transferred — see the sim_engine
+module docstring); pass `SimEngine(stats="host", reorder="host")` for
+the bit-exact reference pipeline.  `workload_speedup` keeps the old
+per-trace reference path (via the `dram_sim.simulate` shim, which IS
+that reference configuration) for equivalence tests.
 
 `evaluate_adaptive` is the closed-loop variant: the timing set is no
 longer a static row but a profiled per-bin table stack whose rows the

@@ -13,19 +13,39 @@ side: a `SimSpec` declares the campaign axes —
                 (`TimingParams.as_row` / `timing.stack_timing`),
 
 and `SimEngine` compiles the whole (T x P x S) grid into a single
-jitted, triple-vmapped replay of `dram_sim.replay_one`, returning a
-structured `SimResult` of mean/p99 latency, runtime and the raw
-latency grid.  `dram_sim.simulate` is the [1 x 1 x 1] shim over this
-path, so scalar and batched replays agree bit-for-bit.
+jitted replay dispatch, returning a structured `SimResult` of mean/p99
+latency, runtime and (opt-in) the raw latency grid.
+`dram_sim.simulate` is the [1 x 1 x 1] shim over the reference path,
+so scalar and batched replays agree bit-for-bit.
+
+The FAST PATH (engine defaults) keeps the whole campaign
+device-resident:
+
+  * reorder="device" — the FR-FCFS-lite issue order is computed by
+    `dram_sim.frfcfs_perm` as a prepass INSIDE the dispatch (the jitted
+    JAX formulation is parity-tested request-for-request against the
+    retained Python loop, so this changes where the permutation is
+    computed, never what it is),
+  * stats="device" — masked mean/p99 and the thermal diagnostics
+    (temp_max / temp_mean / bin_switches) reduce on-device and only
+    [grid]-shaped summaries cross the host boundary,
+  * `SimSpec.collect` — the O(grid * N) raw per-request outputs
+    ("latencies", "temps", "bins") materialize only when asked for.
+
+`stats="host"` + `reorder="host"` is the bit-exact reference path
+(exactly the original pack -> replay -> host `_masked_stats` pipeline);
+device stats match it within 1e-5 relative (the raw latency grid is
+bit-identical either way — only the reduction order differs).
+`backend="pallas"` swaps the vmapped `lax.scan` replay for the
+`repro.kernels.replay` Pallas kernel (interpret-mode fallback off-TPU);
+the adaptive (thermal) path always uses the scan.
 
 Attaching a `thermal.ThermalSpec` opens the fourth campaign axis —
 thermal scenarios — and switches the replay to the closed-loop
 `dram_sim.replay_adaptive`: the timing axis is then a stack of TABLES
 ([K, bins+1, 6], JEDEC fallback row last) whose rows the in-scan
 controller selects per request from the RC-modelled temperature, and
-the whole (T x P x K x C) grid is STILL one quadruple-vmapped
-dispatch.  The static path is the degenerate case (no thermal axis)
-and is left byte-for-byte untouched.
+the whole (T x P x K x C) grid is STILL one dispatch.
 
 `dispatch_count` increments once per replay launch — evaluation
 campaigns are expected to cost O(1) dispatches regardless of the
@@ -43,9 +63,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import timing as T
-from repro.core.dram_sim import (OPEN_FCFS, Policy, Trace, frfcfs_reorder,
-                                 replay_adaptive, replay_one)
+from repro.core.dram_sim import (OPEN_FCFS, Policy, Trace, frfcfs_perm,
+                                 frfcfs_reorder, replay_adaptive,
+                                 replay_rows)
 from repro.core.thermal import ThermalSpec
+
+COLLECTABLE = ("latencies", "temps", "bins")
 
 
 def _as_rows(timings) -> np.ndarray:
@@ -78,7 +101,13 @@ class SimSpec:
     """A declarative trace-replay campaign: every trace runs under every
     policy and every timing row.  `traces` is a tuple of `Trace`s (of
     any lengths — shorter ones are padded), or a single `Trace` whose
-    fields carry a leading batch axis."""
+    fields carry a leading batch axis.
+
+    `collect` opts into the raw per-request outputs ("latencies",
+    "temps", "bins") on the device-stats fast path — without it only
+    [grid]-shaped summaries leave the device, so large campaigns never
+    materialize O(grid * N) arrays host-side.  The host-stats reference
+    path always materializes them (it needs the raw grid anyway)."""
 
     traces: tuple[Trace, ...]
     timings: np.ndarray                      # [S, 6] rows | [K, S+1, 6]
@@ -88,6 +117,7 @@ class SimSpec:
     # attaching a thermal axis switches to the closed-loop adaptive
     # replay; `timings` is then a stack of per-bin TABLES, not rows
     thermal: ThermalSpec | None = None
+    collect: tuple[str, ...] = ()
 
     def __post_init__(self):
         tr = self.traces
@@ -101,7 +131,9 @@ class SimSpec:
             _as_rows(self.timings) if self.thermal is None else
             _as_tables(self.timings, len(self.thermal.temp_bins)))
         object.__setattr__(self, "policies", tuple(self.policies))
+        object.__setattr__(self, "collect", tuple(self.collect))
         assert self.traces and self.policies, "empty campaign"
+        assert all(c in COLLECTABLE for c in self.collect), self.collect
 
     @classmethod
     def single(cls, trace: Trace, tp: T.TimingParams,
@@ -115,10 +147,50 @@ class SimSpec:
                 base + (len(self.thermal.scenarios),))
 
     # ------------------------------------------------------------ packing
+    def _pack_streams(self):
+        """Pad the traces into dense [T, N] request arrays in FCFS
+        order plus the [T, N] validity mask."""
+        tr = self.traces
+        lens = [int(np.asarray(t.arrival).shape[0]) for t in tr]
+        n = max(lens)
+        arrival = np.zeros((len(tr), n), np.float32)
+        bank = np.zeros((len(tr), n), np.int32)
+        row = np.zeros((len(tr), n), np.int32)
+        is_write = np.zeros((len(tr), n), bool)
+        valid = np.zeros((len(tr), n), bool)
+        for i, t in enumerate(tr):
+            valid[i, :lens[i]] = True
+            arrival[i, :lens[i]] = np.asarray(t.arrival)
+            bank[i, :lens[i]] = np.asarray(t.bank)
+            row[i, :lens[i]] = np.asarray(t.row)
+            is_write[i, :lens[i]] = np.asarray(t.is_write)
+        return arrival, bank, row, is_write, valid
+
+    def policy_knobs(self):
+        """Per-policy (window, slack, cap) columns of the in-dispatch
+        FR-FCFS prepass.  Closed-page auto-precharges after every
+        access, so the row-hit promotion FR-FCFS-lite optimizes for
+        cannot exist — window 0 keeps those policies (and plain FCFS)
+        on the identity permutation."""
+        windows = np.array([0 if p.closed or p.reorder_window <= 1
+                            else p.reorder_window for p in self.policies],
+                           np.int32)
+        slacks = np.array([p.reorder_slack_ns for p in self.policies],
+                          np.float32)
+        caps = np.array([4 * max(int(w), 1) for w in windows], np.int32)
+        return windows, slacks, caps
+
+    def pack_device(self):
+        """Fast-path packing: FCFS-order [T, N] request arrays + the
+        validity mask + the per-policy reorder knobs — the FR-FCFS
+        issue orders materialize on device, inside the dispatch."""
+        return self._pack_streams() + self.policy_knobs()
+
     def pack(self):
-        """Pad the traces into dense [T, P, N] request arrays (the policy
-        axis materializes FR-FCFS-lite issue orders) plus the [T, N]
-        validity mask and the per-policy closed-page flags."""
+        """Reference packing: dense [T, P, N] request arrays (the
+        policy axis materializes FR-FCFS-lite issue orders HOST-side
+        via the retained Python loop, cached across calls) plus the
+        [T, N] validity mask and the per-policy closed-page flags."""
         tr, pol = self.traces, self.policies
         lens = [int(np.asarray(t.arrival).shape[0]) for t in tr]
         n = max(lens)
@@ -132,11 +204,11 @@ class SimSpec:
             valid[i, :lens[i]] = True
             reordered: dict = {}
             for j, p in enumerate(pol):
-                # closed-page auto-precharges after every access, so the
-                # row-hit promotion FR-FCFS-lite optimizes for cannot
-                # exist — keep FCFS order there; the O(N*window) Python
-                # reorder is cached per (window, slack) so policies
-                # sharing a reorder pay it once per trace
+                # closed-page keeps FCFS order (see policy_knobs); the
+                # O(N*window) Python reorder is cached per
+                # (window, slack) so policies sharing a reorder pay it
+                # once per trace (and `frfcfs_reorder` caches across
+                # pack() calls on top)
                 key = (None if p.closed or p.reorder_window <= 1 else
                        (p.reorder_window, p.reorder_slack_ns))
                 if key not in reordered:
@@ -150,6 +222,10 @@ class SimSpec:
         closed = np.array([p.closed for p in pol])
         return arrival, bank, row, is_write, valid, closed
 
+    @property
+    def closed_flags(self) -> np.ndarray:
+        return np.array([p.closed for p in self.policies])
+
 
 @dataclasses.dataclass(frozen=True)
 class SimResult:
@@ -158,14 +234,16 @@ class SimResult:
     policies, table stacks, thermal scenarios) for adaptive campaigns.
     `latencies` is padded to the longest trace — mask with `valid`
     before reducing yourself.  The `temp_*`/`bin_*` diagnostics are
-    populated only on the adaptive path."""
+    populated only on the adaptive path.  On the device-stats fast
+    path the raw `latencies`/`temps`/`bins` grids are None unless the
+    spec's `collect` asked for them."""
 
     spec: SimSpec
     mean_latency_ns: np.ndarray     # [T, P, S] | [T, P, K, C]
     p99_latency_ns: np.ndarray      # same leading shape
     total_ns: np.ndarray            # same leading shape
-    latencies: np.ndarray           # [..., N] (0 at padding)
     valid: np.ndarray               # [T, N]
+    latencies: np.ndarray | None = None     # [..., N] (0 at padding)
     temps: np.ndarray | None = None         # [T, P, K, C, N] sensed C
     bins: np.ndarray | None = None          # [T, P, K, C, N] (-1 pad)
     temp_max: np.ndarray | None = None      # [T, P, K, C]
@@ -174,40 +252,177 @@ class SimResult:
     bank_heat: np.ndarray | None = None     # [T, P, K, C, B] end C
 
 
-@functools.partial(jax.jit, static_argnums=(0, 1))
-def _replay_grid(n_banks, mlp_window, arrival, bank, row, is_write,
-                 valid, timings, closed):
+def _reorder_prepass(arrival, bank, row, is_write, valid, slacks, caps,
+                     reorder_plan: tuple, n_banks: int,
+                     n_policies: int):
+    """In-dispatch FR-FCFS prepass: [T, N] FCFS streams -> [T, P, N]
+    per-policy issue orders, all on device.  `reorder_plan` (static)
+    groups the policy columns with a window >= 2 by window size —
+    each group pays an O(N * window) permutation scan sized to ITS
+    window (not the campaign maximum); window-0 policies broadcast
+    the FCFS stream untouched."""
+    t, n = arrival.shape
+
+    def bcast(x):
+        return jnp.broadcast_to(x[:, None, :], (t, n_policies, n))
+
+    if not reorder_plan:
+        return (bcast(arrival), bcast(bank), bcast(row),
+                bcast(is_write))
+
+    perm = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None, None],
+                            (t, n_policies, n))
+    for window, idx in reorder_plan:
+        sel = np.asarray(idx, np.int32)
+
+        def one(a, b, r, v, s_, c_, w=window):
+            return frfcfs_perm(a, b, r, v, w, s_, c_, min(w, n),
+                               n_banks)
+
+        f_p = jax.vmap(one, in_axes=(None, None, None, None, 0, 0))
+        f_tp = jax.vmap(f_p, in_axes=(0, 0, 0, 0, None, None))
+        perm = perm.at[:, sel, :].set(
+            f_tp(arrival, bank, row, valid, slacks[sel], caps[sel]))
+
+    def gather(x):
+        return jnp.take_along_axis(bcast(x), perm, axis=2)
+
+    return (gather(arrival), gather(bank), gather(row),
+            gather(is_write))
+
+
+def _p99_k(valid: np.ndarray) -> int:
+    """Static top-k depth covering every trace's p99 order statistics
+    (the float32 arithmetic mirrors `_device_stats` exactly, so the
+    in-dispatch descending indices are guaranteed < k)."""
+    c = valid.sum(-1).astype(np.float32)
+    lo = np.floor((np.float32(0.99) * (c - 1.0)).astype(np.float32))
+    return int((c - lo).max())
+
+
+def _device_stats(lat, valid, k: int):
+    """In-dispatch masked mean / interpolated p99 over the last axis.
+    Same interpolation arithmetic as the host `_masked_stats`
+    reference; only the summation order differs (XLA reduction vs
+    numpy pairwise), which keeps the two within ~1e-7 relative — the
+    documented contract is 1e-5.  The p99 order statistics come from a
+    `top_k` of static depth `k` (`_p99_k`) instead of a full sort —
+    the selected VALUES are identical (order statistics don't depend
+    on how they're found) and XLA's top-k is ~20x cheaper than its
+    sort on a [grid, N] latency tensor."""
+    mid = (1,) * (lat.ndim - 2)
+    v = valid.reshape((valid.shape[0],) + mid + (valid.shape[1],))
+    cnt = valid.sum(-1).astype(jnp.float32).reshape(
+        (valid.shape[0],) + mid)
+    mean = jnp.where(v, lat, 0.0).sum(-1) / cnt
+    # descending top-k; -inf padding sorts last, so entry j is the
+    # (j+1)-th largest VALID latency and ascending position i maps to
+    # descending position cnt-1-i
+    top = jax.lax.top_k(jnp.where(v, lat, -jnp.inf), k)[0]
+    q = (jnp.float32(0.99) * (cnt - 1.0)).astype(jnp.float32)
+    lo = jnp.floor(q)
+    hi = jnp.ceil(q)
+    frac = q - lo
+    di_lo = (cnt - 1.0 - lo).astype(jnp.int32)
+    di_hi = (cnt - 1.0 - hi).astype(jnp.int32)
+    vlo = jnp.take_along_axis(
+        top, jnp.broadcast_to(di_lo[..., None], top.shape[:-1] + (1,)),
+        -1)[..., 0]
+    vhi = jnp.take_along_axis(
+        top, jnp.broadcast_to(di_hi[..., None], top.shape[:-1] + (1,)),
+        -1)[..., 0]
+    return mean, vlo + (vhi - vlo) * frac
+
+
+def _device_thermal_diag(temps, bin_sel, valid):
+    """In-dispatch thermal diagnostics over each trace's valid prefix:
+    (temp_max [grid], temp_mean [grid], bin_switches [grid]).  max and
+    switch counts are exact; the mean matches the host loop within
+    float-reduction noise."""
+    mid = (1,) * (temps.ndim - 2)
+    v = valid.reshape((valid.shape[0],) + mid + (valid.shape[1],))
+    cnt = valid.sum(-1).astype(jnp.float32).reshape(
+        (valid.shape[0],) + mid)
+    tmax = jnp.where(v, temps, -jnp.inf).max(-1)
+    tmean = jnp.where(v, temps, 0.0).sum(-1) / cnt
+    pair = v[..., 1:] & v[..., :-1]          # padding is a suffix
+    switches = ((bin_sel[..., 1:] != bin_sel[..., :-1]) & pair).sum(-1)
+    return tmax, tmean, switches
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3, 4, 5))
+def _replay_grid(n_banks, mlp_window, reorder_plan, backend, want,
+                 p99_k, arrival, bank, row, is_write, valid, timings,
+                 closed, slacks, caps):
     """ONE dispatch: replay every (trace, policy, timing row) cell.
 
-    arrival/bank/row/is_write: [T, P, N]; valid: [T, N] (shared across
-    policies — reordering permutes only the valid prefix); timings:
-    [S, 6]; closed: [P] bool.  Returns the raw latency grid
-    [T, P, S, N] and total runtime [T, P, S] (an exact max reduction,
-    so its in-dispatch order cannot perturb bits).
+    Fast path: arrival/bank/row/is_write are [T, N] FCFS streams and
+    the FR-FCFS prepass (`reorder_plan` non-empty) materializes the
+    [T, P, N] per-policy issue orders on device.  Reference path: the
+    arrays arrive [T, P, N], already host-reordered, with an empty
+    plan.  valid: [T, N] (shared across policies — reordering permutes
+    only the valid prefix); timings: [S, 6]; closed/slacks/caps: [P].
+    `want` (static) selects the outputs: "stats" computes masked
+    mean/p99 in-dispatch, "lat" returns the raw [T, P, S, N] latency
+    grid; total runtime [T, P, S] is always returned (an exact max
+    reduction, so its in-dispatch order cannot perturb bits).
+    `backend` (static) picks the replay core: "scan" is the
+    lane-stacked `dram_sim.replay_rows` lax.scan,
+    "pallas"/"pallas_interpret" the `repro.kernels.replay` kernel.
     """
-    def one(a, b, r, w, v, tp, c):
-        return replay_one(a, b, r, w, v, tp, c, n_banks, mlp_window)
+    if arrival.ndim == 2:
+        a3, b3, r3, w3 = _reorder_prepass(
+            arrival, bank, row, is_write, valid, slacks, caps,
+            reorder_plan, n_banks, closed.shape[0])
+    else:
+        a3, b3, r3, w3 = arrival, bank, row, is_write
 
-    f_s = jax.vmap(one, in_axes=(None, None, None, None, None, 0, None))
-    f_ps = jax.vmap(f_s, in_axes=(0, 0, 0, 0, None, None, 0))
-    f_tps = jax.vmap(f_ps, in_axes=(0, 0, 0, 0, 0, None, None))
-    return f_tps(arrival, bank, row, is_write, valid, timings, closed)
+    if backend == "scan":
+        def one(a, b, r, w, v, c):
+            return replay_rows(a, b, r, w, v, timings, c, n_banks,
+                               mlp_window)
+
+        f_p = jax.vmap(one, in_axes=(0, 0, 0, 0, None, 0))
+        f_tp = jax.vmap(f_p, in_axes=(0, 0, 0, 0, 0, None))
+        lat, total = f_tp(a3, b3, r3, w3, valid, closed)
+    else:
+        from repro.kernels.replay import ops as replay_ops
+        lat, total = replay_ops.replay_grid(
+            a3, b3, r3, w3, valid, timings, closed, n_banks, mlp_window,
+            impl=backend)
+
+    out = {"total": total}
+    if "stats" in want:
+        out["mean"], out["p99"] = _device_stats(lat, valid, p99_k)
+    if "lat" in want:
+        out["lat"] = lat
+    return out
 
 
-@functools.partial(jax.jit, static_argnums=(0, 1))
-def _replay_grid_adaptive(n_banks, mlp_window, arrival, bank, row,
-                          is_write, valid, tables, bins, scns, tcfg,
-                          closed):
+@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3, 4))
+def _replay_grid_adaptive(n_banks, mlp_window, reorder_plan, want,
+                          p99_k, arrival, bank, row, is_write, valid,
+                          tables, bins, scns, tcfg, closed, slacks,
+                          caps):
     """ONE dispatch: closed-loop replay of every (trace, policy, table
     stack, thermal scenario) cell.
 
-    arrival/bank/row/is_write: [T, P, N]; valid: [T, N]; tables:
-    [K, S+1, 6] (JEDEC fallback row last); bins: [S]; scns:
-    [C, thermal.SCN_COLS]; tcfg: [6] `ThermalConfig.as_row`; closed:
-    [P] bool.  Returns ([T, P, K, C, N] latency, [T, P, K, C] total,
-    [T, P, K, C, N] sensed temperature, [T, P, K, C, N] selected bin,
-    [T, P, K, C, B] end-of-trace per-bank overheat).
+    Stream layout and the FR-FCFS prepass follow `_replay_grid`;
+    tables: [K, S+1, 6] (JEDEC fallback row last); bins: [S]; scns:
+    [C, thermal.SCN_COLS]; tcfg: [6] `ThermalConfig.as_row`.  `want`
+    (static) selects outputs: "stats" adds in-dispatch mean/p99 and
+    the thermal diagnostics (temp_max/temp_mean/bin_switches);
+    "lat"/"temps"/"bins" return the raw [T, P, K, C, N] grids.  The
+    [T, P, K, C] total runtime and [T, P, K, C, B] end-of-trace bank
+    heat are always returned.
     """
+    if arrival.ndim == 2:
+        a3, b3, r3, w3 = _reorder_prepass(
+            arrival, bank, row, is_write, valid, slacks, caps,
+            reorder_plan, n_banks, closed.shape[0])
+    else:
+        a3, b3, r3, w3 = arrival, bank, row, is_write
+
     def one(a, b, r, w, v, tbl, scn, c):
         return replay_adaptive(a, b, r, w, v, tbl, bins, scn, tcfg, c,
                                n_banks, mlp_window)
@@ -216,8 +431,22 @@ def _replay_grid_adaptive(n_banks, mlp_window, arrival, bank, row,
     f_kc = jax.vmap(f_c, in_axes=(None,) * 5 + (0, None, None))
     f_pkc = jax.vmap(f_kc, in_axes=(0, 0, 0, 0, None, None, None, 0))
     f_tpkc = jax.vmap(f_pkc, in_axes=(0, 0, 0, 0, 0, None, None, None))
-    return f_tpkc(arrival, bank, row, is_write, valid, tables, scns,
-                  closed)
+    lat, total, temps, bin_sel, bank_heat = f_tpkc(
+        a3, b3, r3, w3, valid, tables, scns, closed)
+
+    out = {"total": total, "bank_heat": bank_heat}
+    if "stats" in want:
+        out["mean"], out["p99"] = _device_stats(lat, valid, p99_k)
+        (out["temp_max"], out["temp_mean"],
+         out["bin_switches"]) = _device_thermal_diag(temps, bin_sel,
+                                                     valid)
+    if "lat" in want:
+        out["lat"] = lat
+    if "temps" in want:
+        out["temps"] = temps
+    if "bins" in want:
+        out["bins"] = bin_sel
+    return out
 
 
 def _masked_stats(lat: np.ndarray, valid: np.ndarray):
@@ -230,7 +459,8 @@ def _masked_stats(lat: np.ndarray, valid: np.ndarray):
     unpadded sum, so summing padding (even zeros) would only be
     coincidentally bit-equal.  Works for any number of campaign axes
     between the trace axis and the request axis ([T, P, S, N] static,
-    [T, P, K, C, N] adaptive)."""
+    [T, P, K, C, N] adaptive).  This is the `stats="host"` reference;
+    `_device_stats` is the in-dispatch fast path (1e-5-relative)."""
     mid = (1,) * (lat.ndim - 2)
     v = valid.reshape((valid.shape[0],) + mid + (valid.shape[1],))
     cnt = valid.sum(-1).astype(np.float32).reshape(
@@ -257,62 +487,146 @@ def _masked_stats(lat: np.ndarray, valid: np.ndarray):
 class SimEngine:
     """Facade that compiles a `SimSpec` into one replay dispatch —
     static (T x P x S) or, with a thermal axis, adaptive
-    (T x P x K x C); either way ONE launch per `run`."""
+    (T x P x K x C); either way ONE launch per `run`.
+
+    Knobs (see module docstring):
+
+      backend — "scan" (default: vmapped lax.scan), "pallas" /
+                "pallas_interpret" (the repro.kernels.replay kernel;
+                plain "pallas" falls back to interpret mode off-TPU),
+                "auto" (pallas on TPU, scan elsewhere).  Adaptive
+                campaigns always replay via the scan.
+      stats   — "device" (default: in-dispatch reductions, only
+                [grid]-shaped summaries transferred, raw grids gated
+                by SimSpec.collect) or "host" (bit-exact numpy
+                reference, raw grids always materialized).
+      reorder — "device" (default: FR-FCFS prepass inside the
+                dispatch) or "host" (retained Python loop in pack()).
+    """
 
     dispatch_count: int = 0
+    backend: str = "scan"
+    stats: str = "device"
+    reorder: str = "device"
+
+    def __post_init__(self):
+        assert self.backend in ("auto", "scan", "pallas",
+                                "pallas_interpret"), self.backend
+        assert self.stats in ("device", "host"), self.stats
+        assert self.reorder in ("device", "host"), self.reorder
+
+    def _backend(self) -> str:
+        on_tpu = jax.default_backend() == "tpu"
+        if self.backend == "auto":
+            return "pallas" if on_tpu else "scan"
+        if self.backend == "pallas" and not on_tpu:
+            return "pallas_interpret"     # CPU fallback: kernel body
+        return self.backend
+
+    def _inputs(self, spec: SimSpec):
+        """(stream arrays ([T,N] fast / [T,P,N] reference), valid,
+        closed, reorder knobs, static reorder plan)."""
+        if self.reorder == "device":
+            arrival, bank, row, is_write, valid, windows, slacks, caps \
+                = spec.pack_device()
+            groups: dict[int, list[int]] = {}
+            for i, w in enumerate(windows.tolist()):
+                if w > 1:
+                    groups.setdefault(int(w), []).append(i)
+            plan = tuple(sorted((w, tuple(ix))
+                                for w, ix in groups.items()))
+        else:
+            arrival, bank, row, is_write, valid, _ = spec.pack()
+            p = len(spec.policies)
+            slacks = np.zeros((p,), np.float32)
+            caps = np.ones((p,), np.int32)
+            plan = ()
+        return (jnp.asarray(arrival), jnp.asarray(bank),
+                jnp.asarray(row), jnp.asarray(is_write),
+                jnp.asarray(valid), valid,
+                jnp.asarray(spec.closed_flags), jnp.asarray(slacks),
+                jnp.asarray(caps), plan)
 
     def run(self, spec: SimSpec) -> SimResult:
-        arrival, bank, row, is_write, valid, closed = spec.pack()
+        (arrival, bank, row, is_write, valid_d, valid, closed, slacks,
+         caps, plan) = self._inputs(spec)
         self.dispatch_count += 1
+
         if spec.thermal is None:
-            lat, total = _replay_grid(
-                spec.n_banks, spec.mlp_window, jnp.asarray(arrival),
-                jnp.asarray(bank), jnp.asarray(row),
-                jnp.asarray(is_write), jnp.asarray(valid),
-                jnp.asarray(spec.timings), jnp.asarray(closed))
-            lat = np.asarray(lat)
-            mean, p99 = _masked_stats(lat, valid)
+            want = (("stats",) + (("lat",)
+                                  if "latencies" in spec.collect else ())
+                    if self.stats == "device" else ("lat",))
+            out = _replay_grid(
+                spec.n_banks, spec.mlp_window, plan, self._backend(),
+                want, _p99_k(valid), arrival, bank, row, is_write,
+                valid_d, jnp.asarray(spec.timings), closed, slacks,
+                caps)
+            if self.stats == "host":
+                lat = np.asarray(out["lat"])
+                mean, p99 = _masked_stats(lat, valid)
+            else:
+                mean, p99 = np.asarray(out["mean"]), np.asarray(out["p99"])
+                lat = (np.asarray(out["lat"]) if "lat" in out else None)
             return SimResult(spec=spec, mean_latency_ns=mean,
                              p99_latency_ns=p99,
-                             total_ns=np.asarray(total),
+                             total_ns=np.asarray(out["total"]),
                              latencies=lat, valid=valid)
 
         scns, bins, tcfg = spec.thermal.pack()
-        lat, total, temps, bin_sel, bank_heat = _replay_grid_adaptive(
-            spec.n_banks, spec.mlp_window, jnp.asarray(arrival),
-            jnp.asarray(bank), jnp.asarray(row), jnp.asarray(is_write),
-            jnp.asarray(valid), jnp.asarray(spec.timings),
-            jnp.asarray(bins), jnp.asarray(scns), jnp.asarray(tcfg),
-            jnp.asarray(closed))
-        lat, temps, bin_sel = (np.asarray(lat), np.asarray(temps),
-                               np.asarray(bin_sel))
-        mean, p99 = _masked_stats(lat, valid)
-        # thermal diagnostics over each trace's valid prefix
-        tmax = np.empty(lat.shape[:-1], np.float32)
-        tmean = np.empty(lat.shape[:-1], np.float32)
-        switches = np.empty(lat.shape[:-1], np.int64)
-        for t in range(lat.shape[0]):                # padding is a suffix
-            c = int(valid[t].sum())
-            tmax[t] = temps[t, ..., :c].max(-1)
-            tmean[t] = temps[t, ..., :c].mean(-1)
-            switches[t] = (np.diff(bin_sel[t, ..., :c], axis=-1)
-                           != 0).sum(-1)
+        if self.stats == "device":
+            want = ("stats",)
+            want += ("lat",) if "latencies" in spec.collect else ()
+            want += ("temps",) if "temps" in spec.collect else ()
+            want += ("bins",) if "bins" in spec.collect else ()
+        else:
+            want = ("lat", "temps", "bins")
+        out = _replay_grid_adaptive(
+            spec.n_banks, spec.mlp_window, plan, want, _p99_k(valid),
+            arrival, bank, row, is_write, valid_d,
+            jnp.asarray(spec.timings), jnp.asarray(bins),
+            jnp.asarray(scns), jnp.asarray(tcfg), closed, slacks, caps)
+
+        if self.stats == "host":
+            lat, temps, bin_sel = (np.asarray(out["lat"]),
+                                   np.asarray(out["temps"]),
+                                   np.asarray(out["bins"]))
+            mean, p99 = _masked_stats(lat, valid)
+            # thermal diagnostics over each trace's valid prefix
+            tmax = np.empty(lat.shape[:-1], np.float32)
+            tmean = np.empty(lat.shape[:-1], np.float32)
+            switches = np.empty(lat.shape[:-1], np.int64)
+            for t in range(lat.shape[0]):            # padding is a suffix
+                c = int(valid[t].sum())
+                tmax[t] = temps[t, ..., :c].max(-1)
+                tmean[t] = temps[t, ..., :c].mean(-1)
+                switches[t] = (np.diff(bin_sel[t, ..., :c], axis=-1)
+                               != 0).sum(-1)
+        else:
+            mean, p99 = np.asarray(out["mean"]), np.asarray(out["p99"])
+            tmax, tmean = (np.asarray(out["temp_max"]),
+                           np.asarray(out["temp_mean"]))
+            switches = np.asarray(out["bin_switches"])
+            lat = np.asarray(out["lat"]) if "lat" in out else None
+            temps = np.asarray(out["temps"]) if "temps" in out else None
+            bin_sel = np.asarray(out["bins"]) if "bins" in out else None
         return SimResult(spec=spec, mean_latency_ns=mean,
-                         p99_latency_ns=p99, total_ns=np.asarray(total),
+                         p99_latency_ns=p99,
+                         total_ns=np.asarray(out["total"]),
                          latencies=lat, valid=valid, temps=temps,
                          bins=bin_sel, temp_max=tmax, temp_mean=tmean,
                          bin_switches=switches,
-                         bank_heat=np.asarray(bank_heat))
+                         bank_heat=np.asarray(out["bank_heat"]))
 
 
 _DEFAULT: SimEngine | None = None
 
 
 def default_engine() -> SimEngine:
-    """Shared engine used by the `dram_sim.simulate` shim."""
+    """Shared engine used by the `dram_sim.simulate` shim: the full
+    bit-exact reference configuration (host stats, host reorder)."""
     global _DEFAULT
     if _DEFAULT is None:
-        _DEFAULT = SimEngine()
+        _DEFAULT = SimEngine(stats="host", reorder="host")
     return _DEFAULT
 
 

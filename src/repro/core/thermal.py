@@ -44,6 +44,12 @@ bin's edge, so a module hovering on a bin boundary does not thrash the
 timing registers.  Above the hottest profiled bin the selection falls
 back to the JEDEC row (the last row of the table stack), exactly like
 the static controller.
+
+The thermal diagnostics a campaign reports (temp_max / temp_mean /
+bin_switches per grid cell) are reduced INSIDE the replay dispatch on
+the engine's default device-stats path; the raw [grid, N] sensed
+temperature and selected-bin traces only materialize when a
+`sim_engine.SimSpec` opts in via `collect=("temps", "bins")`.
 """
 
 from __future__ import annotations

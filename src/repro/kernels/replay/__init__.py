@@ -1,0 +1,3 @@
+from repro.kernels.replay.ops import replay_grid
+
+__all__ = ["replay_grid"]

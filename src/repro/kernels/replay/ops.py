@@ -1,0 +1,78 @@
+"""Jitted public wrappers for the replay kernel.
+
+`replay_grid` is the entry point `repro.core.sim_engine._replay_grid`
+dispatches to when `SimEngine(backend="pallas")` is selected: it takes
+the same [T, P, N] request grid + [S, 6] timing rows as the vmapped
+lax.scan path, flattens the (trace x policy) axes into kernel cells,
+pads the timing-row axis to the 128-lane block, casts the
+bool/scalar-flag inputs to the kernel's int32/float32 layout, and
+unpads/reshapes the outputs back to the scan path's [T, P, S, N] /
+[T, P, S] shapes — so the two backends are drop-in interchangeable
+inside the one-dispatch campaign.
+
+impl: 'auto' (pallas on TPU, ref elsewhere), 'pallas' (compiled),
+'pallas_interpret' (kernel body on CPU — the off-TPU fallback and the
+parity-test mode), 'ref' (vmapped lax.scan oracle).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.replay import ref, replay
+
+
+def _pad_rows(timings_t: jnp.ndarray, bs: int) -> jnp.ndarray:
+    """Pad the [6, S] timing-row axis to a block multiple; padding
+    replicates column 0 (always-valid timings whose outputs are
+    sliced off)."""
+    s = timings_t.shape[1]
+    rem = (-s) % bs
+    if rem == 0:
+        return timings_t
+    return jnp.concatenate(
+        [timings_t, jnp.broadcast_to(timings_t[:, :1], (6, rem))], axis=1)
+
+
+def replay_grid(arrival, bank, row, is_write, valid, timings, closed,
+                n_banks: int = 8, mlp_window: int = 8,
+                impl: str = "auto", bs: int | None = None):
+    """arrival/bank/row/is_write: [T, P, N]; valid: [T, N]; timings:
+    [S, 6]; closed: [P] bool -> (latency [T, P, S, N], total
+    [T, P, S]) — same contract as the lax.scan path (`ref.replay_grid`).
+    """
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return ref.replay_grid(arrival, bank, row, is_write, valid,
+                               timings, closed, n_banks, mlp_window)
+
+    bs = bs or replay.BLOCK_ROWS
+    t, p, n = arrival.shape
+    s = timings.shape[0]
+    g = t * p
+
+    def cells(x, dtype):
+        return x.astype(dtype).reshape(g, n)
+
+    arrival_g = cells(arrival, jnp.float32)
+    bank_g = cells(bank, jnp.int32)
+    row_g = cells(row, jnp.int32)
+    wr_g = cells(is_write, jnp.int32)
+    val_g = jnp.broadcast_to(valid.astype(jnp.int32)[:, None, :],
+                             (t, p, n)).reshape(g, n)
+    closed_col = jnp.broadcast_to(
+        closed.astype(jnp.float32)[None, :], (t, p)).reshape(g, 1)
+    tim_t = _pad_rows(jnp.asarray(timings, jnp.float32).T, bs)
+
+    lat, total = replay.replay_blocks(
+        closed_col, arrival_g, bank_g, row_g, wr_g, val_g, tim_t,
+        n_banks=n_banks, mlp_window=mlp_window,
+        interpret=(impl == "pallas_interpret"), bs=bs)
+    # [G, N, S_pad] -> [T, P, S, N]
+    lat = lat[:, :, :s].reshape(t, p, n, s).transpose(0, 1, 3, 2)
+    return lat, total[:, :s].reshape(t, p, s)
+
+
+__all__ = ["replay_grid"]

@@ -1,0 +1,29 @@
+"""lax.scan oracle for the replay kernel: the vmapped
+`repro.core.dram_sim.replay_one` path evaluated over the same
+flattened-cell layout the kernel uses.  Used for CPU execution and as
+the parity reference for the Pallas kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dram_sim import replay_one
+
+
+@functools.partial(jax.jit, static_argnames=("n_banks", "mlp_window"))
+def replay_grid(arrival, bank, row, is_write, valid, timings, closed,
+                n_banks: int = 8, mlp_window: int = 8):
+    """arrival/bank/row/is_write: [T, P, N]; valid: [T, N]; timings:
+    [S, 6]; closed: [P] bool -> (latency [T, P, S, N], total
+    [T, P, S])."""
+    def one(a, b, r, w, v, tp, c):
+        return replay_one(a, b, r, w, v, tp, c, n_banks, mlp_window)
+
+    f_s = jax.vmap(one, in_axes=(None, None, None, None, None, 0, None))
+    f_ps = jax.vmap(f_s, in_axes=(0, 0, 0, 0, None, None, 0))
+    f_tps = jax.vmap(f_ps, in_axes=(0, 0, 0, 0, 0, None, None))
+    return f_tps(arrival, bank, row, is_write,
+                 jnp.asarray(valid, bool), timings, closed)

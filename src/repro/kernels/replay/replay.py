@@ -1,0 +1,147 @@
+"""Pallas TPU kernel: batched trace replay over a (trace x policy x
+timing row) campaign grid.
+
+One program per (trace, policy) campaign cell and per block of 128
+timing rows: the timing-row axis rides the 128-lane minor dimension
+(every lane replays the SAME request stream under a different timing
+row — the memory-access pattern AL-DRAM campaigns sweep), and the
+whole controller state lives in VMEM scratch as [banks, lanes] /
+[mlp_window, lanes] tiles:
+
+  open_row / act_time / wr_done / ready : [n_banks, BLOCK_ROWS]
+  done_ring (bounded-MLP completion gate): [mlp_window, BLOCK_ROWS]
+
+A `fori_loop` walks the N requests of the stream; per request the
+scalar (arrival, bank, row, is_write, valid) fields broadcast against
+the lane axis, the bank/ring rows are selected with one-hot sublane
+masks (no dynamic lane indexing), and the per-request service
+arithmetic mirrors `repro.core.dram_sim._service` operation for
+operation — the kernel is numerics-parity-tested against the vmapped
+`lax.scan` path (`repro.kernels.replay.ref`).
+
+Padding semantics match the scan: invalid requests (a suffix — the
+ring gate is indexed by the loop counter, which equals the scan's
+valid-step counter only while padding stays a suffix) leave every
+state tile untouched and emit zero latency.
+
+VMEM per grid step: 5 request streams of N float32/int32 + the
+[6, 128] timing tile + the [N, 128] latency out tile + ~14 KB of
+state scratch — ~4.3 MB at N = 8192, under the ~16 MB budget.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.dram_sim import service_math
+
+# Timing rows per program, on the 128-lane minor axis.
+BLOCK_ROWS = 128
+
+
+def _kernel(closed_ref, arr_ref, bank_ref, row_ref, wr_ref, val_ref,
+            tim_ref, lat_ref, total_ref, open_s, act_s, wrd_s, rdy_s,
+            ring_s, *, n_banks: int, mlp_window: int, n_req: int):
+    bs = tim_ref.shape[1]
+    closed = closed_ref[0, 0] > 0.5
+    trcd, tras, twr, trp, tcl = (tim_ref[0, :], tim_ref[1, :],
+                                 tim_ref[2, :], tim_ref[3, :],
+                                 tim_ref[5, :])
+    bank_iota = jax.lax.broadcasted_iota(jnp.int32, (n_banks, bs), 0)
+    ring_iota = jax.lax.broadcasted_iota(jnp.int32, (mlp_window, bs), 0)
+
+    # scratch persists across grid steps — re-arm the controller state
+    open_s[...] = jnp.full((n_banks, bs), -1.0, jnp.float32)
+    act_s[...] = jnp.zeros((n_banks, bs), jnp.float32)
+    wrd_s[...] = jnp.zeros((n_banks, bs), jnp.float32)
+    rdy_s[...] = jnp.zeros((n_banks, bs), jnp.float32)
+    ring_s[...] = jnp.zeros((mlp_window, bs), jnp.float32)
+
+    def body(k, _):
+        t = arr_ref[0, k]
+        b = bank_ref[0, k]
+        rf = row_ref[0, k].astype(jnp.float32)
+        w = wr_ref[0, k] > 0
+        v = val_ref[0, k] > 0
+        bm = bank_iota == b                       # one-hot bank rows
+        rm = ring_iota == (k % mlp_window)        # one-hot ring slot
+
+        open_b = jnp.sum(jnp.where(bm, open_s[...], 0.0), axis=0)
+        act_b = jnp.sum(jnp.where(bm, act_s[...], 0.0), axis=0)
+        wrd_b = jnp.sum(jnp.where(bm, wrd_s[...], 0.0), axis=0)
+        rdy_b = jnp.sum(jnp.where(bm, rdy_s[...], 0.0), axis=0)
+        gate = jnp.sum(jnp.where(rm, ring_s[...], 0.0), axis=0)
+
+        # the per-request timing model itself is the SHARED elementwise
+        # helper (repro.core.dram_sim.service_math) — only the one-hot
+        # gather/scatter layout is kernel-specific
+        (row_latched, act_new, wrd_new, rdy_new, done, lat,
+         _) = service_math(t, gate, open_b, act_b, wrd_b, rdy_b, rf, w,
+                           trcd, tras, twr, trp, tcl, closed)
+
+        upd = bm & v
+        open_s[...] = jnp.where(upd, row_latched, open_s[...])
+        act_s[...] = jnp.where(upd, act_new, act_s[...])
+        wrd_s[...] = jnp.where(upd, wrd_new, wrd_s[...])
+        rdy_s[...] = jnp.where(upd, rdy_new, rdy_s[...])
+        ring_s[...] = jnp.where(rm & v, done, ring_s[...])
+
+        lat_ref[0, k, :] = jnp.where(v, lat, 0.0)
+        return 0
+
+    jax.lax.fori_loop(0, n_req, body, 0)
+    total_ref[0, :] = jnp.maximum(jnp.max(rdy_s[...], axis=0),
+                                  jnp.max(wrd_s[...], axis=0))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_banks", "mlp_window",
+                                    "interpret", "bs"))
+def replay_blocks(closed_col, arrival, bank, row, is_write, valid,
+                  timings_t, n_banks: int = 8, mlp_window: int = 8,
+                  interpret: bool = False, bs: int = BLOCK_ROWS):
+    """closed_col: [G, 1] float32 (1.0 = closed page); arrival: [G, N]
+    float32; bank/row/is_write/valid: [G, N] int32 (flags as 0/1);
+    timings_t: [6, S] float32 with S % bs == 0 (rows = as_row columns).
+    G = flattened (trace x policy) cells.  Returns (latency [G, N, S],
+    total runtime [G, S])."""
+    g, n = arrival.shape
+    s = timings_t.shape[1]
+    assert timings_t.shape[0] == 6 and s % bs == 0, (timings_t.shape, bs)
+    grid = (g, s // bs)
+    kernel = functools.partial(_kernel, n_banks=n_banks,
+                               mlp_window=mlp_window, n_req=n)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),      # closed
+            pl.BlockSpec((1, n), lambda i, j: (i, 0)),      # arrival
+            pl.BlockSpec((1, n), lambda i, j: (i, 0)),      # bank
+            pl.BlockSpec((1, n), lambda i, j: (i, 0)),      # row
+            pl.BlockSpec((1, n), lambda i, j: (i, 0)),      # is_write
+            pl.BlockSpec((1, n), lambda i, j: (i, 0)),      # valid
+            pl.BlockSpec((6, bs), lambda i, j: (0, j)),     # timing tile
+        ],
+        out_specs=[
+            pl.BlockSpec((1, n, bs), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((1, bs), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((g, n, s), jnp.float32),
+            jax.ShapeDtypeStruct((g, s), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((n_banks, bs), jnp.float32),   # open_row
+            pltpu.VMEM((n_banks, bs), jnp.float32),   # act_time
+            pltpu.VMEM((n_banks, bs), jnp.float32),   # wr_done
+            pltpu.VMEM((n_banks, bs), jnp.float32),   # ready
+            pltpu.VMEM((mlp_window, bs), jnp.float32),  # done_ring
+        ],
+        interpret=interpret,
+    )(closed_col, arrival, bank, row, is_write, valid, timings_t)

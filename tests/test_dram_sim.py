@@ -23,11 +23,13 @@ def synth(seed=0, n=512, **kw):
 
 @pytest.fixture(scope="module")
 def grid():
-    """A padded campaign: three trace lengths x three timing rows."""
+    """A padded campaign: three trace lengths x three timing rows,
+    on the bit-exact reference configuration (host stats + reorder —
+    the contract the `simulate` shim comparison pins down)."""
     traces = (synth(0, 512), synth(1, 300, row_hit=0.2),
               synth(2, 401, write_frac=0.6))
     rows = [DDR3_1600, ALDRAM_55C_EVAL, DDR3_1600.scaled(0.9, 0.9, 0.9, 0.9)]
-    eng = SimEngine()
+    eng = SimEngine(stats="host", reorder="host")
     res = eng.run(SimSpec(traces=traces, timings=stack_timing(rows)))
     return traces, rows, res
 
@@ -198,9 +200,12 @@ class TestEvaluateBatched:
         assert em["mean_latency_ns"].shape == (2, 35, 1, 5)
 
     def test_matches_per_call_path_bit_for_bit(self):
-        """The batched evaluate reproduces the old one-simulate-per-
-        (workload, mode, timing) procedure exactly."""
-        res = perf_model.evaluate(n=256)
+        """The batched evaluate on the reference (host-stats) path
+        reproduces the old one-simulate-per-(workload, mode, timing)
+        procedure exactly.  The device-stats default is pinned to this
+        reference within 1e-5 by TestDeviceFastPath."""
+        res = perf_model.evaluate(
+            n=256, engine=SimEngine(stats="host", reorder="host"))
         key = jax.random.PRNGKey(0)
         for multi in (False, True):
             tag = "multi" if multi else "single"
@@ -288,3 +293,190 @@ class TestProfiledSystemClosure:
         monkeypatch.setattr(sim_engine, "_replay_grid", spy)
         controller.evaluate_system(small_pop, n=128)
         assert calls["replay"] == 1
+
+
+REF = dict(stats="host", reorder="host")
+
+
+class TestFrfcfsDeviceParity:
+    """Acceptance: the jitted JAX FR-FCFS formulation matches the
+    Python reference request-for-request, padded or not."""
+
+    @pytest.mark.parametrize("window,slack", [(2, 30.0), (4, 30.0),
+                                              (8, 15.0), (16, 60.0)])
+    def test_perm_matches_python_reference(self, window, slack):
+        t = synth(window, 384, row_hit=0.5)
+        ref = dram_sim.frfcfs_order(t, window, slack)
+        perm = np.asarray(dram_sim.frfcfs_perm(
+            t.arrival, t.bank, t.row, jnp.ones(384, bool),
+            jnp.asarray(window, jnp.int32),
+            jnp.asarray(slack, jnp.float32),
+            jnp.asarray(4 * window, jnp.int32),
+            max_window=min(window, 384)))
+        assert np.array_equal(perm, ref)
+
+    def test_padded_perm_prefix_matches_suffix_identity(self):
+        """On a padded stream the valid prefix reorders exactly like
+        the unpadded Python reference and padding drains in order."""
+        t = synth(7, 300, row_hit=0.4)
+        ref = dram_sim.frfcfs_order(t, 8, 30.0)
+        n, pad = 300, 512
+        arr = np.zeros(pad, np.float32)
+        arr[:n] = np.asarray(t.arrival)
+        bank = np.zeros(pad, np.int32)
+        bank[:n] = np.asarray(t.bank)
+        row = np.zeros(pad, np.int32)
+        row[:n] = np.asarray(t.row)
+        valid = np.zeros(pad, bool)
+        valid[:n] = True
+        perm = np.asarray(dram_sim.frfcfs_perm(
+            jnp.asarray(arr), jnp.asarray(bank), jnp.asarray(row),
+            jnp.asarray(valid), jnp.asarray(8, jnp.int32),
+            jnp.asarray(30.0, jnp.float32), jnp.asarray(32, jnp.int32),
+            max_window=8))
+        assert np.array_equal(perm[:n], ref)
+        assert np.array_equal(perm[n:], np.arange(n, pad))
+
+    def test_starvation_cap_matches(self):
+        """A pathological all-hit stream exercises the defer cap."""
+        n = 128
+        t = Trace(arrival=jnp.zeros(n),
+                  bank=jnp.zeros(n, jnp.int32),
+                  row=jnp.asarray(np.where(np.arange(n) % 3, 7, 1),
+                                  jnp.int32),
+                  is_write=jnp.zeros(n, bool))
+        ref = dram_sim.frfcfs_order(t, 4, 1e9, max_defer=3)
+        perm = np.asarray(dram_sim.frfcfs_perm(
+            t.arrival, t.bank, t.row, jnp.ones(n, bool),
+            jnp.asarray(4, jnp.int32), jnp.asarray(1e9, jnp.float32),
+            jnp.asarray(3, jnp.int32), max_window=4))
+        assert np.array_equal(perm, ref)
+
+    def test_in_dispatch_reorder_equals_host_pack(self):
+        """End to end: the device-reorder fast path replays the exact
+        same request orders as the host-reordered reference pack —
+        raw latencies bit-identical."""
+        traces = (synth(0, 512), synth(1, 300, row_hit=0.2))
+        pols = (OPEN_FCFS, Policy(reorder_window=8),
+                Policy(reorder_window=4, reorder_slack_ns=60.0))
+        spec = SimSpec(traces=traces,
+                       timings=stack_timing([DDR3_1600, ALDRAM_55C_EVAL]),
+                       policies=pols, collect=("latencies",))
+        host = SimEngine(**REF).run(spec)
+        dev = SimEngine().run(spec)
+        assert np.array_equal(dev.latencies, host.latencies)
+        assert np.array_equal(dev.total_ns, host.total_ns)
+
+    def test_reorder_policies_stay_one_dispatch(self, monkeypatch):
+        """The FR-FCFS prepass rides INSIDE the replay dispatch: a
+        multi-window campaign still costs exactly one launch."""
+        calls = {"replay": 0}
+        real = sim_engine._replay_grid
+
+        def spy(*a, **k):
+            calls["replay"] += 1
+            return real(*a, **k)
+
+        monkeypatch.setattr(sim_engine, "_replay_grid", spy)
+        eng = SimEngine()
+        eng.run(SimSpec(
+            traces=(synth(0, 128), synth(1, 96)), timings=DDR3_1600,
+            policies=(OPEN_FCFS, Policy(reorder_window=4),
+                      Policy(reorder_window=8))))
+        assert calls["replay"] == 1 and eng.dispatch_count == 1
+
+    def test_closed_page_window_packs_fcfs(self):
+        """Satellite: closed-page x reorder_window > 1 must keep FCFS
+        order in BOTH packings — row-hit promotion is meaningless
+        under auto-precharge."""
+        t = synth(5, 256)
+        spec = SimSpec(traces=(t,), timings=DDR3_1600,
+                       policies=(Policy(page="closed"),
+                                 Policy(page="closed", reorder_window=8)))
+        arrival, _, _, _, _, _ = spec.pack()
+        assert np.array_equal(arrival[0, 0], arrival[0, 1])
+        assert np.array_equal(arrival[0, 0, :256],
+                              np.asarray(t.arrival))
+        windows, _, _ = spec.policy_knobs()
+        assert np.array_equal(windows, [0, 0])
+        # and the device path replays both policies identically
+        res = SimEngine().run(dataclasses.replace(
+            spec, collect=("latencies",)))
+        assert np.array_equal(res.latencies[0, 0], res.latencies[0, 1])
+
+    def test_reorder_cache_across_pack_calls(self, monkeypatch):
+        """Satellite: repeated pack() over the same traces reuses the
+        cached host reorder instead of re-running the Python loop."""
+        calls = {"order": 0}
+        real = dram_sim.frfcfs_order
+
+        def spy(*a, **k):
+            calls["order"] += 1
+            return real(*a, **k)
+
+        monkeypatch.setattr(dram_sim, "frfcfs_order", spy)
+        traces = (synth(11, 128), synth(12, 96))
+        pols = (Policy(reorder_window=4), Policy(reorder_window=8))
+        spec = SimSpec(traces=traces, timings=DDR3_1600, policies=pols)
+        spec.pack()
+        assert calls["order"] == 4          # 2 traces x 2 windows
+        spec.pack()
+        SimSpec(traces=traces, timings=ALDRAM_55C_EVAL,
+                policies=pols).pack()
+        assert calls["order"] == 4, "second/third pack must hit cache"
+        # a different slack is a different schedule -> recomputed
+        SimSpec(traces=traces, timings=DDR3_1600,
+                policies=(Policy(reorder_window=4,
+                                 reorder_slack_ns=60.0),)).pack()
+        assert calls["order"] == 6
+
+
+class TestDeviceFastPath:
+    """Acceptance: in-dispatch statistics match the host reference
+    within 1e-5 relative; raw grids are collect-gated."""
+
+    @pytest.fixture(scope="class")
+    def pair(self):
+        """Ragged three-length campaign run on both stats paths."""
+        traces = (synth(0, 512), synth(1, 300, row_hit=0.2),
+                  synth(2, 97, write_frac=0.6))
+        spec = SimSpec(
+            traces=traces,
+            timings=stack_timing([DDR3_1600, ALDRAM_55C_EVAL]),
+            policies=(OPEN_FCFS, Policy(page="closed")),
+            collect=("latencies",))
+        return (SimEngine(**REF).run(spec), SimEngine().run(spec))
+
+    def test_masked_stats_agree_across_ragged_lengths(self, pair):
+        host, dev = pair
+        np.testing.assert_allclose(dev.mean_latency_ns,
+                                   host.mean_latency_ns, rtol=1e-5)
+        np.testing.assert_allclose(dev.p99_latency_ns,
+                                   host.p99_latency_ns, rtol=1e-5)
+        assert np.array_equal(dev.total_ns, host.total_ns)
+
+    def test_raw_latencies_identical_when_collected(self, pair):
+        """stats mode changes WHERE reductions run, never the replay:
+        the collected raw grid is bit-identical to the reference."""
+        host, dev = pair
+        assert np.array_equal(dev.latencies, host.latencies)
+
+    def test_collect_gates_raw_outputs(self):
+        """Without collect, the device path only ships [grid]-shaped
+        summaries — no O(grid*N) arrays on the result."""
+        res = SimEngine().run(SimSpec(traces=(synth(0, 128),),
+                                      timings=DDR3_1600))
+        assert res.latencies is None
+        assert res.mean_latency_ns.shape == (1, 1, 1)
+        with pytest.raises(AssertionError):
+            SimSpec(traces=(synth(0, 64),), timings=DDR3_1600,
+                    collect=("everything",))
+
+    def test_device_evaluate_matches_host_evaluate(self):
+        """Fig. 4 on the default fast path vs the reference path."""
+        fast = perf_model.evaluate(n=256)
+        ref = perf_model.evaluate(
+            n=256, engine=SimEngine(stats="host", reorder="host"))
+        for tag in ("single", "multi"):
+            for w in perf_model.WORKLOADS:
+                assert abs(fast[tag][w.name] - ref[tag][w.name]) < 1e-5

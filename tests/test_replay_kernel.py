@@ -1,0 +1,146 @@
+"""Replay Pallas kernel (interpret mode) vs the vmapped lax.scan
+oracle: campaign-grid parity across page policies, ragged padding and
+timing-row blocking, plus the SimEngine backend plumbing."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dram_sim
+from repro.core.dram_sim import OPEN_FCFS, Policy
+from repro.core.sim_engine import SimEngine, SimSpec
+from repro.core.timing import ALDRAM_55C_EVAL, DDR3_1600, stack_timing
+from repro.kernels.replay import ops as replay_ops
+
+
+def _grid_inputs(t=2, p=2, n=96, s=3, seed=0):
+    """Padded [T, P, N] request grid + [S, 6] rows + closed flags."""
+    lens = [n, n // 2] + [n] * max(0, t - 2)
+    arr = np.zeros((t, n), np.float32)
+    bank = np.zeros((t, n), np.int32)
+    row = np.zeros((t, n), np.int32)
+    wr = np.zeros((t, n), bool)
+    val = np.zeros((t, n), bool)
+    for i in range(t):
+        tr = dram_sim.synth_trace(jax.random.PRNGKey(seed + i), lens[i],
+                                  row_hit=0.5, write_frac=0.4)
+        arr[i, :lens[i]] = tr.arrival
+        bank[i, :lens[i]] = tr.bank
+        row[i, :lens[i]] = tr.row
+        wr[i, :lens[i]] = tr.is_write
+        val[i, :lens[i]] = True
+    rows = stack_timing(
+        [DDR3_1600, ALDRAM_55C_EVAL,
+         DDR3_1600.scaled(0.8, 0.8, 0.8, 0.8)][:s] +
+        [DDR3_1600.scaled(f, 1.0, 1.0, 1.0)
+         for f in np.linspace(0.99, 0.7, max(0, s - 3))])
+    closed = np.array([(i % 2) == 1 for i in range(p)])
+
+    def b3(x):
+        return jnp.asarray(np.broadcast_to(x[:, None], (t, p, n)).copy())
+
+    return (b3(arr), b3(bank), b3(row), b3(wr), jnp.asarray(val),
+            jnp.asarray(rows), jnp.asarray(closed))
+
+
+class TestReplayKernel:
+    @pytest.mark.parametrize("t,p,n,s", [
+        (2, 2, 96, 3),          # open + closed page, ragged padding
+        (1, 1, 64, 1),          # degenerate single cell
+        (3, 2, 128, 5),         # more timing rows than a small block
+    ])
+    def test_matches_scan_oracle(self, t, p, n, s):
+        args = _grid_inputs(t, p, n, s)
+        lat_ref, tot_ref = replay_ops.replay_grid(*args, impl="ref")
+        lat_pl, tot_pl = replay_ops.replay_grid(
+            *args, impl="pallas_interpret", bs=8)
+        np.testing.assert_allclose(np.asarray(lat_pl),
+                                   np.asarray(lat_ref), rtol=1e-5,
+                                   atol=1e-5)
+        np.testing.assert_allclose(np.asarray(tot_pl),
+                                   np.asarray(tot_ref), rtol=1e-5)
+
+    def test_block_size_invariance(self):
+        args = _grid_inputs(2, 1, 64, 4)
+        l1, t1 = replay_ops.replay_grid(*args, impl="pallas_interpret",
+                                        bs=4)
+        l2, t2 = replay_ops.replay_grid(*args, impl="pallas_interpret",
+                                        bs=8)
+        assert np.array_equal(np.asarray(l1), np.asarray(l2))
+        assert np.array_equal(np.asarray(t1), np.asarray(t2))
+
+    def test_padding_emits_zero_latency(self):
+        args = _grid_inputs(2, 1, 96, 2)
+        lat, _ = replay_ops.replay_grid(*args, impl="pallas_interpret",
+                                        bs=8)
+        assert (np.asarray(lat)[1, :, :, 48:] == 0.0).all()
+
+    def test_mlp_window_gate(self):
+        """A non-default MLP window changes the closed-loop gating the
+        same way in both backends."""
+        args = _grid_inputs(1, 1, 64, 2)
+        for w in (2, 4):
+            l_ref, t_ref = replay_ops.replay_grid(*args, impl="ref",
+                                                  mlp_window=w)
+            l_pl, t_pl = replay_ops.replay_grid(
+                *args, impl="pallas_interpret", mlp_window=w, bs=8)
+            np.testing.assert_allclose(np.asarray(l_pl),
+                                       np.asarray(l_ref), rtol=1e-5)
+            np.testing.assert_allclose(np.asarray(t_pl),
+                                       np.asarray(t_ref), rtol=1e-5)
+
+
+class TestEngineBackend:
+    def test_pallas_backend_passes_parity_suite(self):
+        """SimEngine(backend='pallas') — interpret fallback off-TPU —
+        replays the same campaign as the scan backend, raw latencies
+        and summaries alike, with FR-FCFS reorder in the mix."""
+        traces = (dram_sim.synth_trace(jax.random.PRNGKey(0), 128),
+                  dram_sim.synth_trace(jax.random.PRNGKey(1), 96,
+                                       row_hit=0.2))
+        spec = SimSpec(
+            traces=traces,
+            timings=stack_timing([DDR3_1600, ALDRAM_55C_EVAL]),
+            policies=(OPEN_FCFS, Policy(page="closed"),
+                      Policy(reorder_window=4)),
+            collect=("latencies",))
+        scan = SimEngine().run(spec)
+        pallas = SimEngine(backend="pallas").run(spec)
+        np.testing.assert_allclose(pallas.latencies, scan.latencies,
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(pallas.mean_latency_ns,
+                                   scan.mean_latency_ns, rtol=1e-5)
+        np.testing.assert_allclose(pallas.p99_latency_ns,
+                                   scan.p99_latency_ns, rtol=1e-5)
+        np.testing.assert_allclose(pallas.total_ns, scan.total_ns,
+                                   rtol=1e-5)
+
+    def test_pallas_backend_one_dispatch(self, monkeypatch):
+        from repro.core import sim_engine
+        calls = {"replay": 0}
+        real = sim_engine._replay_grid
+
+        def spy(*a, **k):
+            calls["replay"] += 1
+            return real(*a, **k)
+
+        monkeypatch.setattr(sim_engine, "_replay_grid", spy)
+        SimEngine(backend="pallas").run(
+            SimSpec(traces=(dram_sim.synth_trace(
+                jax.random.PRNGKey(2), 64),), timings=DDR3_1600))
+        assert calls["replay"] == 1
+
+    def test_adaptive_campaign_falls_back_to_scan(self):
+        """The thermal axis has no Pallas kernel: backend='pallas'
+        must still run the adaptive campaign (via the scan)."""
+        from repro.core.thermal import (ThermalConfig, ThermalSpec,
+                                        steady)
+        stack = stack_timing([ALDRAM_55C_EVAL, DDR3_1600])
+        res = SimEngine(backend="pallas").run(SimSpec(
+            traces=(dram_sim.synth_trace(jax.random.PRNGKey(3), 64),),
+            timings=stack,
+            thermal=ThermalSpec(scenarios=(steady(40.0),),
+                                temp_bins=(55.0,),
+                                config=ThermalConfig(c_heat=0.0))))
+        assert res.mean_latency_ns.shape == (1, 1, 1, 1)

@@ -67,7 +67,7 @@ class TestAdaptiveReplay:
         traces = (synth(0, 400), synth(1, 257, row_hit=0.3))
         tspec = ThermalSpec(scenarios=(steady(50.0),), temp_bins=BINS2,
                             config=ThermalConfig(c_heat=0.0))
-        eng = SimEngine()
+        eng = SimEngine(stats="host", reorder="host")
         res_a = eng.run(SimSpec(traces=traces, timings=STACK3,
                                 thermal=tspec))
         # steady 50C rounds up to the 55C bin -> row 1 of the stack
@@ -103,7 +103,8 @@ class TestAdaptiveReplay:
             scenarios=(steady(44.0),), temp_bins=BINS2,
             config=ThermalConfig(c_heat=2e-4, tau_ns=2e5))
         res = SimEngine().run(SimSpec(traces=(t,), timings=STACK3,
-                                      thermal=tspec))
+                                      thermal=tspec,
+                                      collect=("bins",)))
         assert res.temp_max[0, 0, 0, 0] > 44.5
         b = res.bins[0, 0, 0, 0]
         assert b.min() >= 0 and b.max() <= 2
@@ -122,7 +123,7 @@ class TestAdaptiveReplay:
             config=ThermalConfig(c_heat=0.0, hyst_c=5.0))
         res = SimEngine().run(SimSpec(
             traces=(t,), timings=STACK3[np.array([0, 2])],
-            thermal=tspec))
+            thermal=tspec, collect=("bins",)))
         hyst_sw = int(res.bin_switches[0, 0, 0, 0])
         oracle_sw = int(res.bin_switches[0, 0, 0, 1])
         assert hyst_sw == 1, hyst_sw     # one up-switch, then held
@@ -147,7 +148,8 @@ class TestAdaptiveReplay:
             temp_bins=BINS2,
             config=ThermalConfig(c_heat=0.0, hyst_c=10.0))
         res = SimEngine().run(SimSpec(traces=(t,), timings=STACK3,
-                                      thermal=tspec))
+                                      thermal=tspec,
+                                      collect=("bins",)))
         b = np.asarray(res.bins[0, 0, 0, 0])
         # requests before 5000 ns see 40C (bin 0); from the step on,
         # 70C exceeds the hottest bin -> JEDEC fallback row (index 2)
@@ -179,13 +181,57 @@ class TestAdaptiveReplay:
         traces = (synth(4, 300),)
         tspec = ThermalSpec(scenarios=(steady(95.0),), temp_bins=BINS2,
                             config=ThermalConfig(c_heat=0.0))
-        eng = SimEngine()
+        eng = SimEngine()               # fast path, raw grids collected
         res_a = eng.run(SimSpec(traces=traces, timings=STACK3,
-                                thermal=tspec))
-        res_s = eng.run(SimSpec(traces=traces, timings=DDR3_1600))
+                                thermal=tspec,
+                                collect=("latencies", "bins")))
+        res_s = eng.run(SimSpec(traces=traces, timings=DDR3_1600,
+                                collect=("latencies",)))
         assert (res_a.bins[0, 0, 0, 0] == 2).all()
         assert np.array_equal(res_a.latencies[:, :, 0],
                               res_s.latencies)
+
+
+class TestThermalDeviceStats:
+    """In-dispatch thermal diagnostics vs the host reference, across
+    ragged trace lengths."""
+
+    @pytest.fixture(scope="class")
+    def pair(self):
+        traces = (synth(0, 400), synth(1, 193, row_hit=0.3),
+                  synth(2, 64))
+        tspec = ThermalSpec(
+            scenarios=(diurnal(38.0, 72.0, period_ns=5e4),
+                       bursty(44.0, 12.0, period_ns=2e4)),
+            temp_bins=BINS2, config=ThermalConfig(c_heat=2e-5))
+        spec = SimSpec(traces=traces, timings=STACK3, thermal=tspec,
+                       collect=("latencies", "temps", "bins"))
+        host = SimEngine(stats="host", reorder="host").run(spec)
+        dev = SimEngine().run(spec)
+        return host, dev
+
+    def test_stats_within_1e5(self, pair):
+        host, dev = pair
+        np.testing.assert_allclose(dev.mean_latency_ns,
+                                   host.mean_latency_ns, rtol=1e-5)
+        np.testing.assert_allclose(dev.p99_latency_ns,
+                                   host.p99_latency_ns, rtol=1e-5)
+        np.testing.assert_allclose(dev.temp_mean, host.temp_mean,
+                                   rtol=1e-5)
+
+    def test_exact_diagnostics(self, pair):
+        """max and switch counts are order-independent reductions —
+        the two paths must agree exactly."""
+        host, dev = pair
+        assert np.array_equal(dev.temp_max, host.temp_max)
+        assert np.array_equal(dev.bin_switches, host.bin_switches)
+        assert np.array_equal(dev.bank_heat, host.bank_heat)
+
+    def test_raw_grids_identical(self, pair):
+        host, dev = pair
+        assert np.array_equal(dev.latencies, host.latencies)
+        assert np.array_equal(dev.temps, host.temps)
+        assert np.array_equal(dev.bins, host.bins)
 
 
 class TestDynamicCampaign:
