@@ -93,9 +93,9 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (fig2_refresh, fig2_timing, fig3_population,
-                            fig4_system, framework, multi_timing,
-                            power_bench, repeatability, roofline,
-                            sim_bench, thermal_bench)
+                            fig4_system, fig_bank, framework,
+                            multi_timing, power_bench, repeatability,
+                            roofline, sim_bench, thermal_bench)
 
     benches = {
         "fig2_refresh": fig2_refresh.run,
@@ -103,6 +103,7 @@ def main() -> None:
         "fig3_population": fig3_population.run,
         "fig4_system": fig4_system.run,
         "fig4_profiled": fig4_system.run_profiled,
+        "fig_bank": fig_bank.run,
         "sim_bench": sim_bench.run,
         "thermal_bench": thermal_bench.run,
         "power": power_bench.run,

@@ -1,7 +1,11 @@
 """Adaptive-Latency DRAM: the mechanism (paper Sec. 4).
 
-The controller holds one timing table per (module, temperature bin),
-built by the profiler, and at runtime selects the table for the
+The controller holds one timing table per (module, temperature bin) —
+and, by default, per rank-level BANK within it (FLY-DRAM-style
+spatial variation: the module envelope is governed by its weakest
+bank, so per-bank registers recover the latency the envelope gives
+away; `evaluate_bank_system` prices that headline) — built by the
+profiler, and at runtime selects the table for the
 module's *current* operating temperature — always rounding the
 temperature UP to the next profiled bin (conservative).  The paper's
 reliability argument is enforced as an invariant: every selected table
@@ -64,13 +68,62 @@ def default_scenarios():
 
 @dataclasses.dataclass
 class TimingTable:
-    """Per-module timing parameters for each temperature bin."""
+    """Timing parameters for each temperature bin.
+
+    `params` is either the per-module table ([modules, bins, 4] ->
+    (trcd, tras, twr, trp) in ns) or a FLY-DRAM-style per-bank table
+    ([modules, bins, banks, 4]): the margin is *spatial*, so keeping
+    one register row per rank-level bank recovers the latency a
+    module-level envelope gives away to its weakest bank.
+
+    A per-bank table also carries `params_module`, the module-envelope
+    table selected on the intersected (all-banks) pass envelope of the
+    SAME fused campaign.  `reduce_banks()` returns it as a standalone
+    per-module table, bit-identical to what a per-module-only
+    `profile()` builds — note this is NOT a per-parameter max over the
+    bank rows: each bank's argmin-latency choice trades parameters
+    differently, so the elementwise max of bank rows is generally not
+    a profiled grid point at all.  The module-level methods
+    (`lookup`/`lookup_many`/`safe_stack`) always answer from the
+    module envelope, so every pre-bank caller sees identical rows.
+    """
 
     temp_bins: tuple[float, ...]
-    # [modules, bins, 4] -> (trcd, tras, twr, trp) in ns
+    # [modules, bins, 4] | [modules, bins, banks, 4]
     params: np.ndarray
     safe_trefi_read: np.ndarray     # [modules] ms
     safe_trefi_write: np.ndarray    # [modules] ms
+    # module-envelope table riding a per-bank `params` (None otherwise)
+    params_module: np.ndarray | None = None
+
+    def __post_init__(self):
+        assert self.params.ndim in (3, 4), self.params.shape
+        if self.per_bank:
+            assert self.params_module is not None \
+                and self.params_module.ndim == 3, \
+                "a per-bank table carries its module-envelope table"
+
+    @property
+    def per_bank(self) -> bool:
+        return self.params.ndim == 4
+
+    @property
+    def n_banks(self) -> int | None:
+        return self.params.shape[2] if self.per_bank else None
+
+    @property
+    def module_params(self) -> np.ndarray:
+        """The per-module [modules, bins, 4] view (the table itself
+        when per-module, the carried envelope table when per-bank)."""
+        return self.params_module if self.per_bank else self.params
+
+    def reduce_banks(self) -> "TimingTable":
+        """Collapse to the per-module table: exactly the table a
+        per-module-only profile builds (see class docstring)."""
+        if not self.per_bank:
+            return self
+        return TimingTable(self.temp_bins, self.module_params,
+                           self.safe_trefi_read, self.safe_trefi_write)
 
     def lookup(self, module: int, temp_c: float) -> T.TimingParams:
         """Conservative selection: smallest profiled bin >= temp; above
@@ -78,31 +131,54 @@ class TimingTable:
         return T.TimingParams.from_row(
             self.lookup_many(np.array([module]), np.array([temp_c]))[0])
 
+    def _lookup_rows(self, temps_c: np.ndarray, gather) -> np.ndarray:
+        """The ONE conservative-selection core both granularities
+        share: `np.searchsorted` picks the smallest profiled bin >=
+        temp (rounding UP), queries ABOVE the hottest profiled bin
+        fall back to standard JEDEC timings, and the static
+        tREFI/tCL columns ride along.  `gather(bin_idx)` returns each
+        query's [K, 4] params at its (clamped) bin — the only thing
+        that differs between the module and per-bank lookups."""
+        bins = np.asarray(self.temp_bins, np.float64)
+        bi = np.searchsorted(bins, temps_c, side="left")
+        over = bi >= len(bins)
+        rows = np.empty((temps_c.shape[0], 6), np.float32)
+        rows[:, :4] = np.where(
+            over[:, None], np.asarray(T.DDR3_1600.as_row()[:4]),
+            gather(np.minimum(bi, len(bins) - 1)))
+        rows[:, 4] = T.STANDARD_TREFI_MS
+        rows[:, 5] = T.DDR3_1600.tcl
+        return rows
+
     def lookup_many(self, modules: np.ndarray,
                     temps_c: np.ndarray) -> np.ndarray:
         """Vectorised batched selection: pairwise (module, temperature)
         queries -> [K, 6] stacked timing rows (`TimingParams.as_row`
-        layout).  `np.searchsorted` picks the smallest profiled bin >=
-        temp (conservative rounding UP); queries ABOVE the hottest
-        profiled bin fall back to standard JEDEC timings — the
-        controller never extrapolates reduced timings past the
-        temperatures it actually verified.  The in-scan adaptive
-        replay (`dram_sim.replay_adaptive` over `safe_stack`) applies
-        the same two rules per request, plus a down-switch hysteresis
+        layout), with `_lookup_rows`' conservative round-up and
+        above-hottest-bin JEDEC fallback — the controller never
+        extrapolates reduced timings past the temperatures it
+        actually verified.  The in-scan adaptive replay
+        (`dram_sim.replay_adaptive` over `safe_stack`) applies the
+        same two rules per request, plus a down-switch hysteresis
         (see `safe_stack`)."""
         modules, temps_c = np.broadcast_arrays(
             np.atleast_1d(np.asarray(modules, np.int64)),
             np.atleast_1d(np.asarray(temps_c, np.float64)))
-        bins = np.asarray(self.temp_bins, np.float64)
-        bi = np.searchsorted(bins, temps_c, side="left")
-        over = bi >= len(bins)
-        rows = np.empty((modules.shape[0], 6), np.float32)
-        rows[:, :4] = np.where(
-            over[:, None], np.asarray(T.DDR3_1600.as_row()[:4]),
-            self.params[modules, np.minimum(bi, len(bins) - 1)])
-        rows[:, 4] = T.STANDARD_TREFI_MS
-        rows[:, 5] = T.DDR3_1600.tcl
-        return rows
+        return self._lookup_rows(
+            temps_c, lambda bi: self.module_params[modules, bi])
+
+    def lookup_many_banks(self, modules: np.ndarray, banks: np.ndarray,
+                          temps_c: np.ndarray) -> np.ndarray:
+        """Per-bank variant of `lookup_many`: pairwise (module, bank,
+        temperature) queries -> [K, 6] stacked timing rows, through
+        the same `_lookup_rows` selection core."""
+        assert self.per_bank, "per-module table has no bank axis"
+        modules, banks, temps_c = np.broadcast_arrays(
+            np.atleast_1d(np.asarray(modules, np.int64)),
+            np.atleast_1d(np.asarray(banks, np.int64)),
+            np.atleast_1d(np.asarray(temps_c, np.float64)))
+        return self._lookup_rows(
+            temps_c, lambda bi: self.params[modules, bi, banks])
 
     def safe_stack(self) -> tuple[np.ndarray, np.ndarray]:
         """The table stack the ADAPTIVE replay selects over in-scan:
@@ -128,47 +204,102 @@ class TimingTable:
         margin below the cooler bin's edge, so a module hovering on an
         edge does not thrash the timing registers.
         """
-        m = self.params.shape[0]
+        return self._stack_rows(
+            lambda mods, tc: self.lookup_many(
+                mods, np.full(mods.shape[0], tc)).max(axis=0))
+
+    def safe_stack_banks(self) -> tuple[np.ndarray, np.ndarray]:
+        """Per-bank variant of `safe_stack`: ([bins + 1, banks, 6]
+        rows, [bins] edges) — one all-module-safe row per (bin, bank),
+        bin-monotone per bank via the same running max, with the
+        JEDEC fallback row last (broadcast across banks).  The
+        adaptive replay gathers row (selected bin, request's bank)
+        in-scan, so a per-bank deployment rides the identical
+        dispatch as the per-module stack."""
+        assert self.per_bank
+        banks = self.n_banks
+
+        def bin_rows(mods, tc):
+            m = mods.shape[0]
+            return np.stack([self.lookup_many_banks(
+                mods, np.full(m, b), np.full(m, tc)).max(axis=0)
+                for b in range(banks)])
+
+        return self._stack_rows(bin_rows)
+
+    def _stack_rows(self, bin_rows) -> tuple[np.ndarray, np.ndarray]:
+        """The ONE stack-construction core both granularities share:
+        `bin_rows(modules, bin_temp)` -> the all-module-safe row(s) of
+        that bin ([6] or [banks, 6]); a running max forces the stack
+        bin-monotone and the JEDEC fallback row rides last."""
         nb = len(self.temp_bins)
-        rows = np.empty((nb + 1, 6), np.float32)
-        mods = np.arange(m)
-        for bi, tc in enumerate(self.temp_bins):
-            rows[bi] = self.lookup_many(mods, np.full(m, tc)).max(axis=0)
+        mods = np.arange(self.params.shape[0])
+        first = bin_rows(mods, self.temp_bins[0])
+        rows = np.empty((nb + 1,) + first.shape, np.float32)
+        rows[0] = first
+        for bi, tc in enumerate(self.temp_bins[1:], start=1):
+            rows[bi] = bin_rows(mods, tc)
         rows[:nb] = np.maximum.accumulate(rows[:nb], axis=0)
         rows[nb] = T.DDR3_1600.as_row()
         return rows, np.asarray(self.temp_bins, np.float32)
 
 
 class ALDRAMController:
-    """Profile once; select per (module, temperature) at runtime."""
+    """Profile once; select per (module, temperature) at runtime.
+
+    `per_bank=True` (the default) builds a FLY-DRAM-style per-bank
+    `TimingTable` from the SAME fused campaign dispatch — the margin
+    grid is simply reduced per rank-level bank instead of collapsing
+    the whole cell hierarchy — alongside the module-envelope table
+    every module-level method keeps answering from."""
 
     def __init__(self, profiler: Profiler | None = None,
-                 temp_bins: tuple[float, ...] = DEFAULT_TEMP_BINS):
+                 temp_bins: tuple[float, ...] = DEFAULT_TEMP_BINS,
+                 per_bank: bool = True):
         self.profiler = profiler or Profiler()
         self.engine = self.profiler.engine
         self.temp_bins = temp_bins
+        self.per_bank = per_bank
         self.table: TimingTable | None = None
+        self.sweep_result = None
 
     # ------------------------------------------------------------ profile
     def profile(self, pop: Population) -> TimingTable:
-        """Build the full (module x bin) table from one refresh campaign
-        and ONE fused multi-temperature, read+write timing campaign."""
+        """Build the full (module x bin[, bank]) table from one refresh
+        campaign and ONE fused multi-temperature, read+write timing
+        campaign — the per-bank axis costs zero extra dispatches."""
         prof = self.profiler
         rp_read, rp_write = prof.refresh_campaign(pop, 85.0)
         res = self.engine.sweep(
             pop, prof.campaign_spec(self.temp_bins, rp_read, rp_write))
-        cr = res.chosen[res.index(Op.READ)]      # [modules, bins, 5]
-        cw = res.chosen[res.index(Op.WRITE)]
+        # keep the selection views for reporting (evaluate_bank_system's
+        # reduction statistics, tests) but drop the O(cells x combos)
+        # raw margin grids — at calibrated scale they are gigabytes the
+        # controller would otherwise pin for its whole lifetime
+        self.sweep_result = dataclasses.replace(res, margins=())
+        kr, kw = res.index(Op.READ), res.index(Op.WRITE)
 
-        # one register set must satisfy both tests: take the safer
-        # (larger) of the read/write choices per parameter
-        params = np.empty(cr.shape[:2] + (4,), np.float32)
-        params[..., 0] = np.maximum(cr[..., 0], cw[..., 0])
-        params[..., 1] = cr[..., 1]              # tRAS: read test
-        params[..., 2] = cw[..., 2]              # tWR: write test
-        params[..., 3] = np.maximum(cr[..., 3], cw[..., 3])
-        self.table = TimingTable(self.temp_bins, params,
-                                 rp_read.safe, rp_write.safe)
+        def combine(cr, cw):
+            # one register set must satisfy both tests: take the safer
+            # (larger) of the read/write choices per parameter
+            p = np.empty(cr.shape[:-1] + (4,), np.float32)
+            p[..., 0] = np.maximum(cr[..., 0], cw[..., 0])
+            p[..., 1] = cr[..., 1]               # tRAS: read test
+            p[..., 2] = cw[..., 2]               # tWR: write test
+            p[..., 3] = np.maximum(cr[..., 3], cw[..., 3])
+            return p
+
+        params_module = combine(res.chosen[kr], res.chosen[kw])
+        if self.per_bank:
+            # [modules, banks, bins, 4] -> [modules, bins, banks, 4]
+            params_bank = combine(res.chosen_bank[kr],
+                                  res.chosen_bank[kw]).transpose(0, 2, 1, 3)
+            self.table = TimingTable(self.temp_bins, params_bank,
+                                     rp_read.safe, rp_write.safe,
+                                     params_module=params_module)
+        else:
+            self.table = TimingTable(self.temp_bins, params_module,
+                                     rp_read.safe, rp_write.safe)
         return self.table
 
     # ------------------------------------------------------------- select
@@ -182,15 +313,20 @@ class ALDRAMController:
         """The zero-error invariant (the paper's 33-day stress test,
         Sec. 6): for every module and every bin, the selected timings
         must be error-free at the bin's max temperature with the safe
-        refresh interval.  Returns True iff no margin is negative.
+        refresh interval — and for a per-bank table, every
+        (module, bin, bank) row must additionally be error-free for
+        every cell of ITS rank-level bank (all chips, all tail cells).
+        Returns True iff no margin is negative.
 
-        ONE vectorised dispatch: every (module, bin) table row becomes a
-        combo column with its bin temperature, the per-module safe
-        refresh intervals ride in the per-cell read/write overrides, and
-        the module-diagonal of the resulting grid is reduced host-side.
+        ONE vectorised dispatch: every (module, bin) envelope row —
+        and, per-bank, every (module, bin, bank) row — becomes a combo
+        column with its bin temperature, the per-module safe refresh
+        intervals ride in the per-cell read/write overrides, and the
+        module- (and bank-) diagonals of the resulting grid are
+        reduced host-side.
 
         The dense grid pairs every module's cells with every module's
-        combos, so only its module-diagonal is useful; for very large
+        combos, so only its diagonals are useful; for very large
         populations the check is chunked into module groups that keep
         each dispatch under `max_grid_elems` (still no per-module
         Python-loop kernel calls — group count grows like sqrt of the
@@ -198,32 +334,57 @@ class ALDRAMController:
         """
         assert self.table is not None
         tbl = self.table
-        m, b = tbl.params.shape[:2]
-        cpm = int(np.prod(pop.cells.shape[1:4]))     # cells per module
-        g = max(1, min(m, int((max_grid_elems / (cpm * b)) ** 0.5)))
+        m, b = tbl.module_params.shape[:2]
+        ch, bk, kc = pop.cells.shape[1:4]
+        cpm = ch * bk * kc                           # cells per module
+        banks = tbl.n_banks if tbl.per_bank else 0
+        if banks:
+            assert banks == bk, (banks, bk)
+        cols = b * (1 + banks)                       # combos per module
+        g = max(1, min(m, int((max_grid_elems / (cpm * cols)) ** 0.5)))
 
         cells = np.asarray(pop.flat_cells()).reshape(m, cpm, -1)
         trefi_r = tbl.safe_trefi_read.astype(np.float32)
         trefi_w = tbl.safe_trefi_write.astype(np.float32)
         temps_bins = np.asarray(tbl.temp_bins, np.float32)
+        # per-module column layout: b envelope rows, then the [b, banks]
+        # bank rows — bin temperatures tile accordingly
+        temps_mod = (np.concatenate([temps_bins,
+                                     np.repeat(temps_bins, banks)])
+                     if banks else temps_bins)
 
         for lo in range(0, m, g):
             sl = slice(lo, min(lo + g, m))
             n = sl.stop - sl.start
-            combos = np.empty((n * b, 5), np.float32)
-            combos[:, :4] = tbl.params[sl].reshape(n * b, 4)
+            combos = np.empty((n * cols, 5), np.float32)
+            rows_m = tbl.module_params[sl].reshape(n, b, 4)
+            if banks:
+                rows_b = tbl.params[sl].reshape(n, b * banks, 4)
+                combos[:, :4] = np.concatenate(
+                    [rows_m, rows_b], axis=1).reshape(n * cols, 4)
+            else:
+                combos[:, :4] = rows_m.reshape(n * cols, 4)
             combos[:, 4] = T.STANDARD_TREFI_MS       # overridden per cell
             read_m, write_m = self.engine.margins(
                 cells[sl].reshape(n * cpm, -1), combos,
-                temps_combo=np.tile(temps_bins, n),
+                temps_combo=np.tile(temps_mod, n),
                 trefi_read=np.repeat(trefi_r[sl], cpm),
                 trefi_write=np.repeat(trefi_w[sl], cpm))
             mi = np.arange(n)
-            # [mods, cpm, mods, bins] -> module-diagonal [mods, cpm, bins]
-            r = read_m.reshape(n, cpm, n, b)[mi, :, mi, :]
-            w = write_m.reshape(n, cpm, n, b)[mi, :, mi, :]
-            if r.min() < 0.0 or w.min() < 0.0:
-                return False
+            for grid in (read_m, write_m):
+                grid = grid.reshape(n, cpm, n, cols)
+                # module-diagonal of the envelope block [mods, cpm, b]
+                if grid[mi, :, mi, :b].min() < 0.0:
+                    return False
+                if banks:
+                    # bank block: module-diagonal, then pair each cell's
+                    # bank with its combo's bank
+                    gb = grid[:, :, :, b:].reshape(n, ch, bk, kc,
+                                                   n, b, banks)
+                    gb = gb[mi, :, :, :, mi]     # [mods, ch, bk, kc, b, banks]
+                    bj = np.arange(banks)
+                    if gb[:, :, bj, :, :, bj].min() < 0.0:
+                        return False
         return True
 
     # ------------------------------------------------------ system closure
@@ -262,7 +423,8 @@ class ALDRAMController:
             rows[1 + si] = tbl.lookup_many(mods, np.full(m, tc)).max(axis=0)
 
         em = perf_model.evaluate_many(rows, n=n, seed=seed, engine=engine,
-                                      policies=policies)
+                                      policies=policies,
+                                      n_banks=pop.n_banks)
         sp = perf_model.cpi_speedups(em["mean_latency_ns"])
         intensive = np.array([w.intensive for w in perf_model.WORKLOADS])
         # summaries for EVERY policy of the campaign; `per_temp` is the
@@ -288,10 +450,93 @@ class ALDRAMController:
                 "per_policy": per_policy, "policies": policies,
                 "source": "profiled-table"}
 
+    # -------------------------------------------------- per-bank closure
+    def evaluate_bank_system(self, pop: Population,
+                             temps: tuple[float, ...] | None = None,
+                             n: int = 4096, seed: int = 0,
+                             policies=None, engine=None) -> dict:
+        """FLY-DRAM's headline, priced on the system side: replay the
+        workload pool under the all-module-safe PER-BANK rows of every
+        temperature bin, against the per-module envelope rows of the
+        same bins — in ONE batched campaign.
+
+        The timing axis is a [1 + 2*T, banks, 6] per-bank stack: the
+        JEDEC baseline and the per-module envelope rows ride it
+        broadcast constant across banks (which replays bit-identical
+        to the per-module path), the per-bank rows vary per bank, and
+        the replay gathers each request's row from its bank — so the
+        whole comparison is still one synthesis + one replay dispatch.
+
+        Also reports the table-level mean timing reductions (the
+        Sec. 5.2 statistic, per test) at both granularities.  The
+        per-bank reduction is structurally >= the per-module one:
+        every bank envelope contains its module envelope, so each
+        bank's chosen latency sum is <= its module's.
+        """
+        from repro.core import dram_sim, perf_model
+        if self.table is None:
+            self.profile(pop)
+        tbl = self.table
+        assert tbl.per_bank, "profile() a per_bank controller first"
+        temps = tuple(temps if temps is not None else tbl.temp_bins)
+        policies = policies or (dram_sim.OPEN_FCFS,)
+        m, banks = tbl.module_params.shape[0], tbl.n_banks
+        assert banks == pop.n_banks, (banks, pop.n_banks)
+        nt = len(temps)
+        rows = np.empty((1 + 2 * nt, banks, 6), np.float32)
+        rows[0] = T.DDR3_1600.as_row()[None, :]
+        mods = np.arange(m)
+        for si, tc in enumerate(temps):
+            rows[1 + si] = tbl.lookup_many(
+                mods, np.full(m, tc)).max(axis=0)[None, :]
+            for bb in range(banks):
+                rows[1 + nt + si, bb] = tbl.lookup_many_banks(
+                    mods, np.full(m, bb), np.full(m, tc)).max(axis=0)
+
+        em = perf_model.evaluate_many(rows, n=n, seed=seed,
+                                      engine=engine, policies=policies,
+                                      n_banks=banks)
+        sp = perf_model.cpi_speedups(em["mean_latency_ns"])
+        intensive = np.array([w.intensive for w in perf_model.WORKLOADS])
+        per_temp = {}
+        for si, tc in enumerate(temps):
+            s_mod = sp[1, :, 0, 1 + si]              # multi-core
+            s_bank = sp[1, :, 0, 1 + nt + si]
+            per_temp[float(tc)] = {
+                "module_all_gmean": perf_model.gmean_speedup(s_mod),
+                "bank_all_gmean": perf_model.gmean_speedup(s_bank),
+                "module_intensive_gmean":
+                    perf_model.gmean_speedup(s_mod[intensive]),
+                "bank_intensive_gmean":
+                    perf_model.gmean_speedup(s_bank[intensive]),
+                "bank_minus_module":
+                    perf_model.gmean_speedup(s_bank)
+                    - perf_model.gmean_speedup(s_mod),
+            }
+        # table-level mean timing reductions per granularity
+        red = {}
+        res_sweep = self.sweep_result
+        std = self.profiler.std
+        for op in Op:
+            k = res_sweep.index(op)
+            base = std.read_sum() if op is Op.READ else std.write_sum()
+            red[op.value] = {
+                "module": float(
+                    1 - (res_sweep.latency_sum[k] / base).mean()),
+                "bank": float(
+                    1 - (res_sweep.latency_sum_bank[k] / base).mean()),
+            }
+        return {"temps": temps, "rows": rows, "speedups": sp,
+                "mean_latency_ns": em["mean_latency_ns"],
+                "workloads": em["workloads"], "per_temp": per_temp,
+                "reductions": red, "policies": policies,
+                "source": "profiled-bank-table"}
+
     # ----------------------------------------------------- dynamic closure
     def evaluate_dynamic(self, pop: Population, scenarios=None,
                          config=None, n: int = 4096, seed: int = 0,
-                         policies=None, engine=None) -> dict:
+                         policies=None, engine=None,
+                         per_bank: bool = False) -> dict:
         """The paper's actual mechanism, end to end: profile the
         population, stack the per-bin all-module-safe rows
         (`TimingTable.safe_stack`), and replay the workload pool with
@@ -307,7 +552,9 @@ class ALDRAMController:
         decides per request which row applies.  Still O(1) traced
         dispatches (one synthesis, one adaptive replay, one static
         replay) regardless of how many scenarios or policies ride the
-        campaign.
+        campaign.  `per_bank=True` deploys the per-bank stack
+        (`safe_stack_banks`): the in-scan selection then gathers row
+        (bin, request's bank) — same dispatch count.
         """
         from repro.core import dram_sim, perf_model, thermal
         if self.table is None:
@@ -315,10 +562,11 @@ class ALDRAMController:
         if scenarios is None:
             scenarios = default_scenarios()
         policies = policies or (dram_sim.OPEN_FCFS,)
-        rows, bins = self.table.safe_stack()
+        rows, bins = (self.table.safe_stack_banks() if per_bank
+                      else self.table.safe_stack())
         out = perf_model.evaluate_adaptive(
             rows, bins, scenarios, config=config, n=n, seed=seed,
-            engine=engine, policies=policies)
+            engine=engine, policies=policies, n_banks=pop.n_banks)
         out["source"] = "profiled-table-dynamic"
         out["policies"] = policies
         return out
@@ -326,6 +574,8 @@ class ALDRAMController:
     # ----------------------------------------------------------- reporting
     def average_reductions(self, temp_c: float,
                            std: T.TimingParams = T.DDR3_1600) -> dict:
+        """Module-envelope Sec. 5.2 statistics (per-bank reductions
+        are reported by `evaluate_bank_system`)."""
         assert self.table is not None
         bi = next((i for i, b in enumerate(self.table.temp_bins)
                    if temp_c <= b), None)
@@ -333,4 +583,4 @@ class ALDRAMController:
             # above the hottest profiled bin the controller falls back
             # to standard timings (TimingTable.lookup): 0% reductions
             return {k: 0.0 for k in ("trcd", "tras", "twr", "trp")}
-        return param_reductions(self.table.params[:, bi, :], std)
+        return param_reductions(self.table.module_params[:, bi, :], std)

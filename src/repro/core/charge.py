@@ -57,8 +57,11 @@ class CellParams(NamedTuple):
 
     @staticmethod
     def unstack(arr: jnp.ndarray) -> "CellParams":
-        return CellParams(arr[..., 0], arr[..., 1], arr[..., 2],
-                          arr[..., 3], arr[..., 4])
+        n = len(CellParams._fields)
+        assert arr.shape[-1] == n, \
+            f"stacked CellParams needs {n} trailing columns " \
+            f"(one per field), got {arr.shape}"
+        return CellParams(*(arr[..., i] for i in range(n)))
 
 
 @dataclasses.dataclass(frozen=True)

@@ -27,6 +27,15 @@ of once per timing row (~4x on CPU, bit-identical).
 `simulate(trace, tp)` remains as a thin single-item shim over the
 batched path.
 
+Every replay layout also accepts PER-BANK timing rows (FLY-DRAM-style
+spatial tables: one register row per rank-level bank): `replay_one`
+takes [banks, 6], `replay_rows` [S, banks, 6], `replay_adaptive` a
+[S+1, banks, 6] table stack, and the Pallas kernel a banked timing
+tile — each request is serviced with ITS bank's row, gathered
+alongside the bank-state gather the scan already pays.  A per-bank
+input whose rows are constant across banks replays bit-identical to
+the per-module path.
+
 `replay_adaptive` is the closed-loop variant (paper Sec. 4's online
 mechanism): the `lax.scan` state additionally carries an RC thermal
 state (`repro.core.thermal`), and each request selects its timing row
@@ -56,6 +65,7 @@ Scheduling-policy axis:
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import NamedTuple
 
 import jax
@@ -167,38 +177,56 @@ def frfcfs_order(trace: Trace, window: int, slack_ns: float = 30.0,
 
 # Host-reorder results cached across `SimSpec.pack()` calls: repeated
 # campaigns over the same traces (benchmark repeats, profile-then-replay
-# pipelines) pay the O(N*window) Python prepass once.  Keyed on the
-# identity of the trace's arrival array plus the policy knobs; the
-# cached entry holds a strong reference to that array, which keeps the
-# id() stable (no false hits from id reuse after GC).
-_REORDER_CACHE: "dict[tuple, tuple]" = {}
+# pipelines) pay the O(N*window) Python prepass once.  Keyed on a
+# CONTENT digest of the trace's request fields plus the policy knobs —
+# keying on array identity (id()) would return a stale permutation
+# after an in-place mutation (same object, new contents), and a GC'd
+# id can even be reused by an unrelated array.
+_REORDER_CACHE: "dict[tuple, Trace]" = {}
 _REORDER_CACHE_MAX = 128
+
+
+def _trace_digest(trace: Trace) -> bytes:
+    """Content digest of every request field (the issue order depends
+    on arrival, bank AND row; is_write rides along for completeness)."""
+    h = hashlib.blake2b(digest_size=16)
+    for f in trace:
+        a = np.ascontiguousarray(np.asarray(f))
+        h.update(str((a.dtype, a.shape)).encode())
+        h.update(a.tobytes())
+    return h.digest()
 
 
 def frfcfs_reorder(trace: Trace, window: int, slack_ns: float = 30.0,
                    max_defer: int | None = None) -> Trace:
     """FR-FCFS-lite host-side preprocessing (see `frfcfs_order`):
     requests keep their arrival timestamps, only issue order changes.
-    Results are cached across calls keyed on (trace identity, window,
-    slack, cap)."""
+    Results are cached across calls keyed on (trace content digest,
+    window, slack, cap), so mutating a trace's arrays in place yields
+    a fresh reorder instead of a stale cached permutation."""
     if window <= 1:
         return trace
-    key = (id(trace.arrival), window, float(slack_ns), max_defer)
+    key = (_trace_digest(trace), window, float(slack_ns), max_defer)
     hit = _REORDER_CACHE.get(key)
-    if hit is not None and hit[0] is trace.arrival:
+    if hit is not None:
         # refresh the LRU position: dicts keep re-assigned keys at
         # their ORIGINAL insertion slot, so pop + re-insert
         _REORDER_CACHE.pop(key)
         _REORDER_CACHE[key] = hit
-        return hit[1]
+        return hit
     order = frfcfs_order(trace, window, slack_ns, max_defer)
-    arrival = np.asarray(trace.arrival)
-    out = Trace(arrival[order], np.asarray(trace.bank)[order],
-                np.asarray(trace.row)[order],
-                np.asarray(trace.is_write)[order])
+    fields = []
+    for f in trace:
+        a = np.asarray(f)[order]
+        # the cached entry is shared across hits: freeze it so an
+        # in-place mutation of a RETURNED trace raises instead of
+        # silently poisoning later equal-content lookups
+        a.flags.writeable = False
+        fields.append(a)
+    out = Trace(*fields)
     while len(_REORDER_CACHE) >= _REORDER_CACHE_MAX:
         _REORDER_CACHE.pop(next(iter(_REORDER_CACHE)))
-    _REORDER_CACHE[key] = (trace.arrival, out)
+    _REORDER_CACHE[key] = out
     return out
 
 
@@ -350,7 +378,11 @@ def replay_one(arrival, bank, row, is_write, valid, tp_row, closed,
     arrival/bank/row/is_write: [N] request stream; `valid`: [N] mask
     (False entries are padding — they leave the controller state and
     the latency statistics untouched, so differently sized traces can
-    share one batched grid).  `tp_row`: [6] `TimingParams.as_row`;
+    share one batched grid).  `tp_row`: [6] `TimingParams.as_row`, or
+    [banks, 6] PER-BANK rows (FLY-DRAM-style spatial tables): each
+    request is then serviced with ITS bank's row, gathered in-scan.
+    A [banks, 6] input whose rows are all equal replays bit-identical
+    to the [6] path (same values feed the same `_service` arithmetic).
     `closed`: scalar bool (auto-precharge page policy).  Returns
     (per-request latency [N] with zeros at padding, total runtime).
 
@@ -358,13 +390,20 @@ def replay_one(arrival, bank, row, is_write, valid, tp_row, closed,
     closed loop: request i cannot issue before request i-window
     completed (an out-of-order core stalls once its miss buffers fill),
     which keeps the queue bounded instead of saturating open-loop."""
-    trcd, tras, twr, trp, tcl = (tp_row[0], tp_row[1], tp_row[2],
-                                 tp_row[3], tp_row[5])
+    banked = tp_row.ndim == 2
+    if not banked:
+        trcd, tras, twr, trp, tcl = (tp_row[0], tp_row[1], tp_row[2],
+                                     tp_row[3], tp_row[5])
 
     def step(s: BankState, req):
         t, b, r, w, v = req
-        s2, lat, _ = _service(s, t, b, r, w, trcd, tras, twr, trp, tcl,
-                              closed, mlp_window)
+        if banked:
+            tb = tp_row[b]
+            s2, lat, _ = _service(s, t, b, r, w, tb[0], tb[1], tb[2],
+                                  tb[3], tb[5], closed, mlp_window)
+        else:
+            s2, lat, _ = _service(s, t, b, r, w, trcd, tras, twr, trp,
+                                  tcl, closed, mlp_window)
         # padding: keep every state component as-is and emit zero latency
         s3 = jax.tree_util.tree_map(
             lambda new, old: jnp.where(v, new, old), s2, s)
@@ -392,13 +431,20 @@ def replay_rows(arrival, bank, row, is_write, valid, timings, closed,
     order — the open row is carried as float32, exact for row ids
     below 2**24).
 
+    `timings` may also be a PER-BANK stack [S, banks, 6]: each
+    request's [S] timing columns are then gathered from its bank
+    alongside the bank-state gather.  Constant-across-banks input
+    replays bit-identical to the [S, 6] path.
+
     Returns (per-request latency [S, N] with zeros at padding, total
     runtime [S]).  Padding must be a suffix of `valid` (the ring gate
     is masked, not re-indexed — same contract as the Pallas kernel).
     """
-    trcd, tras, twr, trp, tcl = (timings[:, 0], timings[:, 1],
-                                 timings[:, 2], timings[:, 3],
-                                 timings[:, 5])
+    banked = timings.ndim == 3
+    if not banked:
+        trcd, tras, twr, trp, tcl = (timings[:, 0], timings[:, 1],
+                                     timings[:, 2], timings[:, 3],
+                                     timings[:, 5])
     s_rows = timings.shape[0]
 
     def step(st, req):
@@ -407,9 +453,15 @@ def replay_rows(arrival, bank, row, is_write, valid, timings, closed,
         rowb = bs[b]                    # [4, S] one gather per request
         gate = ring[idx % mlp_window]   # [S]
         rf = r.astype(jnp.float32)
+        if banked:
+            tb = timings[:, b, :]       # [S, 6] this bank's columns
+            tc_ = (tb[:, 0], tb[:, 1], tb[:, 2], tb[:, 3], tb[:, 5])
+        else:
+            tc_ = (trcd, tras, twr, trp, tcl)
         (latched, act_new, wrd_new, rdy_new, done, lat,
          _) = service_math(t, gate, rowb[0], rowb[1], rowb[2], rowb[3],
-                           rf, w, trcd, tras, twr, trp, tcl, closed)
+                           rf, w, tc_[0], tc_[1], tc_[2], tc_[3],
+                           tc_[4], closed)
         new_row = jnp.stack([jnp.broadcast_to(latched, (s_rows,)),
                              act_new, wrd_new, rdy_new])
         bs2 = bs.at[b].set(jnp.where(v, new_row, rowb))
@@ -444,8 +496,12 @@ def replay_adaptive(arrival, bank, row, is_write, valid, table, bins,
     `table`: [S+1, 6] stacked timing rows — one per temperature bin
     plus the JEDEC fallback row LAST (selected whenever the sensed
     temperature exceeds the hottest profiled bin, mirroring
-    `aldram.TimingTable.lookup_many`).  `bins`: [S] ascending bin
-    edges (C).  `scn_row`: [thermal.SCN_COLS] ambient-scenario row;
+    `aldram.TimingTable.lookup_many`) — or a PER-BANK stack
+    [S+1, banks, 6] (`aldram.TimingTable.safe_stack_banks`): the scan
+    then gathers row (selected bin, request's bank), so a FLY-DRAM
+    deployment rides the same dispatch; constant-across-banks input
+    replays bit-identical to the [S+1, 6] path.  `bins`: [S] ascending
+    bin edges (C).  `scn_row`: [thermal.SCN_COLS] ambient-scenario row;
     `tcfg_row`: `thermal.ThermalConfig.as_row()`.
 
     Per request the scan (1) decays the per-bank heat toward the
@@ -471,6 +527,7 @@ def replay_adaptive(arrival, bank, row, is_write, valid, table, bins,
     tau, c_heat, hyst_c = tcfg_row[0], tcfg_row[1], tcfg_row[2]
     e_burst, e_act_pre, p_as = tcfg_row[3], tcfg_row[4], tcfg_row[5]
     hyst = hyst_c * scn_row[8]                   # per-scenario scale
+    banked = table.ndim == 3
 
     def step(s: AdaptiveState, req):
         t, b, r, w, v = req
@@ -484,7 +541,7 @@ def replay_adaptive(arrival, bank, row, is_write, valid, table, bins,
         # cooler bin's edge; up-switches bypass the hysteresis entirely
         down = jnp.searchsorted(bins, sensed + hyst, side="left")
         new_bin = jnp.maximum(up, jnp.minimum(s.cur_bin, down))
-        tp = table[new_bin]
+        tp = table[new_bin, b] if banked else table[new_bin]
         s2b, lat, is_hit = _service(s.bank, t, b, r, w, tp[0], tp[1],
                                     tp[2], tp[3], tp[5], closed,
                                     mlp_window)

@@ -137,15 +137,16 @@ def workload_speedup(w: Workload, std: TimingParams, fast: TimingParams,
     return cpi_std / cpi_fast - 1.0
 
 
-@functools.partial(jax.jit, static_argnums=(1,))
-def _synth_batch(key, n, offsets, row_hits, write_fracs, inters):
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def _synth_batch(key, n, n_banks, offsets, row_hits, write_fracs,
+                 inters):
     """ONE traced dispatch: every workload trace of a campaign, vmapped
     (per-row key fold keeps each trace identical to the per-call
     `_trace_for` path)."""
     def one(off, rh, wf, ia):
         k = jax.random.fold_in(key, off)
-        return dram_sim.synth_trace(k, n, row_hit=rh, write_frac=wf,
-                                    inter_arrival_ns=ia)
+        return dram_sim.synth_trace(k, n, n_banks=n_banks, row_hit=rh,
+                                    write_frac=wf, inter_arrival_ns=ia)
     return jax.vmap(one)(offsets, row_hits, write_fracs, inters)
 
 
@@ -154,7 +155,8 @@ def _synth_batch(key, n, offsets, row_hits, write_fracs, inters):
 synth_dispatch_count = 0
 
 
-def trace_batch(n: int = 8192, seed: int = 0) -> dram_sim.Trace:
+def trace_batch(n: int = 8192, seed: int = 0,
+                n_banks: int = 8) -> dram_sim.Trace:
     """All 35 workloads x (single, multi) as one batched `Trace` with a
     [70, n] leading axis — rows ordered single-block then multi-block,
     each in WORKLOADS order."""
@@ -168,7 +170,7 @@ def trace_batch(n: int = 8192, seed: int = 0) -> dram_sim.Trace:
             wfs.append(wf)
             ias.append(ia)
     synth_dispatch_count += 1
-    return _synth_batch(jax.random.PRNGKey(seed), n,
+    return _synth_batch(jax.random.PRNGKey(seed), n, n_banks,
                         jnp.asarray(offs, jnp.int32),
                         jnp.asarray(rhs, jnp.float32),
                         jnp.asarray(wfs, jnp.float32),
@@ -177,18 +179,21 @@ def trace_batch(n: int = 8192, seed: int = 0) -> dram_sim.Trace:
 
 def evaluate_many(timings, n: int = 8192, seed: int = 0,
                   engine: SimEngine | None = None,
-                  policies: tuple[dram_sim.Policy, ...] = (dram_sim.OPEN_FCFS,)
-                  ) -> dict:
+                  policies: tuple[dram_sim.Policy, ...] = (dram_sim.OPEN_FCFS,),
+                  n_banks: int = 8) -> dict:
     """Replay the full workload pool under arbitrarily many stacked
     timing rows (and policies): ONE synthesis dispatch + ONE batched
     replay dispatch, however many scenario cells the campaign spans.
+    `timings` may be [S, 6] rows or a per-bank [S, banks, 6] stack
+    (FLY-DRAM spatial tables — see `aldram.evaluate_bank_system`).
 
     Returns mean latencies as [modes(2), workloads(35), P, S] plus the
     raw `SimResult` (trace axis = mode-major flattening).
     """
     engine = engine or SimEngine()
-    res = engine.run(SimSpec(traces=trace_batch(n, seed), timings=timings,
-                             policies=policies))
+    res = engine.run(SimSpec(traces=trace_batch(n, seed, n_banks),
+                             timings=timings, policies=policies,
+                             n_banks=n_banks))
     nw = len(WORKLOADS)
     grid = res.mean_latency_ns.reshape((len(MODES), nw) +
                                        res.mean_latency_ns.shape[1:])
@@ -199,7 +204,7 @@ def evaluate_many(timings, n: int = 8192, seed: int = 0,
 def evaluate_adaptive(table, bins, scenarios, config=None, n: int = 4096,
                       seed: int = 0, engine: SimEngine | None = None,
                       policies: tuple[dram_sim.Policy, ...] =
-                      (dram_sim.OPEN_FCFS,)) -> dict:
+                      (dram_sim.OPEN_FCFS,), n_banks: int = 8) -> dict:
     """Closed-loop Fig. 4: replay the workload pool with IN-SCAN
     temperature-bin selection under every thermal scenario, and price
     it against the two bracketing deployments:
@@ -211,8 +216,10 @@ def evaluate_adaptive(table, bins, scenarios, config=None, n: int = 4096,
         bound; the gap to it is the cost of thrash protection).
 
     `table`: [bins+1, 6] stacked rows, JEDEC fallback LAST (e.g.
-    `aldram.TimingTable.safe_stack`); `bins`: ascending bin edges;
-    `scenarios`: `thermal.ThermalScenario`s; `config`:
+    `aldram.TimingTable.safe_stack`), or the per-bank stack
+    [bins+1, banks, 6] (`safe_stack_banks` — the in-scan selection
+    then gathers row (bin, request's bank)); `bins`: ascending bin
+    edges; `scenarios`: `thermal.ThermalScenario`s; `config`:
     `thermal.ThermalConfig`.
 
     O(1) traced dispatches regardless of scenario/policy count: ONE
@@ -226,17 +233,21 @@ def evaluate_adaptive(table, bins, scenarios, config=None, n: int = 4096,
     config = config or TH.ThermalConfig()
     scenarios = tuple(scenarios)
     table = np.asarray(table, np.float32)
-    assert table.ndim == 2, "evaluate_adaptive takes ONE table stack"
+    assert table.ndim in (2, 3), \
+        "evaluate_adaptive takes ONE table stack ([S+1, 6] or the " \
+        "per-bank [S+1, banks, 6])"
     bins = tuple(float(b) for b in bins)
     nc = len(scenarios)
 
-    traces = trace_batch(n, seed)
+    traces = trace_batch(n, seed, n_banks)
     # adaptive + oracle variants ride one scenario axis -> one dispatch
+    # (K axis explicit, so a per-bank stack is unambiguous)
     tspec = TH.ThermalSpec(
         scenarios=scenarios + tuple(s.oracle() for s in scenarios),
         temp_bins=bins, config=config)
-    res_a = engine.run(SimSpec(traces=traces, timings=table,
-                               policies=policies, thermal=tspec))
+    res_a = engine.run(SimSpec(traces=traces, timings=table[None],
+                               policies=policies, thermal=tspec,
+                               n_banks=n_banks))
     lat_a = res_a.mean_latency_ns[:, :, 0, :]        # [T, P, 2C]
 
     # static-worst-case: provision each scenario for its peak sensed
@@ -252,10 +263,10 @@ def evaluate_adaptive(table, bins, scenarios, config=None, n: int = 4096,
     peak = res_a.temp_max[:, :, 0, :nc].max(axis=(0, 1))        # [C]
     worst_bin = np.searchsorted(np.asarray(bins),
                                 peak + config.hyst_c, side="left")
-    rows = np.concatenate([DDR3_1600.as_row()[None, :],
-                           table[worst_bin]], axis=0)
+    base = np.broadcast_to(DDR3_1600.as_row(), table.shape[1:])
+    rows = np.concatenate([base[None], table[worst_bin]], axis=0)
     res_s = engine.run(SimSpec(traces=traces, timings=rows,
-                               policies=policies))
+                               policies=policies, n_banks=n_banks))
     lat_s = res_s.mean_latency_ns                    # [T, P, 1+C]
 
     # one CPI pass: [base | static-worst | adaptive | oracle] columns

@@ -35,7 +35,24 @@ from repro.core.variation import Population
 
 
 class RefreshProfile(NamedTuple):
-    """Maximum error-free refresh intervals (ms) at standard timings."""
+    """Maximum error-free refresh intervals (ms) at standard timings.
+
+    Granularity convention (audited against the [modules, chips,
+    banks, K] cell hierarchy of `variation.Population`):
+
+      per_chip[m, c] — envelope of chip c: the worst BANK (and tail
+                       cell) of that chip governs (reduce banks, K).
+      per_bank[m, b] — envelope of RANK-level bank b: bank b spans
+                       bank b of every chip (chips operate in
+                       lockstep), so the worst CHIP at that bank
+                       index governs (reduce chips, K).
+
+    The module envelope is the intersection of either slicing:
+    `per_module == per_chip.min(1) == per_bank.min(1)` exactly (the
+    first grid failure over a union of cells is the min over its
+    parts) — pinned by the envelope-containment test in
+    tests/test_bank_table.py on a population with chips != banks.
+    """
 
     per_module: np.ndarray        # [modules]
     per_chip: np.ndarray          # [modules, chips]
@@ -120,8 +137,9 @@ class Profiler:
             return grid[idx]
 
         per_cellmin = ok.all(3)                                 # [m,ch,bk,g]
-        per_bank = max_passing(per_cellmin.all(1))              # worst chip
-        per_chip = max_passing(per_cellmin.all(2))              # worst bank
+        # rank-level bank b = bank b of EVERY chip -> worst chip governs
+        per_bank = max_passing(per_cellmin.all(1))              # [m, banks]
+        per_chip = max_passing(per_cellmin.all(2))              # [m, chips]
         per_module = max_passing(per_cellmin.all(1).all(1))
         safe = np.maximum(per_module - self.refresh_guardband_ms, grid[0])
         return RefreshProfile(per_module, per_chip, per_bank, safe)

@@ -10,7 +10,10 @@ side: a `SimSpec` declares the campaign axes —
                 (`dram_sim.Policy`: open/closed page, FR-FCFS-lite
                 reordering window),
   * timings   — stacked timing-parameter rows
-                (`TimingParams.as_row` / `timing.stack_timing`),
+                (`TimingParams.as_row` / `timing.stack_timing`), or a
+                PER-BANK [S, banks, 6] stack (FLY-DRAM spatial
+                tables: each request replays under its bank's row,
+                gathered in-scan — same dispatch count),
 
 and `SimEngine` compiles the whole (T x P x S) grid into a single
 jitted replay dispatch, returning a structured `SimResult` of mean/p99
@@ -72,7 +75,9 @@ COLLECTABLE = ("latencies", "temps", "bins")
 
 
 def _as_rows(timings) -> np.ndarray:
-    """Normalize the timing axis to a [S, 6] stacked-row matrix."""
+    """Normalize the timing axis to a [S, 6] stacked-row matrix, or
+    a PER-BANK [S, banks, 6] stack (FLY-DRAM spatial tables — each
+    request replays under its bank's row)."""
     if isinstance(timings, T.TimingParams):
         return timings.as_row()[None, :]
     if isinstance(timings, (list, tuple)):
@@ -80,17 +85,20 @@ def _as_rows(timings) -> np.ndarray:
     arr = np.asarray(timings, np.float32)
     if arr.ndim == 1:
         arr = arr[None, :]
-    assert arr.ndim == 2 and arr.shape[1] == 6, arr.shape
+    assert arr.ndim in (2, 3) and arr.shape[-1] == 6, arr.shape
     return arr
 
 
 def _as_tables(timings, n_bins: int) -> np.ndarray:
     """Normalize the adaptive timing axis to [K, n_bins + 1, 6] table
-    stacks (per-bin rows + the JEDEC fallback row last)."""
+    stacks (per-bin rows + the JEDEC fallback row last) or the
+    per-bank [K, n_bins + 1, banks, 6] form.  A SINGLE per-bank stack
+    must be passed 4-dim (`stack[None]`) — a 3-dim input is always
+    read as K per-module stacks."""
     arr = np.asarray(timings, np.float32)
     if arr.ndim == 2:
         arr = arr[None, :, :]
-    assert arr.ndim == 3 and arr.shape[2] == 6, arr.shape
+    assert arr.ndim in (3, 4) and arr.shape[-1] == 6, arr.shape
     assert arr.shape[1] == n_bins + 1, \
         f"table stack needs {n_bins}+1 rows (JEDEC last), got {arr.shape}"
     return arr
@@ -110,7 +118,9 @@ class SimSpec:
     path always materializes them (it needs the raw grid anyway)."""
 
     traces: tuple[Trace, ...]
-    timings: np.ndarray                      # [S, 6] rows | [K, S+1, 6]
+    # [S, 6] rows | per-bank [S, banks, 6] | adaptive [K, S+1, 6] |
+    # adaptive per-bank [K, S+1, banks, 6]
+    timings: np.ndarray
     policies: tuple[Policy, ...] = (OPEN_FCFS,)
     n_banks: int = 8
     mlp_window: int = 8
@@ -134,6 +144,11 @@ class SimSpec:
         object.__setattr__(self, "collect", tuple(self.collect))
         assert self.traces and self.policies, "empty campaign"
         assert all(c in COLLECTABLE for c in self.collect), self.collect
+        # per-bank timing axes must match the simulated bank count
+        tdim = self.timings.ndim - (0 if self.thermal is None else 1)
+        if tdim == 3:
+            assert self.timings.shape[-2] == self.n_banks, \
+                (self.timings.shape, self.n_banks)
 
     @classmethod
     def single(cls, trace: Trace, tp: T.TimingParams,

@@ -135,6 +135,19 @@ class SweepResult:
                       combo (min latency sum, min tRCD tie-break), with
                       the module's tREFI in column 4
       latency_sum[k]: [modules, n_temps] latency sum of the choice
+
+    Per-bank views of the SAME dispatch (FLY-DRAM-style spatial
+    variation: the margin grid is reduced over (chips, tail cells)
+    only, keeping the rank-level bank axis — bank b spans bank b of
+    every chip, see `variation.Population`):
+      ok_bank[k]:          [modules, banks, n_temps, n_combos_k]
+      chosen_bank[k]:      [modules, banks, n_temps, 5]
+      latency_sum_bank[k]: [modules, banks, n_temps]
+
+    The module envelope is the intersection of its bank envelopes
+    (`ok[k] == ok_bank[k].all(1)`, exactly), so every bank's chosen
+    latency sum is <= its module's — per-bank registers can only
+    recover latency the module-level envelope gives away.
     """
 
     spec: SweepSpec
@@ -143,6 +156,9 @@ class SweepResult:
     ok: tuple[np.ndarray, ...]
     chosen: tuple[np.ndarray, ...]
     latency_sum: tuple[np.ndarray, ...]
+    ok_bank: tuple[np.ndarray, ...] = ()
+    chosen_bank: tuple[np.ndarray, ...] = ()
+    latency_sum_bank: tuple[np.ndarray, ...] = ()
 
     @property
     def temps(self) -> tuple[float, ...]:
@@ -272,7 +288,8 @@ class MarginEngine:
         folded into the per-cell, per-op override columns.
         """
         n_mod = pop.n_modules
-        cpm = int(np.prod(pop.cells.shape[1:4]))     # cells per module
+        ch, bk, kc = pop.cells.shape[1:4]
+        cpm = ch * bk * kc                           # cells per module
         n_temps = len(spec.temps)
         temps_arr = np.asarray(spec.temps, np.float32)
 
@@ -295,6 +312,7 @@ class MarginEngine:
             trefi_write=trefi_cells[Op.WRITE])
 
         margins, ok, chosen, sums = [], [], [], []
+        ok_b, chosen_b, sums_b = [], [], []
         off = 0
         for test in spec.tests:
             c = test.combos.shape[0]
@@ -302,16 +320,30 @@ class MarginEngine:
             block = block[:, off:off + n_temps * c]
             off += n_temps * c
             m3 = block.reshape(-1, n_temps, c)        # [n_cells, T, C]
-            ok_k = (m3.reshape(n_mod, cpm, n_temps, c) >= 0.0).all(1)
+            # per-bank envelope: reduce over chips and tail cells only
+            # ([modules, banks, T, C]); the module envelope is its
+            # intersection over banks — identical booleans to the old
+            # collapse over the whole cell hierarchy
+            okb_k = (m3.reshape(n_mod, ch, bk, kc, n_temps, c)
+                     >= 0.0).all(3).all(1)
+            ok_k = okb_k.all(1)
             ch_k, s_k = select_combos(test.combos, ok_k, test.op,
                                       trefi_mod[test.op], self.std)
+            chb_k, sb_k = select_combos(test.combos, okb_k, test.op,
+                                        trefi_mod[test.op], self.std)
             margins.append(m3)
             ok.append(ok_k)
             chosen.append(ch_k)
             sums.append(s_k)
+            ok_b.append(okb_k)
+            chosen_b.append(chb_k)
+            sums_b.append(sb_k)
         return SweepResult(spec=spec, std=self.std,
                            margins=tuple(margins), ok=tuple(ok),
-                           chosen=tuple(chosen), latency_sum=tuple(sums))
+                           chosen=tuple(chosen), latency_sum=tuple(sums),
+                           ok_bank=tuple(ok_b),
+                           chosen_bank=tuple(chosen_b),
+                           latency_sum_bank=tuple(sums_b))
 
 
 def _as_jnp(x: np.ndarray | None) -> jnp.ndarray | None:

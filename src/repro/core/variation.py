@@ -74,13 +74,26 @@ class VariationConfig:
 
 
 class Population(NamedTuple):
-    """cells: [modules, chips, banks, K, 4] stacked CellParams."""
+    """cells: [modules, chips, banks, K, 5] stacked CellParams.
+
+    The trailing axis carries one column per `CellParams` field
+    (tau_r, xfer, tau_ret85, tau_p, tau_w) — `CellParams.unstack`
+    asserts the match, so adding a field without updating every
+    stacker fails loudly instead of silently skewing downstream
+    reshapes.  The bank axis is the RANK-level bank: index b spans
+    bank b of every chip (the chips of a rank operate in lockstep, so
+    a per-bank timing register governs the worst chip at that bank
+    index)."""
 
     cells: jnp.ndarray
 
     @property
     def n_modules(self) -> int:
         return self.cells.shape[0]
+
+    @property
+    def n_banks(self) -> int:
+        return self.cells.shape[2]
 
     def flat_cells(self) -> jnp.ndarray:
         return self.cells.reshape(-1, self.cells.shape[-1])

@@ -24,23 +24,25 @@ from repro.kernels.replay import ref, replay
 
 
 def _pad_rows(timings_t: jnp.ndarray, bs: int) -> jnp.ndarray:
-    """Pad the [6, S] timing-row axis to a block multiple; padding
-    replicates column 0 (always-valid timings whose outputs are
-    sliced off)."""
-    s = timings_t.shape[1]
+    """Pad the trailing timing-row axis of a [..., 6, S] tile to a
+    block multiple; padding replicates column 0 (always-valid timings
+    whose outputs are sliced off)."""
+    s = timings_t.shape[-1]
     rem = (-s) % bs
     if rem == 0:
         return timings_t
-    return jnp.concatenate(
-        [timings_t, jnp.broadcast_to(timings_t[:, :1], (6, rem))], axis=1)
+    fill = jnp.broadcast_to(timings_t[..., :1],
+                            timings_t.shape[:-1] + (rem,))
+    return jnp.concatenate([timings_t, fill], axis=-1)
 
 
 def replay_grid(arrival, bank, row, is_write, valid, timings, closed,
                 n_banks: int = 8, mlp_window: int = 8,
                 impl: str = "auto", bs: int | None = None):
     """arrival/bank/row/is_write: [T, P, N]; valid: [T, N]; timings:
-    [S, 6]; closed: [P] bool -> (latency [T, P, S, N], total
-    [T, P, S]) — same contract as the lax.scan path (`ref.replay_grid`).
+    [S, 6] or per-bank [S, banks, 6]; closed: [P] bool -> (latency
+    [T, P, S, N], total [T, P, S]) — same contract as the lax.scan
+    path (`ref.replay_grid`).
     """
     if impl == "auto":
         impl = "pallas" if jax.default_backend() == "tpu" else "ref"
@@ -64,7 +66,10 @@ def replay_grid(arrival, bank, row, is_write, valid, timings, closed,
                              (t, p, n)).reshape(g, n)
     closed_col = jnp.broadcast_to(
         closed.astype(jnp.float32)[None, :], (t, p)).reshape(g, 1)
-    tim_t = _pad_rows(jnp.asarray(timings, jnp.float32).T, bs)
+    tim = jnp.asarray(timings, jnp.float32)
+    # [S, 6] -> [6, S]; per-bank [S, B, 6] -> [B, 6, S]
+    tim_t = _pad_rows(tim.T if tim.ndim == 2
+                      else tim.transpose(1, 2, 0), bs)
 
     lat, total = replay.replay_blocks(
         closed_col, arrival_g, bank_g, row_g, wr_g, val_g, tim_t,

@@ -17,8 +17,9 @@ from repro.core.dram_sim import replay_one
 def replay_grid(arrival, bank, row, is_write, valid, timings, closed,
                 n_banks: int = 8, mlp_window: int = 8):
     """arrival/bank/row/is_write: [T, P, N]; valid: [T, N]; timings:
-    [S, 6]; closed: [P] bool -> (latency [T, P, S, N], total
-    [T, P, S])."""
+    [S, 6] or per-bank [S, banks, 6] (vmapping the timing axis hands
+    `replay_one` a [banks, 6] row set per lane); closed: [P] bool ->
+    (latency [T, P, S, N], total [T, P, S])."""
     def one(a, b, r, w, v, tp, c):
         return replay_one(a, b, r, w, v, tp, c, n_banks, mlp_window)
 

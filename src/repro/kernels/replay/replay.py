@@ -24,6 +24,12 @@ ring gate is indexed by the loop counter, which equals the scan's
 valid-step counter only while padding stays a suffix) leave every
 state tile untouched and emit zero latency.
 
+Per-bank timing tables (FLY-DRAM spatial variation) ride a
+[n_banks, 6, S] timing tile: the request's 6 timing lanes are
+selected with the same one-hot bank mask that gathers its bank-state
+rows, so the per-bank gather costs one extra masked reduce per
+request and nothing else changes.
+
 VMEM per grid step: 5 request streams of N float32/int32 + the
 [6, 128] timing tile + the [N, 128] latency out tile + ~14 KB of
 state scratch — ~4.3 MB at N = 8192, under the ~16 MB budget.
@@ -46,12 +52,14 @@ BLOCK_ROWS = 128
 
 def _kernel(closed_ref, arr_ref, bank_ref, row_ref, wr_ref, val_ref,
             tim_ref, lat_ref, total_ref, open_s, act_s, wrd_s, rdy_s,
-            ring_s, *, n_banks: int, mlp_window: int, n_req: int):
-    bs = tim_ref.shape[1]
+            ring_s, *, n_banks: int, mlp_window: int, n_req: int,
+            banked: bool = False):
+    bs = tim_ref.shape[-1]
     closed = closed_ref[0, 0] > 0.5
-    trcd, tras, twr, trp, tcl = (tim_ref[0, :], tim_ref[1, :],
-                                 tim_ref[2, :], tim_ref[3, :],
-                                 tim_ref[5, :])
+    if not banked:
+        trcd, tras, twr, trp, tcl = (tim_ref[0, :], tim_ref[1, :],
+                                     tim_ref[2, :], tim_ref[3, :],
+                                     tim_ref[5, :])
     bank_iota = jax.lax.broadcasted_iota(jnp.int32, (n_banks, bs), 0)
     ring_iota = jax.lax.broadcasted_iota(jnp.int32, (mlp_window, bs), 0)
 
@@ -76,13 +84,21 @@ def _kernel(closed_ref, arr_ref, bank_ref, row_ref, wr_ref, val_ref,
         wrd_b = jnp.sum(jnp.where(bm, wrd_s[...], 0.0), axis=0)
         rdy_b = jnp.sum(jnp.where(bm, rdy_s[...], 0.0), axis=0)
         gate = jnp.sum(jnp.where(rm, ring_s[...], 0.0), axis=0)
+        if banked:
+            # per-bank timing tile [n_banks, 6, bs]: select the
+            # request's bank with the same one-hot sublane mask
+            tim_b = jnp.sum(jnp.where(bm[:, None, :], tim_ref[...],
+                                      0.0), axis=0)         # [6, bs]
+            tc = (tim_b[0], tim_b[1], tim_b[2], tim_b[3], tim_b[5])
+        else:
+            tc = (trcd, tras, twr, trp, tcl)
 
         # the per-request timing model itself is the SHARED elementwise
         # helper (repro.core.dram_sim.service_math) — only the one-hot
         # gather/scatter layout is kernel-specific
         (row_latched, act_new, wrd_new, rdy_new, done, lat,
          _) = service_math(t, gate, open_b, act_b, wrd_b, rdy_b, rf, w,
-                           trcd, tras, twr, trp, tcl, closed)
+                           tc[0], tc[1], tc[2], tc[3], tc[4], closed)
 
         upd = bm & v
         open_s[...] = jnp.where(upd, row_latched, open_s[...])
@@ -107,15 +123,24 @@ def replay_blocks(closed_col, arrival, bank, row, is_write, valid,
                   interpret: bool = False, bs: int = BLOCK_ROWS):
     """closed_col: [G, 1] float32 (1.0 = closed page); arrival: [G, N]
     float32; bank/row/is_write/valid: [G, N] int32 (flags as 0/1);
-    timings_t: [6, S] float32 with S % bs == 0 (rows = as_row columns).
-    G = flattened (trace x policy) cells.  Returns (latency [G, N, S],
-    total runtime [G, S])."""
+    timings_t: [6, S] float32 with S % bs == 0 (rows = as_row
+    columns), or the PER-BANK tile [n_banks, 6, S] — each request's
+    timing lane columns are then selected with the same one-hot bank
+    mask that gathers its bank state.  G = flattened (trace x policy)
+    cells.  Returns (latency [G, N, S], total runtime [G, S])."""
     g, n = arrival.shape
-    s = timings_t.shape[1]
-    assert timings_t.shape[0] == 6 and s % bs == 0, (timings_t.shape, bs)
+    banked = timings_t.ndim == 3
+    s = timings_t.shape[-1]
+    assert timings_t.shape[-2] == 6 and s % bs == 0, (timings_t.shape, bs)
+    if banked:
+        assert timings_t.shape[0] == n_banks, (timings_t.shape, n_banks)
     grid = (g, s // bs)
     kernel = functools.partial(_kernel, n_banks=n_banks,
-                               mlp_window=mlp_window, n_req=n)
+                               mlp_window=mlp_window, n_req=n,
+                               banked=banked)
+    tim_spec = (pl.BlockSpec((n_banks, 6, bs), lambda i, j: (0, 0, j))
+                if banked else
+                pl.BlockSpec((6, bs), lambda i, j: (0, j)))
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -126,7 +151,7 @@ def replay_blocks(closed_col, arrival, bank, row, is_write, valid,
             pl.BlockSpec((1, n), lambda i, j: (i, 0)),      # row
             pl.BlockSpec((1, n), lambda i, j: (i, 0)),      # is_write
             pl.BlockSpec((1, n), lambda i, j: (i, 0)),      # valid
-            pl.BlockSpec((6, bs), lambda i, j: (0, j)),     # timing tile
+            tim_spec,                                       # timing tile
         ],
         out_specs=[
             pl.BlockSpec((1, n, bs), lambda i, j: (i, 0, j)),

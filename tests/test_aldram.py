@@ -93,8 +93,9 @@ class TestController:
         """Forcing a tiny `max_grid_elems` drives the g < m chunked
         path: several margin dispatches over module groups, same
         verdict as the single-dispatch grid."""
-        m = controller.table.params.shape[0]
-        b = controller.table.params.shape[1]
+        m, b = controller.table.module_params.shape[:2]
+        banks = controller.table.n_banks
+        cols = b * (1 + banks)       # envelope + per-bank combo columns
         cpm = int(np.prod(small_pop.cells.shape[1:4]))
         calls = {"n": 0, "rows": []}
         real = controller.engine.margins
@@ -107,14 +108,14 @@ class TestController:
 
         monkeypatch.setattr(controller.engine, "margins", spy)
         # small enough that each group is a single module: g == 1
-        assert controller.verify(small_pop, max_grid_elems=cpm * b)
+        assert controller.verify(small_pop, max_grid_elems=cpm * cols)
         assert calls["n"] == m, calls
-        assert all(r == (cpm, b) for r in calls["rows"]), calls["rows"]
+        assert all(r == (cpm, cols) for r in calls["rows"]), calls["rows"]
 
         calls["n"], calls["rows"] = 0, []
         # the default budget keeps the tested size one dispatch
         assert controller.verify(small_pop)
-        assert calls["n"] == 1 and calls["rows"][0] == (m * cpm, m * b)
+        assert calls["n"] == 1 and calls["rows"][0] == (m * cpm, m * cols)
 
     def test_reductions_deeper_when_cooler(self, controller):
         r55 = controller.average_reductions(55.0)

@@ -246,7 +246,7 @@ class TestProfiledSystemClosure:
         assert np.array_equal(res["rows"][0], DDR3_1600.as_row())
         for si in range(len(res["temps"])):
             assert np.array_equal(res["rows"][1 + si, :4],
-                                  tbl.params[:, si, :].max(axis=0))
+                                  tbl.module_params[:, si, :].max(axis=0))
         # per-temperature speedups exist and degrade (weakly) when hot
         sp = [res["per_temp"][t]["multi_all_gmean"] for t in res["temps"]]
         assert len(sp) == len(controller.temp_bins)

@@ -97,8 +97,9 @@ class TestEnvelopeMonotonicity:
 
 class TestControllerEquivalence:
     def test_profile_table_matches_per_bin_path(self, small_pop):
-        """(c) the fused controller table equals the old per-bin,
-        per-op procedure run through the shims."""
+        """(c) the fused controller table's MODULE view equals the old
+        per-bin, per-op procedure run through the shims (the default
+        per-bank profile carries it unchanged)."""
         ctrl = ALDRAMController(make_profiler(), temp_bins=TEMPS)
         tbl = ctrl.profile(small_pop)
 
@@ -117,9 +118,16 @@ class TestControllerEquivalence:
             expect[:, bi, 2] = tp_w.combos[:, 2]
             expect[:, bi, 3] = np.maximum(tp_r.combos[:, 3],
                                           tp_w.combos[:, 3])
-        assert np.array_equal(tbl.params, expect)
+        assert tbl.per_bank and tbl.params.ndim == 4
+        assert np.array_equal(tbl.module_params, expect)
+        assert np.array_equal(tbl.reduce_banks().params, expect)
         assert np.array_equal(tbl.safe_trefi_read, rp_read.safe)
         assert np.array_equal(tbl.safe_trefi_write, rp_write.safe)
+        # a per_bank=False controller builds exactly the module table
+        tbl_m = ALDRAMController(make_profiler(), temp_bins=TEMPS,
+                                 per_bank=False).profile(small_pop)
+        assert tbl_m.params.ndim == 3
+        assert np.array_equal(tbl_m.params, expect)
 
     def test_average_reductions_above_hottest_bin(self, small_pop):
         """Satellite: no StopIteration above the hottest profiled bin —
@@ -157,6 +165,18 @@ class TestDispatchCounts:
 
     def test_verify_is_one_dispatch(self, small_pop, monkeypatch):
         ctrl = ALDRAMController(make_profiler())
+        ctrl.profile(small_pop)
+        calls = self._spy(monkeypatch)
+        assert ctrl.verify(small_pop)
+        assert len(calls) == 1, calls
+        # per-bank verify: (1 envelope + n_banks) combo columns per
+        # (module, bin), still one dispatch
+        assert calls[0] == (small_pop.n_modules * len(ctrl.temp_bins)
+                            * (1 + small_pop.n_banks))
+
+    def test_verify_per_module_table_is_one_dispatch(self, small_pop,
+                                                     monkeypatch):
+        ctrl = ALDRAMController(make_profiler(), per_bank=False)
         ctrl.profile(small_pop)
         calls = self._spy(monkeypatch)
         assert ctrl.verify(small_pop)
