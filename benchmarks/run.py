@@ -93,7 +93,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (fig2_refresh, fig2_timing, fig3_population,
-                            fig4_system, fig_bank, framework,
+                            fig4_system, fig_bank, fleet_bench, framework,
                             multi_timing, power_bench, repeatability,
                             roofline, sim_bench, thermal_bench)
 
@@ -109,6 +109,7 @@ def main() -> None:
         "power": power_bench.run,
         "repeatability": repeatability.run,
         "multi_timing": multi_timing.run,
+        "fleet_bench": fleet_bench.run,
         "framework": framework.run,
         "roofline": roofline.run,
     }

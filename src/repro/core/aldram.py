@@ -95,6 +95,11 @@ class TimingTable:
     safe_trefi_write: np.ndarray    # [modules] ms
     # module-envelope table riding a per-bank `params` (None otherwise)
     params_module: np.ndarray | None = None
+    # online-update lineage (repro.fleet.recal): every `patch` bumps
+    # the version and keeps the previous table for `rollback`
+    version: int = 0
+    parent: "TimingTable | None" = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     def __post_init__(self):
         assert self.params.ndim in (3, 4), self.params.shape
@@ -124,6 +129,32 @@ class TimingTable:
             return self
         return TimingTable(self.temp_bins, self.module_params,
                            self.safe_trefi_read, self.safe_trefi_write)
+
+    # ---------------------------------------------------- online lineage
+    def patch(self, **updates) -> "TimingTable":
+        """A new table VERSION with the given field updates (`params`,
+        `params_module`, `safe_trefi_read`, `safe_trefi_write`) —
+        the deployment move of the fleet recalibration service
+        (`repro.fleet.recal`): online guardband tightening, clean-
+        streak relaxation, and re-profiling all install their new rows
+        through here, so every deployed table knows its lineage.  The
+        patched table's `version` is bumped and its `parent` is THIS
+        table; the caller must have verified (margin probe or full
+        `verify()`) that the patched rows restore the zero-error
+        invariant for the population being served before deploying.
+        """
+        allowed = {"params", "params_module", "safe_trefi_read",
+                   "safe_trefi_write"}
+        assert set(updates) <= allowed, set(updates) - allowed
+        return dataclasses.replace(self, version=self.version + 1,
+                                   parent=self, **updates)
+
+    def rollback(self) -> "TimingTable":
+        """The previous deployed version (self if this is the root).
+        The escape hatch when a patch turns out to be wrong — e.g. a
+        relaxation deployed on a clean streak that the next scrub pass
+        proves premature."""
+        return self.parent if self.parent is not None else self
 
     def lookup(self, module: int, temp_c: float) -> T.TimingParams:
         """Conservative selection: smallest profiled bin >= temp; above

@@ -1,4 +1,5 @@
-"""Guardband semantics shared by the profiler and the controller.
+"""Guardband semantics shared by the profiler, the controller, and the
+fleet recalibration service.
 
 The paper's procedure (Sec. 5.1): the *safe* operating point is the
 maximum error-free point minus one sweep step (8 ms for the refresh
@@ -6,6 +7,19 @@ interval, one timing step for timing parameters).  The reliability
 invariant (Sec. 4): the charge at the chosen operating point must never
 be below the worst-case-cell-at-85C reference level — AL-DRAM only
 gives up the slack *above* the manufacturer's own worst case.
+
+The ONLINE half (`tighten_rows` / `relax_rows`, consumed by
+`repro.fleet.recal.FleetEngine`): a deployed table is only correct for
+the cell population it was profiled on, and FLY-DRAM-style aging/VRT
+drift moves that population.  When ECC observes (or scrub predicts)
+errors under a deployed row, `tighten_rows` steps the row back toward
+the JEDEC anchor — one profiling-grid step per call, the same
+granularity the offline guardband is defined in — until the zero-error
+invariant is RESTORED for the drifted population (the caller re-probes
+margins after every step; tightening without re-verifying is not a
+guardband).  `relax_rows` is the symmetric clean-streak move back
+toward the profiled floor, and must likewise only be deployed after a
+margin probe confirms the relaxed row is still error-free.
 """
 
 from __future__ import annotations
@@ -37,13 +51,36 @@ def reference_margin(constants: ChargeConstants,
 
 
 def design_quantile(constants: ChargeConstants,
-                    std: T.TimingParams = T.DDR3_1600) -> float:
+                    std: T.TimingParams = T.DDR3_1600,
+                    hi: float = 8.0) -> float:
     """The implied JEDEC design point: the largest compound-sigma
     worst-case cell that still passes standard timings at 85C.  The
     manufacturer guarantee AL-DRAM preserves is 'cells up to this
     quantile are safe'; it must comfortably exceed the realised
-    population (every sampled cell passes — tested separately)."""
-    lo, hi = 0.0, 8.0
+    population quantile (`variation.compound_quantile(...).max()` —
+    tested in tests/test_guardband.py).
+
+    The bisection assumes `reference_margin` is monotone decreasing in
+    `quantile` with a sign change inside [0, hi]; the bracket is
+    asserted at entry, because silently returning the `lo` endpoint of
+    an unbracketed search would report a 0-sigma (or hi-sigma) design
+    point as if it were measured.
+    """
+    m_lo = reference_margin(constants, std, quantile=0.0)
+    if m_lo < 0:
+        raise ValueError(
+            f"design_quantile bracket broken: the MEDIAN worst-case "
+            f"cell already fails standard timings at 85C "
+            f"(margin {m_lo:.4f} < 0 at quantile 0) — these charge "
+            f"constants violate the JEDEC guarantee outright")
+    m_hi = reference_margin(constants, std, quantile=hi)
+    if m_hi >= 0:
+        raise ValueError(
+            f"design_quantile bracket broken: a {hi:.1f}-sigma compound "
+            f"worst-case cell still passes standard timings at 85C "
+            f"(margin {m_hi:.4f} >= 0) — raise `hi`; returning the "
+            f"endpoint would understate the design point")
+    lo = 0.0
     for _ in range(24):
         mid = (lo + hi) / 2
         if reference_margin(constants, std, quantile=mid) >= 0:
@@ -51,3 +88,78 @@ def design_quantile(constants: ChargeConstants,
         else:
             hi = mid
     return lo
+
+
+# ---------------------------------------------------------------------------
+# Online (fleet) guardband moves.  Rows use the stacked 6-column layout
+# of `timing.TimingParams.as_row`: (trcd, tras, twr, trp, trefi, tcl).
+# ---------------------------------------------------------------------------
+
+def tighten_rows(rows: np.ndarray, mask: np.ndarray | None = None,
+                 std: T.TimingParams = T.DDR3_1600,
+                 step_ns: float = T.TIMING_STEP_NS,
+                 step_ms: float = T.REFRESH_STEP_MS
+                 ) -> tuple[np.ndarray, np.ndarray]:
+    """One error-driven guardband step TOWARD the JEDEC anchor.
+
+    rows: [..., 6] deployed timing rows; mask: [...] bool of the rows
+    ECC implicated (None = all).  Each masked row's four timing
+    parameters step UP by one profiling-grid step (clamped at the
+    standard values) and its refresh interval steps DOWN by one
+    refresh-grid step (clamped at the standard tREFI) — both knobs,
+    because drift can erode either the access margin (slow sensing)
+    or the retention margin (VRT), and the controller cannot tell
+    which from an ECC event alone.
+
+    Returns (new rows, at_jedec [...] bool).  `at_jedec` marks rows
+    that were ALREADY fully at the standard anchor before this call —
+    a failing row that can no longer be tightened must be escalated to
+    a full re-profiling campaign (or the module retired): the JEDEC
+    anchor is the end of the online guardband's authority.
+
+    The zero-error invariant is NOT restored by this function alone:
+    the caller must re-probe the drifted population's margins under
+    the new rows and keep stepping until no margin is negative.
+    """
+    rows = np.asarray(rows, np.float32)
+    std_row = std.as_row()
+    if mask is None:
+        mask = np.ones(rows.shape[:-1], bool)
+    at_jedec = mask & np.all(rows[..., :5] == std_row[:5], axis=-1)
+    out = rows.copy()
+    m = mask[..., None]
+    out[..., :4] = np.where(m, np.minimum(rows[..., :4] + step_ns,
+                                          std_row[:4]), rows[..., :4])
+    out[..., 4] = np.where(mask, np.maximum(rows[..., 4] - step_ms,
+                                            std_row[4]), rows[..., 4])
+    return out, at_jedec
+
+
+def relax_rows(rows: np.ndarray, floor_rows: np.ndarray,
+               mask: np.ndarray | None = None,
+               step_ns: float = T.TIMING_STEP_NS,
+               step_ms: float = T.REFRESH_STEP_MS) -> np.ndarray:
+    """One clean-streak guardband step back TOWARD the profiled floor.
+
+    The symmetric move to `tighten_rows`: after enough error-free
+    epochs the controller reclaims the latency an earlier tighten gave
+    up — timing parameters step DOWN (clamped at `floor_rows`, the
+    last full profile's choices) and the refresh interval steps back
+    UP (same clamp).  A relaxed row must NOT be deployed until a
+    margin probe of the CURRENT (drifted) population confirms it is
+    still error-free: relaxing on a clean streak alone would re-break
+    the zero-error invariant the tighten just restored.
+    """
+    rows = np.asarray(rows, np.float32)
+    floor_rows = np.asarray(floor_rows, np.float32)
+    if mask is None:
+        mask = np.ones(rows.shape[:-1], bool)
+    out = rows.copy()
+    m = mask[..., None]
+    out[..., :4] = np.where(m, np.maximum(rows[..., :4] - step_ns,
+                                          floor_rows[..., :4]),
+                            rows[..., :4])
+    out[..., 4] = np.where(mask, np.minimum(rows[..., 4] + step_ms,
+                                            floor_rows[..., 4]),
+                           rows[..., 4])
+    return out

@@ -25,6 +25,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.charge import CellParams
 
@@ -32,6 +33,14 @@ N_MODULES = 115
 N_CHIPS = 8
 N_BANKS = 8
 N_TAIL_CELLS = 24      # tail cells sampled per (module, chip, bank)
+
+# Weak direction of every `CellParams` field (order matches the stacked
+# column layout): +1 if larger is weaker (tau_r, tau_p, tau_w), -1 if
+# smaller is weaker (xfer, tau_ret85).  Shared by the sampler, the
+# worst-case reference, and the fleet drift model
+# (`repro.fleet.drift`), so "aging pushes cells toward the weak side"
+# is defined in exactly one place.
+FIELD_WEAK_SIGNS = np.array([+1.0, -1.0, -1.0, +1.0, +1.0], np.float32)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -104,6 +113,16 @@ class Population(NamedTuple):
     def params(self) -> CellParams:
         return CellParams.unstack(self.cells)
 
+    def with_cells(self, cells) -> "Population":
+        """Same hierarchy, new per-cell parameters — the hook the fleet
+        drift model (`repro.fleet.drift`) uses to feed *aged* cells
+        back through the unchanged profile->table->replay pipeline.
+        The shape contract of `cells` is preserved and asserted."""
+        cells = jnp.asarray(cells)
+        assert cells.shape == self.cells.shape, \
+            (cells.shape, self.cells.shape)
+        return Population(cells=cells.astype(self.cells.dtype))
+
 
 def _hier_field(key, cfg: VariationConfig, mu: float, weak_sign: float,
                 k_field: float,
@@ -143,6 +162,51 @@ def sample_population(key: jax.Array,
 
     cells = jnp.stack([tau_r, xfer, tau_ret, tau_p, tau_w], axis=-1)
     return Population(cells=cells.astype(jnp.float32))
+
+
+def field_medians(cfg: VariationConfig = VariationConfig()) -> np.ndarray:
+    """[5] population medians in the stacked `CellParams` column order."""
+    return np.array([cfg.mu_tau_r, cfg.mu_xfer, cfg.mu_tau_ret85,
+                     cfg.mu_tau_p, cfg.mu_tau_w], np.float32)
+
+
+def field_sigmas(cfg: VariationConfig = VariationConfig()) -> np.ndarray:
+    """[5] total compound ln-sigmas per field: the shared hierarchical
+    spread (module + chip + bank + cell tail) scaled by each field's
+    `k_*` factor — the same compound the `worst_case_reference` design
+    cell is `quantile` sigmas out on."""
+    s_tot = cfg.s_module + cfg.s_chip + cfg.s_bank + cfg.s_cell
+    return s_tot * np.array([cfg.k_tau_r, cfg.k_xfer, cfg.k_tau_ret,
+                             cfg.k_tau_p, cfg.k_tau_w], np.float32)
+
+
+def compound_quantile(cells, cfg: VariationConfig = VariationConfig()
+                      ) -> np.ndarray:
+    """Per-cell REALISED compound quantile: the largest q such that the
+    `worst_case_reference(quantile=q)` design cell is at least as weak
+    as this cell on EVERY field simultaneously (min over the per-field
+    weak-signed z-scores).  `compound_quantile(pop.cells, cfg).max()`
+    is therefore the population's realised design point — the quantity
+    `guardband.design_quantile` must comfortably exceed for the JEDEC
+    guarantee to cover every sampled (or drifted) cell."""
+    cells = np.asarray(cells, np.float64)
+    z = (FIELD_WEAK_SIGNS * np.log(cells / field_medians(cfg))
+         / field_sigmas(cfg))
+    return z.min(-1)
+
+
+def weakness_score(cells, cfg: VariationConfig = VariationConfig()
+                   ) -> np.ndarray:
+    """Per-cell scalar weakness in [0, inf): mean over fields of the
+    positive part of the weak-signed z-score.  0 = at or better than
+    the population median on every field; larger = deeper in the weak
+    tail.  The fleet drift model uses this to make tail cells age
+    fastest (FLY-DRAM: the guardband-setting tail is exactly the part
+    of the population that moves)."""
+    cells = np.asarray(cells, np.float64)
+    z = (FIELD_WEAK_SIGNS * np.log(cells / field_medians(cfg))
+         / field_sigmas(cfg))
+    return np.clip(z, 0.0, None).mean(-1).astype(np.float32)
 
 
 def worst_case_reference(cfg: VariationConfig = VariationConfig(),

@@ -1,0 +1,191 @@
+"""ECC-style error observation for the fleet recalibration loop.
+
+The serving fleet cannot see cell margins — it sees ECC events: a
+replayed request that lands on a word containing cells whose DRIFTED
+margin went negative under the DEPLOYED timing row raises a correctable
+(one failing cell, SECDED corrects) or uncorrectable (two or more
+failing cells in one word) event.  This module supplies both halves of
+that observation:
+
+  * `ErrorMonitor.probe` — the margin side: ONE chunked `MarginEngine`
+    dispatch pairing every module's drifted cells with ITS deployed
+    per-(module, rank-bank) rows at the epoch temperature (the same
+    module-diagonal + bank-diagonal extraction as
+    `aldram.ALDRAMController.verify`), reduced to the per-(module,
+    bank) count of failing tail cells and the worst margin.  This is
+    simultaneously the fleet's PATROL SCRUB: a scrub pass reads every
+    row, so each failing cell it finds is one observed (and corrected)
+    correctable event.
+  * `ecc_events` — the traffic side: expected correctable /
+    uncorrectable event counts for the served accesses given the
+    failing-cell counts, under a words-as-Bernoulli-coverage model.
+    The uncorrectable probability is gated EXACTLY to zero for fewer
+    than two failing cells (`np.where` on the integer count, not float
+    arithmetic) so "zero uncorrectable events" is a deterministic
+    outcome the error-driven policy can be held to, not a tolerance.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.sweep import MarginEngine
+from repro.core.variation import Population
+
+
+@dataclasses.dataclass(frozen=True)
+class ECCConfig:
+    """SECDED-word event model + penalty prices.
+
+    word_coverage    : probability that one served access's ECC word
+                       contains a GIVEN failing tail cell of its
+                       (module, bank) — the tail cells stand in for the
+                       weak end of the bank, so coverage is well above
+                       a physical cell/word ratio.
+    accesses_per_epoch : served column accesses per (module, bank) per
+                       epoch that the event expectation is priced over
+                       (the replayed trace is a sample of this traffic).
+    corr_penalty_ns  : latency of one correctable event (ECC pipeline
+                       correction + scrub write-back).
+    unc_penalty_ns   : cost of one uncorrectable event charged to the
+                       latency account (machine-check, page retire,
+                       recovery) — the reason the effective-latency
+                       frontier punishes a stale table so hard.
+    """
+
+    word_coverage: float = 0.05
+    accesses_per_epoch: float = 1.0e5
+    corr_penalty_ns: float = 2.0e3
+    unc_penalty_ns: float = 5.0e6
+
+
+def ecc_events(fail_counts: np.ndarray, cfg: ECCConfig = ECCConfig(),
+               accesses: np.ndarray | float | None = None
+               ) -> tuple[np.ndarray, np.ndarray]:
+    """Expected (correctable, uncorrectable) event counts per entry.
+
+    fail_counts: integer [...] failing-cell counts f per (module,
+    bank).  Each access's word covers a given failing cell with
+    probability c, independently, so per access
+
+        p_corr = f * c * (1 - c)^(f - 1)        (exactly one covered)
+        p_unc  = 1 - (1 - c)^f - p_corr         (two or more covered)
+
+    `p_unc` is forced to exactly 0.0 where f < 2: SECDED corrects a
+    single failing cell with certainty, and the gate is on the integer
+    count so float residue from the closed form can never report a
+    phantom uncorrectable event (the error-driven policy's zero-
+    uncorrectable guarantee in `benchmarks.fleet_bench` greps this).
+    """
+    f = np.asarray(fail_counts)
+    assert np.issubdtype(f.dtype, np.integer), f.dtype
+    if accesses is None:
+        accesses = cfg.accesses_per_epoch
+    a = np.broadcast_to(np.asarray(accesses, np.float64), f.shape)
+    c = float(cfg.word_coverage)
+    ff = f.astype(np.float64)
+    p_corr = ff * c * (1.0 - c) ** np.maximum(ff - 1.0, 0.0)
+    p_unc = np.where(f >= 2,
+                     np.clip(1.0 - (1.0 - c) ** ff - p_corr, 0.0, None),
+                     0.0)
+    return a * p_corr, a * p_unc
+
+
+def event_penalty_ns(corr: np.ndarray, unc: np.ndarray,
+                     cfg: ECCConfig = ECCConfig(),
+                     accesses: np.ndarray | float | None = None
+                     ) -> np.ndarray:
+    """Per-access latency penalty (ns) of the given event counts —
+    the ECC term of the fleet's effective-latency frontier."""
+    if accesses is None:
+        accesses = cfg.accesses_per_epoch
+    a = np.asarray(accesses, np.float64)
+    return (np.asarray(corr) * cfg.corr_penalty_ns
+            + np.asarray(unc) * cfg.unc_penalty_ns) / a
+
+
+@dataclasses.dataclass
+class ProbeResult:
+    """One scrub pass: per-(module, rank-bank) failing-cell counts and
+    worst margins under the deployed rows at the probe temperature."""
+
+    fail_counts: np.ndarray      # [modules, banks] int64
+    worst_margin: np.ndarray     # [modules, banks] float32
+
+    @property
+    def clean(self) -> bool:
+        return bool((self.fail_counts == 0).all())
+
+    def fail_mask(self) -> np.ndarray:
+        return self.fail_counts > 0
+
+
+@dataclasses.dataclass
+class ErrorMonitor:
+    """Margin-grid scrub of a (drifted) population under deployed rows.
+
+    `engine.dispatch_count` increments once per probe chunk; at the
+    fleet-simulation scales (tens of modules) a probe is ONE dispatch.
+    """
+
+    engine: MarginEngine = dataclasses.field(default_factory=MarginEngine)
+    max_grid_elems: int = 8_000_000
+
+    def probe(self, pop: Population, rows: np.ndarray,
+              temp_c: float) -> ProbeResult:
+        """Pair every module's cells with ITS deployed per-bank rows.
+
+        pop:  the population to scrub (typically drifted);
+        rows: [modules, banks, 6] deployed timing rows — columns :4
+              are the timing parameters, column 4 the per-(module,
+              bank) refresh interval in ms (applied to BOTH the read
+              and the write test: the deployed tREFI is one register);
+        temp_c: probe temperature (the epoch's operating temperature —
+              margins are evaluated where the fleet actually serves).
+
+        The dense margin grid pairs every cell with every row, so only
+        its module diagonal (then the bank pairing within it) is
+        useful; large fleets are chunked into module groups that keep
+        each dispatch under `max_grid_elems`, exactly like
+        `ALDRAMController.verify`.
+        """
+        rows = np.asarray(rows, np.float32)
+        m, ch, bk, kc = pop.cells.shape[:4]
+        assert rows.shape == (m, bk, 6), (rows.shape, (m, bk, 6))
+        cpm = ch * bk * kc
+        g = max(1, min(m, int((self.max_grid_elems / (cpm * bk)) ** 0.5)))
+
+        cells = np.asarray(pop.flat_cells()).reshape(m, cpm, -1)
+        fail = np.empty((m, bk), np.int64)
+        worst = np.empty((m, bk), np.float32)
+        bj = np.arange(bk)
+        for lo in range(0, m, g):
+            sl = slice(lo, min(lo + g, m))
+            n = sl.stop - sl.start
+            combos = rows[sl, :, :5].reshape(n * bk, 5).copy()
+            # the deployed per-(module, bank) tREFI rides the per-cell
+            # override columns (cell layout is (ch, bk, kc)-major)
+            trefi = np.broadcast_to(
+                rows[sl, None, :, None, 4],
+                (n, ch, bk, kc)).reshape(-1).astype(np.float32)
+            read_m, write_m = self.engine.margins(
+                cells[sl].reshape(n * cpm, -1), combos,
+                temp_c=float(temp_c),
+                trefi_read=trefi, trefi_write=trefi)
+            mi = np.arange(n)
+            mm = np.minimum(read_m, write_m).reshape(
+                n, ch, bk, kc, n, bk)
+            mm = mm[mi, :, :, :, mi]             # [n, ch, bk, kc, bk]
+            # pair each cell's rank-bank with its combo's bank; the
+            # advanced indices (axes 2 and 4) land in front — put the
+            # module axis back first
+            mb = mm[:, :, bj, :, bj].transpose(1, 0, 2, 3)
+            fail[sl] = (mb < 0.0).sum(axis=(2, 3))
+            worst[sl] = mb.min(axis=(2, 3))
+        return ProbeResult(fail_counts=fail, worst_margin=worst)
+
+
+__all__ = ["ECCConfig", "ErrorMonitor", "ProbeResult", "ecc_events",
+           "event_penalty_ns"]

@@ -1,0 +1,496 @@
+"""The fleet recalibration service: drift-aware closed-loop serving.
+
+AL-DRAM as the paper evaluates it is one-shot: profile a module,
+deploy its table, trust the 33-day stress test.  FLY-DRAM-style drift
+(`repro.fleet.drift`) breaks that trust — the tail cells that set the
+guardband are exactly the ones that move — so a deployed fleet must
+close the loop.  `FleetEngine` simulates that loop over a fleet-month,
+one serving EPOCH at a time:
+
+  1. drift advances at the epoch's ambient temperature
+     (`thermal.ambient_at_host` over a `ThermalScenario`),
+  2. heartbeat fault injection (`runtime.fault.HeartbeatMonitor`):
+     failed modules stop beating, get declared dead, and drop out of
+     serving and recalibration,
+  3. the deployed per-(module, rank-bank) rows for the epoch's
+     temperature bin are scrubbed against the DRIFTED population
+     (`monitor.ErrorMonitor.probe`),
+  4. the policy reacts:
+       static   — never (deploy-and-forget: the paper's one-shot flow),
+       periodic — a full `ALDRAMController.profile` of the drifted
+                  population every `recal_period` epochs; modules whose
+                  sampled recalibration time trips the
+                  `runtime.straggler.StragglerDetector` fall back to
+                  JEDEC rows until their install lands,
+       error    — error-driven: `guardband.tighten_rows` on the
+                  implicated rows, re-probing after EVERY step until
+                  the zero-error invariant is restored (escalating to a
+                  full re-profile, then to JEDEC fallback, if
+                  tightening runs out of authority), and
+                  `guardband.relax_rows` back toward the profiled floor
+                  after a clean streak — deployed only if a fresh probe
+                  confirms the relaxed rows are still error-free.
+     Every deployment goes through `TimingTable.patch`, so the served
+     table carries its full version lineage,
+  5. the epoch's traffic is served: ONE `SimEngine` replay dispatch of
+     the workload traces against [JEDEC + one per-module row-set]
+     (the per-bank [1 + modules, banks, 6] timing axis), and the ECC
+     event expectation (`monitor.ecc_events`) is charged against the
+     rows that actually served.
+
+The headline artifact is the errors-avoided vs latency-given-back
+frontier across the three policies (`frontier`, plotted by
+`benchmarks.fleet_bench`): static-forever keeps all of the profiled
+latency but accumulates uncorrectable events; error-driven gives back
+exactly the guardband steps drift demanded, serves ZERO uncorrectable
+events (scrub-then-react runs before traffic, and `ecc_events` gates
+uncorrectable probability to exact zero below two failing cells), and
+dominates on EFFECTIVE latency once events are priced.
+
+Dispatch accounting: serving is exactly ONE replay dispatch per epoch
+(`SimEngine.dispatch_count`, pinned by the CI smoke on
+`benchmarks.fleet_bench`); probes and re-profiles ride the
+`MarginEngine` and are reported separately.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import guardband
+from repro.core import timing as T
+from repro.core.aldram import DEFAULT_TEMP_BINS, ALDRAMController, TimingTable
+from repro.core.dram_sim import Trace
+from repro.core.perf_model import trace_batch
+from repro.core.profiler import Profiler
+from repro.core.sim_engine import SimEngine, SimSpec
+from repro.core.thermal import ThermalScenario, ambient_at_host
+from repro.core.variation import Population, VariationConfig
+from repro.fleet.drift import DriftConfig, DriftModel
+from repro.fleet.monitor import (ECCConfig, ErrorMonitor, ecc_events,
+                                 event_penalty_ns)
+from repro.runtime.fault import HeartbeatMonitor
+from repro.runtime.straggler import ClusterModel, StragglerDetector
+
+POLICIES = ("static", "periodic", "error")
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetSpec:
+    """One fleet-month simulation campaign."""
+
+    policy: str = "error"                    # static | periodic | error
+    n_epochs: int = 30                       # serving epochs (days)
+    days_per_epoch: float = 1.0
+    temp_bins: tuple[float, ...] = DEFAULT_TEMP_BINS
+    # epoch ambient trajectory; None = constant `base_temp_c`.  The
+    # scenario clock advances `ambient_step_ns` per epoch, so trace-
+    # timescale scenarios (e.g. thermal.cooling_failure) compress onto
+    # the fleet-month axis.
+    ambient: ThermalScenario | None = None
+    ambient_step_ns: float = 1.0e4
+    base_temp_c: float = 48.0
+    # serving traffic: rows of `perf_model.trace_batch` replayed each
+    # epoch (one synthesis dispatch for the whole month)
+    workload_rows: tuple[int, ...] = (0, 17, 19)
+    n_requests: int = 1024
+    seed: int = 0
+    # policy knobs
+    recal_period: int = 7                    # periodic: epochs per recal
+    relax_after: int = 4                     # error: clean epochs before relax
+    max_tighten_steps: int = 4               # error: steps before escalation
+    # fault injection
+    module_failures: tuple[tuple[int, int], ...] = ()   # (epoch, module)
+    heartbeat_budget: float = 2.5            # missed beats before dead
+
+    def __post_init__(self):
+        assert self.policy in POLICIES, self.policy
+
+
+@dataclasses.dataclass
+class FleetResult:
+    """Per-epoch telemetry of one policy's fleet-month (arrays [E])."""
+
+    spec: FleetSpec
+    temp_c: np.ndarray
+    lat_jedec_ns: np.ndarray       # served mean latency, JEDEC baseline
+    lat_fleet_ns: np.ndarray       # served mean latency, deployed rows
+    eff_lat_ns: np.ndarray         # + ECC event penalties per access
+    corr_events: np.ndarray        # served correctable events
+    unc_events: np.ndarray         # served uncorrectable events
+    scrub_corr: np.ndarray         # scrub-detected (and corrected) cells
+    tighten_steps: np.ndarray
+    version: np.ndarray            # deployed TimingTable.version
+    dead_modules: np.ndarray       # detected-dead count
+    straggler_fallbacks: np.ndarray
+    jedec_fallbacks: np.ndarray
+    recal_epochs: tuple[int, ...]
+    relax_epochs: tuple[int, ...]
+    relax_rejected: tuple[int, ...]
+    replay_dispatches: int
+    margin_dispatches: int
+    table: TimingTable
+
+    def summary(self) -> dict:
+        lj, lf, le = self.lat_jedec_ns, self.lat_fleet_ns, self.eff_lat_ns
+        total_events = float(self.corr_events.sum() + self.unc_events.sum()
+                             + self.scrub_corr.sum())
+        return {
+            "policy": self.spec.policy,
+            "epochs": int(self.spec.n_epochs),
+            "raw_reduction": float((1.0 - lf / lj).mean()),
+            "eff_reduction": float((1.0 - le / lj).mean()),
+            "total_corr": float(self.corr_events.sum()),
+            "total_unc": float(self.unc_events.sum()),
+            "total_scrub_corr": float(self.scrub_corr.sum()),
+            "total_events": total_events,
+            "final_version": int(self.version[-1]),
+            "n_recals": len(self.recal_epochs),
+            "n_relaxes": len(self.relax_epochs),
+            "n_relax_rejected": len(self.relax_rejected),
+            "max_tighten_steps": int(self.tighten_steps.max(initial=0)),
+            "dead_modules": int(self.dead_modules[-1]),
+            "straggler_fallbacks": int(self.straggler_fallbacks.sum()),
+            "jedec_fallbacks": int(self.jedec_fallbacks.sum()),
+            "replay_dispatches": self.replay_dispatches,
+            "replay_per_epoch": self.replay_dispatches / self.spec.n_epochs,
+            "margin_dispatches": self.margin_dispatches,
+        }
+
+
+class FleetEngine:
+    """Closed-loop recalibration service over one simulated fleet.
+
+    Construct one engine per (population, spec) and call `run()` once;
+    policies are compared by running one engine per policy with the
+    SAME seed — the drift trajectory is a function of (population,
+    drift config, seed, epoch temperatures) only, so every policy
+    faces the identical aging fleet.
+    """
+
+    def __init__(self, pop: Population, spec: FleetSpec = FleetSpec(),
+                 drift_cfg: DriftConfig = DriftConfig(),
+                 ecc: ECCConfig = ECCConfig(),
+                 var_cfg: VariationConfig = VariationConfig(),
+                 profiler: Profiler | None = None,
+                 sim: SimEngine | None = None):
+        self.pop = pop
+        self.spec = spec
+        self.ecc = ecc
+        self.controller = ALDRAMController(profiler,
+                                           temp_bins=spec.temp_bins,
+                                           per_bank=True)
+        self.monitor = ErrorMonitor(engine=self.controller.engine)
+        self.sim = sim or SimEngine()
+        self.drift = DriftModel(pop, drift_cfg, var_cfg, seed=spec.seed)
+        self._jrow = T.DDR3_1600.as_row()
+
+    # ------------------------------------------------------------ deploy
+    def _rows_from_table(self, tbl: TimingTable) -> np.ndarray:
+        """[modules, bins, banks, 6] deployed row state from a profiled
+        per-bank table.  The refresh column carries min(read, write)
+        safe tREFI — one deployed register per module, and the shorter
+        interval only adds margin over the per-op profile — and the
+        stack is forced bin-monotone (the `safe_stack` convention:
+        moving rows toward JEDEC/standard only adds margin)."""
+        m, nb = tbl.params.shape[:2]
+        banks = tbl.n_banks
+        rows = np.empty((m, nb, banks, 6), np.float32)
+        rows[..., :4] = tbl.params.astype(np.float32)
+        trefi = np.minimum(tbl.safe_trefi_read,
+                           tbl.safe_trefi_write).astype(np.float32)
+        rows[..., 4] = trefi[:, None, None]
+        rows[..., 5] = T.DDR3_1600.tcl
+        return self._monotone(rows)
+
+    @staticmethod
+    def _monotone(rows: np.ndarray) -> np.ndarray:
+        """Bin-monotone in place: a hotter bin never carries a smaller
+        timing parameter (or a longer refresh interval) than a cooler
+        one — tightening a bin therefore propagates to every hotter
+        bin, never silently relaxes one."""
+        rows[..., :4] = np.maximum.accumulate(rows[..., :4], axis=1)
+        rows[..., 4] = np.minimum.accumulate(rows[..., 4], axis=1)
+        return rows
+
+    def _install(self, table: TimingTable,
+                 rows_bins: np.ndarray) -> TimingTable:
+        """Deploy `rows_bins` as a new table VERSION via
+        `TimingTable.patch`.  The module-envelope view is updated
+        conservatively (elementwise max over the bank rows — always
+        >= every bank row, though not necessarily a profiled grid
+        point), and the scalar per-module safe-tREFI fields track the
+        shortest deployed interval."""
+        trefi_min = rows_bins[..., 4].min(axis=(1, 2))
+        return table.patch(
+            params=rows_bins[..., :4].copy(),
+            params_module=rows_bins[..., :4].max(axis=2),
+            safe_trefi_read=np.minimum(table.safe_trefi_read,
+                                       trefi_min).astype(np.float32),
+            safe_trefi_write=np.minimum(table.safe_trefi_write,
+                                        trefi_min).astype(np.float32))
+
+    def _full_recal(self, table: TimingTable, dpop: Population
+                    ) -> tuple[TimingTable, np.ndarray, np.ndarray]:
+        """Re-profile the DRIFTED population end to end (one refresh
+        campaign + one fused timing campaign) and deploy it as a new
+        version.  Returns (table, rows_bins, floor_bins) — the fresh
+        profile is also the new relaxation floor."""
+        fresh = self.controller.profile(dpop)
+        rows_bins = self._rows_from_table(fresh)
+        table = table.patch(params=fresh.params,
+                            params_module=fresh.params_module,
+                            safe_trefi_read=fresh.safe_trefi_read,
+                            safe_trefi_write=fresh.safe_trefi_write)
+        return table, rows_bins, rows_bins.copy()
+
+    # ---------------------------------------------------------- stragglers
+    @staticmethod
+    def _straggler_detector(rng: np.random.Generator, cluster: ClusterModel,
+                            warmup: int = 64) -> StragglerDetector:
+        lat, load, truth = cluster.sample(rng, warmup)
+        det = StragglerDetector(cluster.n_nodes,
+                                static_timeout_ms=float(
+                                    lat[~truth].max() * 1.2))
+        for t in range(warmup):
+            for m in range(cluster.n_nodes):
+                if not truth[t, m]:
+                    det.observe(m, load[t, m], lat[t, m])
+        det.fit()
+        return det
+
+    @staticmethod
+    def _slow_recals(rng: np.random.Generator, cluster: ClusterModel,
+                     det: StragglerDetector) -> np.ndarray:
+        """[modules] bool: sampled recalibration times that trip the
+        adaptive straggler threshold — those modules' installs miss
+        the epoch and they serve JEDEC rows until the next one."""
+        lat, load, _ = cluster.sample(rng, 1)
+        return np.array([det.is_straggler(m, load[0, m], lat[0, m])
+                         for m in range(cluster.n_nodes)])
+
+    # --------------------------------------------------------------- run
+    def run(self) -> FleetResult:
+        spec = self.spec
+        bins = np.asarray(spec.temp_bins, np.float64)
+        nb = len(spec.temp_bins)
+        m = self.pop.n_modules
+        banks = self.pop.n_banks
+
+        table = self.controller.profile(self.pop)
+        rows_bins = self._rows_from_table(table)
+        floor_bins = rows_bins.copy()
+        state = self.drift.init_state()
+
+        hb = HeartbeatMonitor(m, interval_ms=100.0,
+                              static_miss_budget=spec.heartbeat_budget)
+        failures: dict[int, list[int]] = {}
+        for ep, mod in spec.module_failures:
+            failures.setdefault(int(ep), []).append(int(mod))
+        failed = np.zeros(m, bool)
+
+        rng = np.random.default_rng(spec.seed + 101)
+        cluster = ClusterModel(n_nodes=m)
+        det = self._straggler_detector(rng, cluster)
+
+        # one synthesis dispatch serves the whole fleet-month
+        tb = trace_batch(spec.n_requests, spec.seed, banks)
+        sel = list(spec.workload_rows)
+        traces = tuple(Trace(*(np.asarray(f)[i] for f in tb))
+                       for i in sel)
+
+        e_ = spec.n_epochs
+        rec = {k: np.zeros(e_) for k in
+               ("temp_c", "lat_jedec_ns", "lat_fleet_ns", "eff_lat_ns",
+                "corr_events", "unc_events", "scrub_corr")}
+        rec_i = {k: np.zeros(e_, np.int64) for k in
+                 ("tighten_steps", "version", "dead_modules",
+                  "straggler_fallbacks", "jedec_fallbacks")}
+        recal_epochs: list[int] = []
+        relax_epochs: list[int] = []
+        relax_rejected: list[int] = []
+        clean_streak = 0
+        d0 = self.sim.dispatch_count
+        m0 = self.monitor.engine.dispatch_count
+
+        for e in range(e_):
+            temp = (spec.base_temp_c if spec.ambient is None else
+                    ambient_at_host(spec.ambient, e * spec.ambient_step_ns))
+            state = self.drift.advance(state, spec.days_per_epoch,
+                                       temp_c=temp)
+            dpop = self.drift.population(state)
+
+            # -------- heartbeats: failed modules stop beating and are
+            # declared dead once the adaptive miss budget trips
+            now = e * hb.interval_ms
+            for mod in failures.get(e, []):
+                failed[mod] = True
+            for mod in range(m):
+                if not failed[mod]:
+                    hb.beat(mod, now)
+            dead = np.array([hb.dead(mod, now) for mod in range(m)])
+            alive = ~dead
+
+            # -------- deployed rows for this epoch's temperature bin
+            bi = int(np.searchsorted(bins, temp, side="left"))
+            over = bi >= nb
+            rows_e = (np.broadcast_to(self._jrow, (m, banks, 6)).copy()
+                      if over else rows_bins[:, bi].copy())
+            probe = self.monitor.probe(dpop, rows_e, temp)
+            observed = probe            # pre-reaction scrub observation
+            tighten = 0
+            straggler_fb = 0
+            jedec_fb = 0
+
+            # -------- policy reaction (before traffic is served)
+            if (spec.policy == "periodic" and e > 0
+                    and e % spec.recal_period == 0):
+                table, rows_bins, floor_bins = self._full_recal(table, dpop)
+                recal_epochs.append(e)
+                slow = self._slow_recals(rng, cluster, det) & alive
+                rows_e = (rows_bins[:, bi].copy() if not over
+                          else rows_e)
+                if slow.any():
+                    rows_e[slow] = self._jrow
+                    straggler_fb = int(slow.sum())
+                probe = self.monitor.probe(dpop, rows_e, temp)
+            elif spec.policy == "error" and not over:
+                fail = probe.fail_mask() & alive[:, None]
+                if fail.any():
+                    clean_streak = 0
+                    while fail.any() and tighten < spec.max_tighten_steps:
+                        new_rows, _ = guardband.tighten_rows(
+                            rows_bins[:, bi], mask=fail)
+                        rows_bins[:, bi] = new_rows
+                        self._monotone(rows_bins)
+                        tighten += 1
+                        rows_e = rows_bins[:, bi].copy()
+                        probe = self.monitor.probe(dpop, rows_e, temp)
+                        fail = probe.fail_mask() & alive[:, None]
+                    if fail.any():
+                        # tightening ran out of authority: escalate to
+                        # a full re-profile of the drifted population
+                        table, rows_bins, floor_bins = self._full_recal(
+                            table, dpop)
+                        recal_epochs.append(e)
+                        slow = self._slow_recals(rng, cluster, det) & alive
+                        rows_e = rows_bins[:, bi].copy()
+                        if slow.any():
+                            rows_e[slow] = self._jrow
+                            straggler_fb = int(slow.sum())
+                        probe = self.monitor.probe(dpop, rows_e, temp)
+                        fail = probe.fail_mask() & alive[:, None]
+                        if fail.any():
+                            # beyond even a fresh profile: the module
+                            # retires to JEDEC rows for this epoch
+                            bad = fail.any(axis=1)
+                            rows_e[bad] = self._jrow
+                            jedec_fb = int(bad.sum())
+                            probe = self.monitor.probe(dpop, rows_e, temp)
+                    else:
+                        table = self._install(table, rows_bins)
+                else:
+                    clean_streak += 1
+                    at_floor = bool(
+                        (rows_bins[:, bi] == floor_bins[:, bi]).all())
+                    if clean_streak >= spec.relax_after and not at_floor:
+                        cand = guardband.relax_rows(rows_bins[:, bi],
+                                                    floor_bins[:, bi])
+                        p2 = self.monitor.probe(dpop, cand, temp)
+                        clean_streak = 0
+                        if p2.clean:
+                            # probe-confirmed: deploy the relaxed rows
+                            rows_bins[:, bi] = cand
+                            rows_e = cand.copy()
+                            probe = p2
+                            table = self._install(table, rows_bins)
+                            relax_epochs.append(e)
+                        else:
+                            # drift already consumed the reclaimed
+                            # margin — the relaxation never deploys
+                            relax_rejected.append(e)
+
+            # -------- serve: ONE replay dispatch (JEDEC + per-module
+            # rows share the per-bank timing axis)
+            timings = np.empty((1 + m, banks, 6), np.float32)
+            timings[0] = self._jrow
+            timings[1:] = rows_e
+            res = self.sim.run(SimSpec(traces=traces, timings=timings,
+                                       n_banks=banks))
+            lat = res.mean_latency_ns            # [T, 1, 1 + m]
+            lat_j = float(lat[:, 0, 0].mean())
+            lat_f = float(lat[:, 0, 1:][:, alive].mean())
+
+            # -------- ECC events of the served traffic, charged
+            # against the rows that actually served
+            f_served = np.where(alive[:, None], probe.fail_counts, 0)
+            corr, unc = ecc_events(f_served, self.ecc)
+            pen = event_penalty_ns(corr, unc, self.ecc)
+            # scrub detections are themselves corrected correctable
+            # events — only the error-driven policy actually scrubs
+            # (for the others the probe is simulation observability)
+            scrub = (float((observed.fail_counts * alive[:, None]).sum())
+                     if spec.policy == "error" else 0.0)
+
+            rec["temp_c"][e] = temp
+            rec["lat_jedec_ns"][e] = lat_j
+            rec["lat_fleet_ns"][e] = lat_f
+            rec["eff_lat_ns"][e] = lat_f + float(pen[alive].mean())
+            rec["corr_events"][e] = float(corr[alive].sum())
+            rec["unc_events"][e] = float(unc[alive].sum())
+            rec["scrub_corr"][e] = scrub
+            rec_i["tighten_steps"][e] = tighten
+            rec_i["version"][e] = table.version
+            rec_i["dead_modules"][e] = int(dead.sum())
+            rec_i["straggler_fallbacks"][e] = straggler_fb
+            rec_i["jedec_fallbacks"][e] = jedec_fb
+
+        return FleetResult(
+            spec=spec, **rec, **rec_i,
+            recal_epochs=tuple(recal_epochs),
+            relax_epochs=tuple(relax_epochs),
+            relax_rejected=tuple(relax_rejected),
+            replay_dispatches=self.sim.dispatch_count - d0,
+            margin_dispatches=self.monitor.engine.dispatch_count - m0,
+            table=table)
+
+
+def run_policies(pop: Population, spec: FleetSpec = FleetSpec(),
+                 policies: tuple[str, ...] = POLICIES,
+                 **engine_kw) -> dict[str, FleetResult]:
+    """One fleet-month per policy, identical drift trajectories (same
+    population, same seed, same epoch temperatures)."""
+    return {p: FleetEngine(pop, dataclasses.replace(spec, policy=p),
+                           **engine_kw).run()
+            for p in policies}
+
+
+def frontier(results: dict[str, FleetResult]) -> dict:
+    """The errors-avoided vs latency-given-back frontier.
+
+    Per policy, relative to static-forever: `errors_avoided` is the
+    drop in total ECC events (served + scrub), `latency_given_back`
+    the raw-latency reduction surrendered to guardband steps and
+    JEDEC fallbacks, and `eff_reduction` the reduction AFTER event
+    penalties — the axis on which error-driven recalibration must
+    strictly dominate the static deployment.
+    """
+    assert "static" in results, "frontier is anchored on static-forever"
+    summaries = {p: r.summary() for p, r in results.items()}
+    s0 = summaries["static"]
+    out = {"policies": {}, "summaries": summaries}
+    for p, s in summaries.items():
+        out["policies"][p] = {
+            "errors_avoided": s0["total_events"] - s["total_events"],
+            "latency_given_back": s0["raw_reduction"] - s["raw_reduction"],
+            "raw_reduction": s["raw_reduction"],
+            "eff_reduction": s["eff_reduction"],
+            "total_unc": s["total_unc"],
+        }
+    return out
+
+
+__all__ = ["POLICIES", "FleetSpec", "FleetEngine", "FleetResult",
+           "run_policies", "frontier"]

@@ -33,7 +33,11 @@ class HeartbeatMonitor:
             AdaptiveTable((0.5, 1.0), self.static_miss_budget,
                           quantile=0.999, k_sigma=3.0)
             for _ in range(self.n_nodes)]
-        self.last_beat = np.zeros(self.n_nodes)
+        # NaN = "never beaten": a node that has not reported yet must
+        # not be measured against time 0.0 — a monitor started at
+        # now_ms > budget would otherwise declare every node dead
+        # before its first heartbeat
+        self.last_beat = np.full(self.n_nodes, np.nan)
 
     def observe_gap(self, node: int, gap_beats: float):
         self.tables[node].observe(node, 1.0, gap_beats)
@@ -43,12 +47,14 @@ class HeartbeatMonitor:
             t.fit(min_samples=16)
 
     def dead(self, node: int, now_ms: float) -> bool:
+        if np.isnan(self.last_beat[node]):      # never beaten: exempt
+            return False
         missed = (now_ms - self.last_beat[node]) / self.interval_ms
         return missed > self.tables[node].select(node, 1.0)
 
     def beat(self, node: int, now_ms: float):
-        gap = (now_ms - self.last_beat[node]) / self.interval_ms
-        if self.last_beat[node] > 0:
+        if not np.isnan(self.last_beat[node]):
+            gap = (now_ms - self.last_beat[node]) / self.interval_ms
             self.observe_gap(node, gap)
         self.last_beat[node] = now_ms
 

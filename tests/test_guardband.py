@@ -1,0 +1,126 @@
+"""Guardband semantics: the safe-point construction, the JEDEC design
+point it preserves, and the online tighten/relax moves the fleet
+recalibration service drives."""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import guardband
+from repro.core import timing as T
+from repro.core.calibration import CALIBRATED_CONSTANTS, CALIBRATED_VARIATION
+from repro.core.variation import compound_quantile, sample_population
+
+
+class TestSafeRefresh:
+    def test_one_step_guardband(self):
+        mp = np.array([208.0, 160.0, 64.0])
+        np.testing.assert_allclose(
+            guardband.safe_refresh(mp),
+            mp - T.REFRESH_STEP_MS)
+
+    def test_floor_at_one_step(self):
+        """The safe interval never collapses below one refresh step,
+        even when the max passing point is already at (or under) it."""
+        mp = np.array([T.REFRESH_STEP_MS, T.REFRESH_STEP_MS / 2, 0.0])
+        out = guardband.safe_refresh(mp)
+        assert (out >= T.REFRESH_STEP_MS).all()
+        np.testing.assert_allclose(out, T.REFRESH_STEP_MS)
+
+
+class TestDesignPoint:
+    def test_reference_margin_sign_at_design_point(self):
+        """`design_quantile` returns the sign change of
+        `reference_margin`: non-negative margin just below the design
+        point, negative just above, and the median cell sits well
+        inside the guarantee."""
+        q = guardband.design_quantile(CALIBRATED_CONSTANTS)
+        assert guardband.reference_margin(CALIBRATED_CONSTANTS,
+                                          quantile=q - 1e-3) >= 0.0
+        assert guardband.reference_margin(CALIBRATED_CONSTANTS,
+                                          quantile=q + 1e-3) < 0.0
+        m0 = guardband.reference_margin(CALIBRATED_CONSTANTS, quantile=0.0)
+        assert m0 > 0.0
+
+    def test_design_quantile_exceeds_realised_population(self):
+        """The implied design point (largest compound sigma that still
+        passes JEDEC timings at 85C) must comfortably exceed the
+        realised quantile of the sampled population — otherwise the
+        simulated silicon breaks the manufacturer guarantee AL-DRAM
+        assumes it can preserve."""
+        q = guardband.design_quantile(CALIBRATED_CONSTANTS)
+        cfg = dataclasses.replace(CALIBRATED_VARIATION,
+                                  n_modules=8, n_cells=8)
+        pop = sample_population(jax.random.PRNGKey(0), cfg)
+        realised = float(np.asarray(
+            compound_quantile(pop.cells, cfg)).max())
+        assert q > realised, (q, realised)
+
+    def test_bracket_assertion_lo(self):
+        """Constants whose MEDIAN worst-case cell already fails JEDEC
+        timings must raise, not silently return quantile 0."""
+        bad = dataclasses.replace(CALIBRATED_CONSTANTS, dv_min=10.0)
+        with pytest.raises(ValueError, match="bracket broken"):
+            guardband.design_quantile(bad)
+
+    def test_bracket_assertion_hi(self):
+        """If even an hi-sigma cell passes, the search is unbracketed
+        and must raise rather than understate the design point."""
+        with pytest.raises(ValueError, match="raise `hi`"):
+            guardband.design_quantile(CALIBRATED_CONSTANTS, hi=1e-6)
+
+
+class TestOnlineMoves:
+    def rows(self):
+        r = T.DDR3_1600.as_row()[None, None, :].repeat(2, 0).repeat(3, 1)
+        r = r.copy()
+        r[..., :4] -= 4 * T.TIMING_STEP_NS
+        r[..., 4] += 4 * T.REFRESH_STEP_MS
+        return r.astype(np.float32)
+
+    def test_tighten_moves_toward_jedec_both_knobs(self):
+        rows = self.rows()
+        out, at_jedec = guardband.tighten_rows(rows)
+        np.testing.assert_allclose(out[..., :4],
+                                   rows[..., :4] + T.TIMING_STEP_NS)
+        np.testing.assert_allclose(out[..., 4],
+                                   rows[..., 4] - T.REFRESH_STEP_MS)
+        assert not at_jedec.any()
+
+    def test_tighten_respects_mask(self):
+        rows = self.rows()
+        mask = np.zeros(rows.shape[:-1], bool)
+        mask[0, 1] = True
+        out, _ = guardband.tighten_rows(rows, mask=mask)
+        np.testing.assert_allclose(out[~mask], rows[~mask])
+        assert (out[0, 1, :4] > rows[0, 1, :4]).all()
+
+    def test_tighten_clamps_and_flags_at_jedec(self):
+        """Rows already at the anchor cannot be tightened further; the
+        at_jedec flag is the escalation signal (full re-profile or
+        module retirement)."""
+        std = np.broadcast_to(T.DDR3_1600.as_row(),
+                              (2, 6)).astype(np.float32)
+        out, at_jedec = guardband.tighten_rows(std)
+        np.testing.assert_allclose(out, std)
+        assert at_jedec.all()
+
+    def test_relax_steps_back_and_clamps_at_floor(self):
+        floor = self.rows()
+        tight, _ = guardband.tighten_rows(floor)
+        relaxed = guardband.relax_rows(tight, floor)
+        np.testing.assert_allclose(relaxed, floor)
+        # relaxing AT the floor is a no-op, never an overshoot
+        again = guardband.relax_rows(relaxed, floor)
+        np.testing.assert_allclose(again, floor)
+
+    def test_tighten_then_relax_roundtrip_is_identity(self):
+        floor = self.rows()
+        rows = floor
+        for _ in range(3):
+            rows, _ = guardband.tighten_rows(rows)
+        for _ in range(5):          # extra relax steps clamp at floor
+            rows = guardband.relax_rows(rows, floor)
+        np.testing.assert_allclose(rows, floor)

@@ -136,6 +136,31 @@ class TestCheckpoint:
         assert float(state["x"]) == float(clean["x"])
 
 
+class TestHeartbeat:
+    def test_never_beaten_node_is_not_dead(self):
+        """Regression: a node that has not reported its FIRST heartbeat
+        must not be declared dead, however late the monitor starts —
+        `last_beat` is NaN-seeded, not zero-seeded, so a monitor whose
+        clock begins at now >> budget doesn't bury the whole fleet."""
+        from repro.runtime.fault import HeartbeatMonitor
+        hb = HeartbeatMonitor(4, interval_ms=100.0, static_miss_budget=2.5)
+        # far beyond any miss budget if measured against t=0
+        assert not any(hb.dead(n, 1e9) for n in range(4))
+
+    def test_silent_node_goes_dead_after_budget(self):
+        from repro.runtime.fault import HeartbeatMonitor
+        hb = HeartbeatMonitor(2, interval_ms=100.0, static_miss_budget=2.5)
+        for t in range(5):
+            hb.beat(0, 100.0 * t)
+            hb.beat(1, 100.0 * t)
+        # node 1 stops beating; node 0 keeps reporting
+        for t in range(5, 12):
+            hb.beat(0, 100.0 * t)
+        now = 100.0 * 11
+        assert not hb.dead(0, now)
+        assert hb.dead(1, now)
+
+
 class TestElastic:
     def test_plan_mesh(self):
         from repro.runtime.elastic import plan_mesh
