@@ -7,11 +7,19 @@ baselines; CI also uploads them as workflow artifacts and gates the
 sim_bench fast wall time against the committed baseline).
 
   python -m benchmarks.run [--fast] [--only NAME] [--out-dir DIR]
-                           [--repeat N]
+                           [--repeat N] [--baseline DIR]
+                           [--baseline-factor F]
 
 ``--repeat N`` runs each bench N times and reports the MEDIAN wall
 time (the per-run walls are kept in the summary), so one-off noise on
 shared runners doesn't pollute the trajectory.
+
+``--baseline DIR`` compares each bench's median wall time against the
+committed ``BENCH_<name>.json`` in DIR (e.g. the repo root) after the
+run, prints a regression table, and exits non-zero when any bench
+runs slower than ``--baseline-factor`` (default 2.0) times its
+baseline — the same contract CI applies to the sim_bench fast path,
+available locally for every bench.
 """
 
 from __future__ import annotations
@@ -90,6 +98,12 @@ def main() -> None:
     ap.add_argument("--repeat", type=int, default=1,
                     help="run each bench N times; report the median "
                          "wall time")
+    ap.add_argument("--baseline", default=None,
+                    help="directory holding committed BENCH_<name>.json "
+                         "baselines to regression-compare against")
+    ap.add_argument("--baseline-factor", type=float, default=2.0,
+                    help="fail when a bench's wall time exceeds "
+                         "FACTOR x its baseline (default 2.0)")
     args = ap.parse_args()
 
     from benchmarks import (fig2_refresh, fig2_timing, fig3_population,
@@ -116,6 +130,7 @@ def main() -> None:
     os.makedirs(args.out_dir, exist_ok=True)
     print("name,us_per_call,derived")
     failed = []
+    measured: dict[str, float] = {}
     for name, fn in benches.items():
         if args.only and name != args.only:
             continue
@@ -133,10 +148,49 @@ def main() -> None:
                 break
         if err:
             failed.append(name)
+        else:
+            measured[name] = statistics.median(walls)
         _write_summary(args.out_dir, name, walls, args.fast, res,
                        error=err)
+    if args.baseline:
+        regressions = _compare_baseline(measured, args.baseline,
+                                        args.baseline_factor)
+        if regressions:
+            raise SystemExit(f"wall-time regressions: {regressions}")
     if failed:
         raise SystemExit(f"failed: {failed}")
+
+
+def _compare_baseline(measured: dict[str, float], baseline_dir: str,
+                      factor: float) -> list[str]:
+    """Print a wall-time table vs the committed baselines; return the
+    benches slower than `factor` x baseline.  Benches without a
+    committed baseline (or baselines recorded with a different --fast
+    mode) just print as unbaselined — only comparable entries gate."""
+    regressions = []
+    print(f"\nbaseline compare vs {baseline_dir} "
+          f"(fail > {factor:g}x):", file=sys.stderr)
+    for name, wall in measured.items():
+        path = os.path.join(baseline_dir, f"BENCH_{name}.json")
+        try:
+            with open(path) as f:
+                base = json.load(f)
+        except (OSError, ValueError):
+            print(f"  {name}: {wall:.3f}s (no baseline)",
+                  file=sys.stderr)
+            continue
+        base_wall = base.get("wall_s")
+        if not base_wall:
+            print(f"  {name}: {wall:.3f}s (baseline has no wall_s)",
+                  file=sys.stderr)
+            continue
+        ratio = wall / base_wall
+        flag = " REGRESSION" if ratio > factor else ""
+        print(f"  {name}: {wall:.3f}s vs {base_wall:.3f}s "
+              f"({ratio:.2f}x){flag}", file=sys.stderr)
+        if ratio > factor:
+            regressions.append(name)
+    return regressions
 
 
 if __name__ == "__main__":

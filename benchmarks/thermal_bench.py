@@ -12,11 +12,14 @@ reports three deployments per scenario:
   * oracle            — zero-hysteresis adaptive (upper bound).
 
 The whole campaign — 35 workloads x 2 core modes x (scenarios +
-oracle variants) x (adaptive + static brackets) — costs exactly THREE
-traced dispatches (one trace synthesis, one adaptive replay, one
-static replay); the ``dispatches=3`` field in the derived CSV column
-is asserted by CI.  The bench also asserts the acceptance bracket:
-adaptive >= static-worst-case on every dynamic scenario.
+oracle variants) x (adaptive + static brackets) — costs exactly ONE
+traced dispatch: the trace pool rides as a declarative `SynthSpec`
+(synthesis fused into the launch) and `SimEngine.run_bracket` runs
+the adaptive replay, the on-device worst-bin round-up AND the static
+bracket in the same dispatch (`evaluate_dynamic(fused=True)`).  The
+``dispatches=1`` field in the derived CSV column is asserted by CI.
+The bench also asserts the acceptance bracket: adaptive >=
+static-worst-case on every dynamic scenario.
 """
 
 from __future__ import annotations
@@ -32,13 +35,12 @@ def run(fast: bool = False) -> dict:
     pop = population(fast)
     ctrl = ALDRAMController(profiler(fast))
     engine = SimEngine()
-    s0 = perf_model.synth_dispatch_count
-    with timed() as t:
-        ctrl.profile(pop)
-        res = ctrl.evaluate_dynamic(pop, n=1024 if fast else 4096,
-                                    engine=engine)
-    dispatches = engine.dispatch_count + (perf_model.synth_dispatch_count
-                                          - s0)
+    with perf_model.synth_dispatch_scope() as scope:
+        with timed() as t:
+            ctrl.profile(pop)
+            res = ctrl.evaluate_dynamic(pop, n=1024 if fast else 4096,
+                                        engine=engine, fused=True)
+    dispatches = engine.dispatch_count + scope.count
     per = res["per_scenario"]
     # the acceptance bracket must hold for EVERY policy of the
     # campaign, not just the headline view

@@ -567,7 +567,8 @@ class ALDRAMController:
     def evaluate_dynamic(self, pop: Population, scenarios=None,
                          config=None, n: int = 4096, seed: int = 0,
                          policies=None, engine=None,
-                         per_bank: bool = False) -> dict:
+                         per_bank: bool = False,
+                         fused: bool = False) -> dict:
         """The paper's actual mechanism, end to end: profile the
         population, stack the per-bin all-module-safe rows
         (`TimingTable.safe_stack`), and replay the workload pool with
@@ -585,7 +586,10 @@ class ALDRAMController:
         replay) regardless of how many scenarios or policies ride the
         campaign.  `per_bank=True` deploys the per-bank stack
         (`safe_stack_banks`): the in-scan selection then gathers row
-        (bin, request's bank) — same dispatch count.
+        (bin, request's bank) — same dispatch count.  `fused=True`
+        collapses the whole evaluation — synthesis, adaptive replay,
+        worst-bin provisioning AND the static bracket — into ONE
+        dispatch (`SimEngine.run_bracket`).
         """
         from repro.core import dram_sim, perf_model, thermal
         if self.table is None:
@@ -597,7 +601,8 @@ class ALDRAMController:
                       else self.table.safe_stack())
         out = perf_model.evaluate_adaptive(
             rows, bins, scenarios, config=config, n=n, seed=seed,
-            engine=engine, policies=policies, n_banks=pop.n_banks)
+            engine=engine, policies=policies, n_banks=pop.n_banks,
+            fused=fused)
         out["source"] = "profiled-table-dynamic"
         out["policies"] = policies
         return out

@@ -109,17 +109,12 @@ class Policy:
 OPEN_FCFS = Policy()
 
 
-def synth_trace(key, n: int, n_banks: int = 8, n_rows: int = 4096,
-                row_hit: float = 0.6, write_frac: float = 0.3,
-                inter_arrival_ns: float = 20.0) -> Trace:
-    """Synthetic workload: per-bank row locality with geometric row
-    reuse (hit prob `row_hit`), Poisson-ish arrivals."""
-    kb, kr, kw, ka, kh = jax.random.split(key, 5)
-    bank = jax.random.randint(kb, (n,), 0, n_banks)
-    # row sequence: reuse previous row on that bank w.p. row_hit
-    new_row = jax.random.randint(kr, (n,), 0, n_rows)
-    reuse = jax.random.uniform(kh, (n,)) < row_hit
-
+def _row_pick_scan(bank, new_row, reuse, n_banks: int):
+    """Sequential reference of the row-locality recurrence: reuse keeps
+    the bank's last fresh row (0 before any), a miss latches `new_row`.
+    Retained as the parity oracle for `_row_pick` — integer-exact
+    equality is pinned by tests, because trace *identity* (not just
+    distribution) anchors every committed evaluation number."""
     def pick(carry, x):
         last_rows = carry
         b, nr, ru = x
@@ -128,10 +123,148 @@ def synth_trace(key, n: int, n_banks: int = 8, n_rows: int = 4096,
 
     _, row = jax.lax.scan(pick, jnp.zeros((n_banks,), jnp.int32),
                           (bank, new_row, reuse))
+    return row
+
+
+def _row_pick(bank, new_row, reuse, n_banks: int):
+    """Vectorized (scan-free) `_row_pick_scan`, bit-identical: request
+    i's row is `new_row[j]` where j is the LATEST non-reuse request
+    <= i on the same bank (j = i itself when i is fresh), or 0 when no
+    fresh access preceded it — a per-bank `cummax` over marked indices
+    plus one gather, O(banks * N) elementwise instead of an N-step
+    scan (the synthesis prologue of a fused campaign dispatch must not
+    reintroduce a sequential loop)."""
+    n = bank.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    fresh = jnp.where(reuse, -1, idx)                       # [N]
+    marked = jnp.where(
+        bank[None, :] == jnp.arange(n_banks, dtype=jnp.int32)[:, None],
+        fresh[None, :], -1)                                 # [B, N]
+    latest = jax.lax.cummax(marked, axis=1)
+    j = latest[bank, idx]
+    return jnp.where(j >= 0, new_row[jnp.maximum(j, 0)], 0)
+
+
+def synth_trace(key, n: int, n_banks: int = 8, n_rows: int = 4096,
+                row_hit: float = 0.6, write_frac: float = 0.3,
+                inter_arrival_ns: float = 20.0) -> Trace:
+    """Synthetic workload: per-bank row locality with geometric row
+    reuse (hit prob `row_hit`), Poisson-ish arrivals.  Fully
+    vectorized (no scan), so it fuses cleanly into the prologue of a
+    single-dispatch campaign (`sim_engine` + `SynthSpec`)."""
+    kb, kr, kw, ka, kh = jax.random.split(key, 5)
+    bank = jax.random.randint(kb, (n,), 0, n_banks)
+    # row sequence: reuse previous row on that bank w.p. row_hit
+    new_row = jax.random.randint(kr, (n,), 0, n_rows)
+    reuse = jax.random.uniform(kh, (n,)) < row_hit
+    row = _row_pick(bank, new_row, reuse, n_banks)
     gaps = jax.random.exponential(ka, (n,)) * inter_arrival_ns
     arrival = jnp.cumsum(gaps)
     is_write = jax.random.uniform(kw, (n,)) < write_frac
     return Trace(arrival, bank, row, is_write)
+
+
+@dataclasses.dataclass(frozen=True)
+class SynthSpec:
+    """DECLARATIVE trace batch: the `synth_trace` knobs of every
+    stream, instead of materialized arrays.  `sim_engine.SimSpec`
+    accepts one as its `traces` axis, and the engine then synthesizes
+    the whole batch INSIDE the replay dispatch (threefry keys folded
+    per row, exactly like `perf_model._synth_batch`) — a fig4-scale
+    campaign is synthesis + reorder + replay + stats in ONE launch.
+
+    Trace i is `synth_trace(fold_in(PRNGKey(seed), offsets[i]), n,
+    n_banks, row_hits[i], write_fracs[i], inter_arrivals[i])` —
+    bit-identical to the materialized `perf_model.trace_batch` rows by
+    construction (same fold, same generator ops).
+
+    `materialize()` runs the batched synthesis host-visibly (cached on
+    the instance; counted as ONE `perf_model.synth_dispatch_count`
+    launch the first time) — the engine uses it to derive the exact
+    slack-horizon reorder-buffer caps, and `SimSpec.pack()` uses it so
+    the reference pipelines accept a `SynthSpec` transparently."""
+
+    n: int
+    offsets: tuple[int, ...]
+    row_hits: tuple[float, ...]
+    write_fracs: tuple[float, ...]
+    inter_arrivals: tuple[float, ...]
+    seed: int = 0
+    n_banks: int = 8
+
+    def __post_init__(self):
+        for f in ("offsets", "row_hits", "write_fracs",
+                  "inter_arrivals"):
+            object.__setattr__(self, f, tuple(getattr(self, f)))
+            assert len(getattr(self, f)) == len(self.offsets), f
+        object.__setattr__(self, "_cache", {})
+
+    def __len__(self) -> int:
+        return len(self.offsets)
+
+    def knob_arrays(self):
+        """(key, offsets, row_hits, write_fracs, inter_arrivals) device
+        arrays — the ONLY traced inputs the fused synthesis needs."""
+        return (jax.random.PRNGKey(self.seed),
+                jnp.asarray(self.offsets, jnp.int32),
+                jnp.asarray(self.row_hits, jnp.float32),
+                jnp.asarray(self.write_fracs, jnp.float32),
+                jnp.asarray(self.inter_arrivals, jnp.float32))
+
+    def synth(self):
+        """The in-dispatch synthesis prologue: [T, n] `Trace` batch as
+        traced arrays (call under jit)."""
+        key, offs, rhs, wfs, ias = self.knob_arrays()
+
+        def one(off, rh, wf, ia):
+            k = jax.random.fold_in(key, off)
+            return synth_trace(k, self.n, n_banks=self.n_banks,
+                               row_hit=rh, write_frac=wf,
+                               inter_arrival_ns=ia)
+
+        return jax.vmap(one)(offs, rhs, wfs, ias)
+
+    def materialize(self) -> tuple[Trace, ...]:
+        """Host-side tuple-of-`Trace`s view (one synthesis launch,
+        cached on the instance — repeated campaigns over the same spec
+        pay it once)."""
+        cache = self._cache
+        if "traces" not in cache:
+            from repro.core import perf_model          # lazy: no cycle
+            perf_model.synth_dispatch_count += 1
+            tb = jax.jit(self.synth)()
+            fields = [np.asarray(f) for f in tb]
+            cache["traces"] = tuple(
+                Trace(*(f[i] for f in fields))
+                for i in range(len(self)))
+        return cache["traces"]
+
+
+def check_prefix_valid(valid, where: str = "replay"):
+    """Enforce the padding-suffix invariant every replay layout's ring
+    gate depends on: each trace's `valid` mask must be True on a
+    prefix and False on the suffix.  Interior-invalid requests would
+    silently desynchronize the bounded-MLP completion gate (the Pallas
+    kernel indexes its ring by the loop counter; the scans skip the
+    slot but keep counting), so they are rejected loudly here.  Traced
+    (jit-abstract) masks skip the check — the engine validates the
+    concrete mask before handing it to a jitted dispatch."""
+    if isinstance(valid, jax.core.Tracer):
+        return
+    v = np.asarray(valid, bool).reshape(-1, np.shape(valid)[-1])
+    cnt = v.sum(-1)
+    idx = np.arange(v.shape[-1])
+    bad = (v != (idx[None, :] < cnt[:, None])).any(-1)
+    if bad.any():
+        t = int(np.argmax(bad))
+        first_gap = int(np.argmin(v[t])) if not v[t].all() else -1
+        raise ValueError(
+            f"{where}: `valid` must be a prefix-true mask (padding "
+            f"strictly a suffix) — trace row {t} has {int(cnt[t])} "
+            f"valid requests but an invalid slot at index {first_gap} "
+            "is followed by valid ones. Compact each trace before "
+            "packing (the ring gate of the replay kernels counts "
+            "requests positionally).")
 
 
 def frfcfs_order(trace: Trace, window: int, slack_ns: float = 30.0,
@@ -477,6 +610,125 @@ def replay_rows(arrival, bank, row, is_write, valid, timings, closed,
         (arrival, bank, row, is_write, valid))
     total = jnp.maximum(bse[:, 3].max(0), bse[:, 2].max(0))
     return lat.T, total                  # [S, N], [S]
+
+
+def replay_rows_frfcfs(arrival, bank, row, is_write, valid, timings,
+                       closed, window, slack_ns, cap, max_window: int,
+                       n_banks: int = 8, mlp_window: int = 8,
+                       all_valid: bool = False):
+    """MERGED FR-FCFS-lite + replay: one `lax.scan` that both picks the
+    next request to issue (the `frfcfs_perm` pending-buffer scheduler)
+    and services it against the `replay_rows` lane-major bank state —
+    replacing the two-scan prepass (permute, gather, replay) with a
+    single pass over the stream.  Halves the sequential step count of
+    a reordered campaign and skips the [T, P, N] gather entirely;
+    bit-identical to `replay_rows(frfcfs_perm-permuted stream)` by
+    construction: the scheduler carry mirrors `frfcfs_perm` operation
+    for operation (same eligibility mask, same promotion/starvation
+    arithmetic, same buffer shift) and the service arithmetic is the
+    shared `service_math`.
+
+    `window`/`slack_ns`/`cap`/`closed` are traced scalars (per-policy
+    campaign columns — `window <= 1` degenerates to in-order FCFS so
+    every policy rides one vmapped dispatch); `max_window` is the
+    static pending-buffer size (>= every policy's window; the engine
+    shrinks it to the exact slack-horizon bound, see
+    `sim_engine._eff_window`).  `all_valid=True` (static) asserts the
+    stream has no padding and swaps the mod-indexed MLP ring for a
+    pure roll — cheaper on sublane hardware and exact because the
+    issue counter then advances every step.
+
+    Returns (latency [S, N] in ISSUE order — the same positional
+    order the prepass pipeline emits — and total runtime [S]).
+    Padding must be a suffix of `valid` (`check_prefix_valid`)."""
+    n = arrival.shape[0]
+    w = max_window
+    assert 1 <= w <= n, (w, n)
+    banked = timings.ndim == 3
+    if not banked:
+        trcd, tras, twr, trp, tcl = (timings[:, 0], timings[:, 1],
+                                     timings[:, 2], timings[:, 3],
+                                     timings[:, 5])
+    s_rows = timings.shape[0]
+    slots = jnp.arange(w, dtype=jnp.int32)
+    slack = jnp.asarray(slack_ns, jnp.float32)
+    # request stream packed [5, N+1]: arrival/bank/row/is_write/valid
+    # as float32 (exact for bank/row ids below 2**24) plus a sentinel
+    # column refilled once the stream runs dry — its row (-2) can
+    # never match an open-row prediction (-1 = precharged, >= 0 real),
+    # and its validity 0 keeps it out of every eligibility mask, so it
+    # drains in order exactly like `frfcfs_perm`'s padded tail.
+    stream = jnp.concatenate([
+        jnp.stack([arrival.astype(jnp.float32),
+                   bank.astype(jnp.float32), row.astype(jnp.float32),
+                   is_write.astype(jnp.float32),
+                   valid.astype(jnp.float32)]),
+        jnp.array([[0.0], [0.0], [-2.0], [0.0], [0.0]], jnp.float32),
+    ], axis=1)
+
+    bs0 = jnp.concatenate([jnp.full((n_banks, 1, s_rows), -1.0),
+                           jnp.zeros((n_banks, 3, s_rows))], axis=1)
+    state0 = (stream[:, :w],                        # pending buffer
+              jnp.full((n_banks,), -1.0, jnp.float32),  # open-row pred
+              jnp.zeros((), jnp.int32),             # defer counter
+              jnp.asarray(w, jnp.int32),            # next refill
+              bs0, jnp.zeros((mlp_window, s_rows)),
+              jnp.zeros((), jnp.int32))
+
+    def step(st, _):
+        buf, open_pred, defer, nxt, bs, ring, idx = st
+        # --- scheduler: pick the issue slot (mirrors frfcfs_perm) ---
+        b_int = buf[1].astype(jnp.int32)
+        hit = open_pred[b_int] == buf[2]
+        horizon = buf[0, 0] + slack
+        elig = (hit & (buf[0] <= horizon) & (buf[4] > 0)
+                & (slots < window))
+        promo = elig.any() & (defer < cap)
+        pick = jnp.where(promo, jnp.argmax(elig), 0).astype(jnp.int32)
+        req = buf[:, pick]
+        t, rf, v = req[0], req[2], req[4] > 0
+        b = req[1].astype(jnp.int32)
+        wr = req[3] > 0
+        open_pred = open_pred.at[b].set(rf)
+        defer = jnp.where(pick > 0, defer + 1, 0)
+        refill = stream[:, jnp.minimum(nxt, n)]
+        shifted = jnp.concatenate([buf[:, 1:], refill[:, None]], axis=1)
+        buf2 = jnp.where(slots[None, :] >= pick, shifted, buf)
+        # --- service: replay_rows' lane-major bank state ---
+        rowb = bs[b]                           # [4, S]
+        if all_valid:
+            gate = ring[0]
+        else:
+            gate = ring[idx % mlp_window]      # [S]
+        if banked:
+            tb = timings[:, b, :]              # [S, 6]
+            tc_ = (tb[:, 0], tb[:, 1], tb[:, 2], tb[:, 3], tb[:, 5])
+        else:
+            tc_ = (trcd, tras, twr, trp, tcl)
+        (latched, act_new, wrd_new, rdy_new, done, lat,
+         _) = service_math(t, gate, rowb[0], rowb[1], rowb[2], rowb[3],
+                           rf, wr, tc_[0], tc_[1], tc_[2], tc_[3],
+                           tc_[4], closed)
+        new_row = jnp.stack([jnp.broadcast_to(latched, (s_rows,)),
+                             act_new, wrd_new, rdy_new])
+        if all_valid:
+            bs2 = bs.at[b].set(new_row)
+            ring2 = jnp.concatenate([ring[1:], done[None]])
+            idx2 = idx + 1
+            lat_out = lat
+        else:
+            bs2 = bs.at[b].set(jnp.where(v, new_row, rowb))
+            ring2 = ring.at[idx % mlp_window].set(
+                jnp.where(v, done, gate))
+            idx2 = idx + v.astype(jnp.int32)
+            lat_out = jnp.where(v, lat, 0.0)
+        return ((buf2, open_pred, defer, nxt + 1, bs2, ring2, idx2),
+                lat_out)
+
+    (_, _, _, _, bse, _, _), lat = jax.lax.scan(
+        step, state0, None, length=n)
+    total = jnp.maximum(bse[:, 3].max(0), bse[:, 2].max(0))
+    return lat.T, total                        # [S, N], [S]
 
 
 class AdaptiveState(NamedTuple):

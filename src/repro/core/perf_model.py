@@ -38,6 +38,7 @@ oracle deployments — still O(1) traced dispatches for the whole
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 
@@ -48,7 +49,7 @@ import numpy as np
 from repro.core import dram_sim
 from repro.core import thermal as TH
 from repro.core import timing as T
-from repro.core.sim_engine import SimEngine, SimSpec
+from repro.core.sim_engine import SimEngine, SimResult, SimSpec
 from repro.core.timing import ALDRAM_55C_EVAL, DDR3_1600, TimingParams
 
 
@@ -155,12 +156,45 @@ def _synth_batch(key, n, n_banks, offsets, row_hits, write_fracs,
 synth_dispatch_count = 0
 
 
-def trace_batch(n: int = 8192, seed: int = 0,
-                n_banks: int = 8) -> dram_sim.Trace:
-    """All 35 workloads x (single, multi) as one batched `Trace` with a
-    [70, n] leading axis — rows ordered single-block then multi-block,
-    each in WORKLOADS order."""
+class _SynthScope:
+    """Handle yielded by `synth_dispatch_scope`: `.count` is the number
+    of synthesis launches since the scope opened (frozen at exit)."""
+
+    def __init__(self, start: int):
+        self._start = start
+        self._end: int | None = None
+
+    @property
+    def count(self) -> int:
+        cur = synth_dispatch_count if self._end is None else self._end
+        return cur - self._start
+
+
+@contextlib.contextmanager
+def synth_dispatch_scope(reset: bool = False):
+    """Scoped synthesis-launch accounting over the module-global
+    `synth_dispatch_count` — the counterpart of reading a fresh
+    `SimEngine().dispatch_count`, without the d0/s0 delta bookkeeping
+    every caller otherwise repeats.  Yields a handle whose `.count` is
+    the launches inside the scope; `reset=True` additionally restores
+    the global to its entry value on exit (so a test can assert
+    absolute counts without caring who synthesized before it)."""
     global synth_dispatch_count
+    start = synth_dispatch_count
+    scope = _SynthScope(start)
+    try:
+        yield scope
+    finally:
+        scope._end = synth_dispatch_count
+        if reset:
+            synth_dispatch_count = start
+
+
+def _pool_knobs():
+    """(offsets, row_hits, write_fracs, inter_arrivals) of the full 70
+    trace pool — single-core block then multi-core block, each in
+    WORKLOADS order; the fold offsets keep every trace bit-identical
+    to the per-call `_trace_for` path."""
     offs, rhs, wfs, ias = [], [], [], []
     for multi in MODES:
         for i, w in enumerate(WORKLOADS):
@@ -169,12 +203,38 @@ def trace_batch(n: int = 8192, seed: int = 0,
             rhs.append(rh)
             wfs.append(wf)
             ias.append(ia)
+    return offs, rhs, wfs, ias
+
+
+def trace_batch(n: int = 8192, seed: int = 0,
+                n_banks: int = 8) -> dram_sim.Trace:
+    """All 35 workloads x (single, multi) as one batched `Trace` with a
+    [70, n] leading axis — rows ordered single-block then multi-block,
+    each in WORKLOADS order."""
+    global synth_dispatch_count
+    offs, rhs, wfs, ias = _pool_knobs()
     synth_dispatch_count += 1
     return _synth_batch(jax.random.PRNGKey(seed), n, n_banks,
                         jnp.asarray(offs, jnp.int32),
                         jnp.asarray(rhs, jnp.float32),
                         jnp.asarray(wfs, jnp.float32),
                         jnp.asarray(ias, jnp.float32))
+
+
+def synth_spec(n: int = 8192, seed: int = 0,
+               n_banks: int = 8) -> dram_sim.SynthSpec:
+    """The DECLARATIVE `trace_batch`: the same 70-trace pool as a
+    `dram_sim.SynthSpec` (same knobs, same threefry fold offsets, so
+    the synthesized streams are bit-identical).  Hand it to a
+    `SimSpec` as the trace axis and the engine fuses the synthesis
+    INTO the replay dispatch — the whole Fig. 4 campaign becomes ONE
+    launch and `synth_dispatch_count` never moves."""
+    offs, rhs, wfs, ias = _pool_knobs()
+    return dram_sim.SynthSpec(n=n, offsets=tuple(offs),
+                              row_hits=tuple(rhs),
+                              write_fracs=tuple(wfs),
+                              inter_arrivals=tuple(ias),
+                              seed=seed, n_banks=n_banks)
 
 
 def evaluate_many(timings, n: int = 8192, seed: int = 0,
@@ -204,7 +264,8 @@ def evaluate_many(timings, n: int = 8192, seed: int = 0,
 def evaluate_adaptive(table, bins, scenarios, config=None, n: int = 4096,
                       seed: int = 0, engine: SimEngine | None = None,
                       policies: tuple[dram_sim.Policy, ...] =
-                      (dram_sim.OPEN_FCFS,), n_banks: int = 8) -> dict:
+                      (dram_sim.OPEN_FCFS,), n_banks: int = 8,
+                      fused: bool = False) -> dict:
     """Closed-loop Fig. 4: replay the workload pool with IN-SCAN
     temperature-bin selection under every thermal scenario, and price
     it against the two bracketing deployments:
@@ -226,8 +287,12 @@ def evaluate_adaptive(table, bins, scenarios, config=None, n: int = 4096,
     trace synthesis + ONE adaptive replay (scenarios and their oracle
     variants share the scenario axis) + ONE static replay (the JEDEC
     baseline and every scenario's worst-case row share the timing
-    axis).  Speedups are CPI-model speedups vs the JEDEC baseline,
-    shaped [modes, workloads, P, C].
+    axis).  `fused=True` collapses all three into ONE dispatch
+    (`SimEngine.run_bracket` with a declarative `synth_spec` trace
+    axis: synthesis, adaptive replay, on-device worst-bin round-up
+    AND the static bracket in a single launch) — numerically the same
+    evaluation to device-stats tolerance.  Speedups are CPI-model
+    speedups vs the JEDEC baseline, shaped [modes, workloads, P, C].
     """
     engine = engine or SimEngine()
     config = config or TH.ThermalConfig()
@@ -239,35 +304,53 @@ def evaluate_adaptive(table, bins, scenarios, config=None, n: int = 4096,
     bins = tuple(float(b) for b in bins)
     nc = len(scenarios)
 
-    traces = trace_batch(n, seed, n_banks)
     # adaptive + oracle variants ride one scenario axis -> one dispatch
     # (K axis explicit, so a per-bank stack is unambiguous)
     tspec = TH.ThermalSpec(
         scenarios=scenarios + tuple(s.oracle() for s in scenarios),
         temp_bins=bins, config=config)
-    res_a = engine.run(SimSpec(traces=traces, timings=table[None],
-                               policies=policies, thermal=tspec,
-                               n_banks=n_banks))
-    lat_a = res_a.mean_latency_ns[:, :, 0, :]        # [T, P, 2C]
 
-    # static-worst-case: provision each scenario for its peak sensed
-    # temperature (max over traces AND policies — one register set per
-    # deployment); index len(bins) is the JEDEC fallback row.  The
-    # peak is measured on the ADAPTIVE trajectory, which UNDERSTATES a
-    # static deployment's own self-heating (slower rows hold the row
-    # active longer and deposit more heat), so provisioning adds the
-    # controller's hysteresis margin as a guardband before rounding up
-    # — conservative in the safe direction, and it can only raise
-    # `worst_bin` above every bin the adaptive replay selected, so the
-    # adaptive >= static-worst bracket stays structural
-    peak = res_a.temp_max[:, :, 0, :nc].max(axis=(0, 1))        # [C]
-    worst_bin = np.searchsorted(np.asarray(bins),
-                                peak + config.hyst_c, side="left")
-    base = np.broadcast_to(DDR3_1600.as_row(), table.shape[1:])
-    rows = np.concatenate([base[None], table[worst_bin]], axis=0)
-    res_s = engine.run(SimSpec(traces=traces, timings=rows,
-                               policies=policies, n_banks=n_banks))
-    lat_s = res_s.mean_latency_ns                    # [T, P, 1+C]
+    # static-worst-case bracket: provision each scenario for its peak
+    # sensed temperature (max over traces AND policies — one register
+    # set per deployment); index len(bins) is the JEDEC fallback row.
+    # The peak is measured on the ADAPTIVE trajectory, which
+    # UNDERSTATES a static deployment's own self-heating (slower rows
+    # hold the row active longer and deposit more heat), so
+    # provisioning adds the controller's hysteresis margin as a
+    # guardband before rounding up — conservative in the safe
+    # direction, and it can only raise `worst_bin` above every bin the
+    # adaptive replay selected, so the adaptive >= static-worst
+    # bracket stays structural
+    if fused:
+        spec = SimSpec(traces=synth_spec(n, seed, n_banks),
+                       timings=table[None], policies=policies,
+                       thermal=tspec, n_banks=n_banks)
+        br = engine.run_bracket(spec, base_row=DDR3_1600.as_row(),
+                                n_real=nc)
+        a = br["adaptive"]
+        res_a = SimResult(spec=spec, mean_latency_ns=a["mean"],
+                          p99_latency_ns=a["p99"], total_ns=a["total"],
+                          valid=br["valid"], temp_max=a["temp_max"],
+                          temp_mean=a["temp_mean"],
+                          bin_switches=a["bin_switches"],
+                          bank_heat=a["bank_heat"])
+        peak, worst_bin = br["temp_peak"], br["worst_bin"]
+        lat_a = a["mean"][:, :, 0, :]                # [T, P, 2C]
+        lat_s = br["static"]["mean"]                 # [T, P, 1+C]
+    else:
+        traces = trace_batch(n, seed, n_banks)
+        res_a = engine.run(SimSpec(traces=traces, timings=table[None],
+                                   policies=policies, thermal=tspec,
+                                   n_banks=n_banks))
+        lat_a = res_a.mean_latency_ns[:, :, 0, :]    # [T, P, 2C]
+        peak = res_a.temp_max[:, :, 0, :nc].max(axis=(0, 1))    # [C]
+        worst_bin = np.searchsorted(np.asarray(bins),
+                                    peak + config.hyst_c, side="left")
+        base = np.broadcast_to(DDR3_1600.as_row(), table.shape[1:])
+        rows = np.concatenate([base[None], table[worst_bin]], axis=0)
+        res_s = engine.run(SimSpec(traces=traces, timings=rows,
+                                   policies=policies, n_banks=n_banks))
+        lat_s = res_s.mean_latency_ns                # [T, P, 1+C]
 
     # one CPI pass: [base | static-worst | adaptive | oracle] columns
     lat = np.concatenate([lat_s, lat_a], axis=-1)

@@ -66,9 +66,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import timing as T
-from repro.core.dram_sim import (OPEN_FCFS, Policy, Trace, frfcfs_perm,
+from repro.core.autotune import ReplayConfig, ReplayTuner, replay_unit
+from repro.core.dram_sim import (OPEN_FCFS, Policy, SynthSpec, Trace,
+                                 check_prefix_valid, frfcfs_perm,
                                  frfcfs_reorder, replay_adaptive,
-                                 replay_rows)
+                                 replay_rows, replay_rows_frfcfs)
 from repro.core.thermal import ThermalSpec
 
 COLLECTABLE = ("latencies", "temps", "bins")
@@ -117,7 +119,10 @@ class SimSpec:
     materialize O(grid * N) arrays host-side.  The host-stats reference
     path always materializes them (it needs the raw grid anyway)."""
 
-    traces: tuple[Trace, ...]
+    # tuple of `Trace`s, or a `dram_sim.SynthSpec` — the DECLARATIVE
+    # trace batch whose synthesis the engine fuses INTO the replay
+    # dispatch (the whole campaign is then truly one launch)
+    traces: tuple[Trace, ...] | SynthSpec
     # [S, 6] rows | per-bank [S, banks, 6] | adaptive [K, S+1, 6] |
     # adaptive per-bank [K, S+1, banks, 6]
     timings: np.ndarray
@@ -135,7 +140,9 @@ class SimSpec:
             tr = (tuple(Trace(*(np.asarray(f)[i] for f in tr))
                         for i in range(np.asarray(tr.arrival).shape[0]))
                   if np.asarray(tr.arrival).ndim == 2 else (tr,))
-        object.__setattr__(self, "traces", tuple(tr))
+        if not isinstance(tr, SynthSpec):
+            tr = tuple(tr)
+        object.__setattr__(self, "traces", tr)
         object.__setattr__(
             self, "timings",
             _as_rows(self.timings) if self.thermal is None else
@@ -161,11 +168,23 @@ class SimSpec:
         return (base if self.thermal is None else
                 base + (len(self.thermal.scenarios),))
 
+    @property
+    def synth(self) -> SynthSpec | None:
+        """The declarative synthesis spec, when the trace axis is one."""
+        return self.traces if isinstance(self.traces, SynthSpec) else None
+
+    def trace_tuple(self) -> tuple[Trace, ...]:
+        """The trace axis as materialized `Trace`s (a `SynthSpec` axis
+        synthesizes once, cached on the spec — see
+        `SynthSpec.materialize`)."""
+        return (self.traces.materialize() if self.synth is not None
+                else self.traces)
+
     # ------------------------------------------------------------ packing
     def _pack_streams(self):
         """Pad the traces into dense [T, N] request arrays in FCFS
         order plus the [T, N] validity mask."""
-        tr = self.traces
+        tr = self.trace_tuple()
         lens = [int(np.asarray(t.arrival).shape[0]) for t in tr]
         n = max(lens)
         arrival = np.zeros((len(tr), n), np.float32)
@@ -179,6 +198,7 @@ class SimSpec:
             bank[i, :lens[i]] = np.asarray(t.bank)
             row[i, :lens[i]] = np.asarray(t.row)
             is_write[i, :lens[i]] = np.asarray(t.is_write)
+        check_prefix_valid(valid, "SimSpec.pack")
         return arrival, bank, row, is_write, valid
 
     def policy_knobs(self):
@@ -206,7 +226,7 @@ class SimSpec:
         policy axis materializes FR-FCFS-lite issue orders HOST-side
         via the retained Python loop, cached across calls) plus the
         [T, N] validity mask and the per-policy closed-page flags."""
-        tr, pol = self.traces, self.policies
+        tr, pol = self.trace_tuple(), self.policies
         lens = [int(np.asarray(t.arrival).shape[0]) for t in tr]
         n = max(lens)
         tp_ = (len(tr), len(pol))
@@ -234,6 +254,7 @@ class SimSpec:
                 bank[i, j, :lens[i]] = np.asarray(t2.bank)
                 row[i, j, :lens[i]] = np.asarray(t2.row)
                 is_write[i, j, :lens[i]] = np.asarray(t2.is_write)
+        check_prefix_valid(valid, "SimSpec.pack")
         closed = np.array([p.closed for p in pol])
         return arrival, bank, row, is_write, valid, closed
 
@@ -267,15 +288,48 @@ class SimResult:
     bank_heat: np.ndarray | None = None     # [T, P, K, C, B] end C
 
 
+def _eff_window(arrival: np.ndarray, valid: np.ndarray, window: int,
+                slack_ns: float) -> int:
+    """EXACT shrink of the FR-FCFS pending-buffer size: with
+    non-decreasing arrivals, a buffer slot j is promotable only while
+    its request arrives within `slack` of the head's arrival — slot j
+    holds a request at stream distance >= j from the head, so j >=
+    cnt_i = |{k >= i : arr[k] <= arr[i] + slack}| can NEVER be
+    eligible at head i.  A buffer of max_i cnt_i therefore yields the
+    IDENTICAL permutation (later slots only refill earlier, which
+    changes nothing the scheduler can observe).  All arithmetic is
+    float32, matching `frfcfs_perm`'s horizon compare bit-for-bit.
+
+    Bench traces cut the 64-deep buffer to ~36-39 slots — nearly
+    halving the dominant O(N * window) per-step cost of reordered
+    campaigns.  Returns `window` untouched (no shrink) if any valid
+    prefix has decreasing arrivals (synthetic traces never do)."""
+    eff = 1
+    slack = np.float32(slack_ns)
+    for t in range(arrival.shape[0]):
+        c = int(valid[t].sum())
+        if c == 0:
+            continue
+        arr = arrival[t, :c].astype(np.float32)
+        if np.any(np.diff(arr) < 0):
+            return window
+        horizon = (arr + slack).astype(np.float32)
+        cnt = np.searchsorted(arr, horizon, side="right") \
+            - np.arange(c, dtype=np.int64)
+        eff = max(eff, int(cnt.max()))
+    return max(1, min(window, eff, arrival.shape[1]))
+
+
 def _reorder_prepass(arrival, bank, row, is_write, valid, slacks, caps,
                      reorder_plan: tuple, n_banks: int,
                      n_policies: int):
     """In-dispatch FR-FCFS prepass: [T, N] FCFS streams -> [T, P, N]
     per-policy issue orders, all on device.  `reorder_plan` (static)
-    groups the policy columns with a window >= 2 by window size —
-    each group pays an O(N * window) permutation scan sized to ITS
-    window (not the campaign maximum); window-0 policies broadcast
-    the FCFS stream untouched."""
+    groups the policy columns with a window >= 2 by window size as
+    `(window, eff, idx)` entries — each group pays an O(N * eff)
+    permutation scan sized to its EXACT slack-horizon buffer bound
+    (`_eff_window`), not the nominal window; window-0 policies
+    broadcast the FCFS stream untouched."""
     t, n = arrival.shape
 
     def bcast(x):
@@ -287,11 +341,11 @@ def _reorder_prepass(arrival, bank, row, is_write, valid, slacks, caps,
 
     perm = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None, None],
                             (t, n_policies, n))
-    for window, idx in reorder_plan:
+    for window, eff, idx in reorder_plan:
         sel = np.asarray(idx, np.int32)
 
-        def one(a, b, r, v, s_, c_, w=window):
-            return frfcfs_perm(a, b, r, v, w, s_, c_, min(w, n),
+        def one(a, b, r, v, s_, c_, w=window, e=eff):
+            return frfcfs_perm(a, b, r, v, w, s_, c_, min(e, n),
                                n_banks)
 
         f_p = jax.vmap(one, in_axes=(None, None, None, None, 0, 0))
@@ -304,6 +358,59 @@ def _reorder_prepass(arrival, bank, row, is_write, valid, slacks, caps,
 
     return (gather(arrival), gather(bank), gather(row),
             gather(is_write))
+
+
+def _merged_replay(arrival, bank, row, is_write, valid, timings, closed,
+                   slacks, caps, reorder_plan: tuple, n_banks: int,
+                   mlp_window: int, all_valid: bool):
+    """The `backend="merged"` replay core: [T, N] FCFS streams ->
+    (lat [T, P, S, N], total [T, P, S]) with the FR-FCFS schedule
+    FUSED into the replay scan itself (`dram_sim.replay_rows_frfcfs`)
+    — one pass per (trace, policy-group) instead of permute + gather +
+    replay, with the pending buffer shrunk to each group's exact
+    `_eff_window` bound.  Non-reordering policies replay via the plain
+    lane-major scan.  Latencies land in ISSUE order, exactly like the
+    prepass pipeline's permuted streams — the statistics reduce the
+    same multiset in the same order, so the two fast paths are
+    bit-identical cell for cell."""
+    t, n = arrival.shape
+    p = closed.shape[0]
+    s = timings.shape[0]
+    lat = jnp.zeros((t, p, s, n))
+    total = jnp.zeros((t, p, s))
+    grouped: set[int] = set()
+    for _, _, idx in reorder_plan:
+        grouped.update(idx)
+    ident = tuple(j for j in range(p) if j not in grouped)
+
+    if ident:
+        sel = np.asarray(ident, np.int32)
+
+        def plain(a, b, r, w, v, c):
+            return replay_rows(a, b, r, w, v, timings, c, n_banks,
+                               mlp_window)
+
+        f_p = jax.vmap(plain, in_axes=(None,) * 5 + (0,))
+        f_tp = jax.vmap(f_p, in_axes=(0, 0, 0, 0, 0, None))
+        l_, t_ = f_tp(arrival, bank, row, is_write, valid, closed[sel])
+        lat = lat.at[:, sel].set(l_)
+        total = total.at[:, sel].set(t_)
+
+    for window, eff, idx in reorder_plan:
+        sel = np.asarray(idx, np.int32)
+
+        def fused(a, b, r, w, v, c, s_, cp, _w=window, _e=eff):
+            return replay_rows_frfcfs(a, b, r, w, v, timings, c, _w,
+                                      s_, cp, min(_e, n), n_banks,
+                                      mlp_window, all_valid=all_valid)
+
+        f_p = jax.vmap(fused, in_axes=(None,) * 5 + (0, 0, 0))
+        f_tp = jax.vmap(f_p, in_axes=(0, 0, 0, 0, 0, None, None, None))
+        l_, t_ = f_tp(arrival, bank, row, is_write, valid, closed[sel],
+                      slacks[sel], caps[sel])
+        lat = lat.at[:, sel].set(l_)
+        total = total.at[:, sel].set(t_)
+    return lat, total
 
 
 def _p99_k(valid: np.ndarray) -> int:
@@ -365,46 +472,65 @@ def _device_thermal_diag(temps, bin_sel, valid):
     return tmax, tmean, switches
 
 
-@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3, 4, 5))
-def _replay_grid(n_banks, mlp_window, reorder_plan, backend, want,
-                 p99_k, arrival, bank, row, is_write, valid, timings,
-                 closed, slacks, caps):
-    """ONE dispatch: replay every (trace, policy, timing row) cell.
+def _synth_streams(synth):
+    """In-dispatch synthesis prologue: a `SynthSpec` (static) becomes
+    the [T, n] FCFS streams + an all-True valid mask, traced INSIDE
+    the replay dispatch (threefry is deterministic, so the streams are
+    bit-identical to `SynthSpec.materialize`)."""
+    tb = synth.synth()
+    valid = jnp.ones(tb.arrival.shape, bool)
+    return tb.arrival, tb.bank, tb.row, tb.is_write, valid
 
-    Fast path: arrival/bank/row/is_write are [T, N] FCFS streams and
-    the FR-FCFS prepass (`reorder_plan` non-empty) materializes the
-    [T, P, N] per-policy issue orders on device.  Reference path: the
-    arrays arrive [T, P, N], already host-reordered, with an empty
-    plan.  valid: [T, N] (shared across policies — reordering permutes
-    only the valid prefix); timings: [S, 6]; closed/slacks/caps: [P].
-    `want` (static) selects the outputs: "stats" computes masked
-    mean/p99 in-dispatch, "lat" returns the raw [T, P, S, N] latency
-    grid; total runtime [T, P, S] is always returned (an exact max
-    reduction, so its in-dispatch order cannot perturb bits).
-    `backend` (static) picks the replay core: "scan" is the
-    lane-stacked `dram_sim.replay_rows` lax.scan,
-    "pallas"/"pallas_interpret" the `repro.kernels.replay` kernel.
+
+def _static_body(n_banks, mlp_window, reorder_plan, backend, want,
+                 p99_k, bs, arrival, bank, row, is_write, valid,
+                 timings, closed, slacks, caps, all_valid=False):
+    """Shared static-timing replay body (traced under a jit wrapper):
+    replay every (trace, policy, timing row) cell and reduce.
+
+    Fast path: arrival/bank/row/is_write are [T, N] FCFS streams; the
+    FR-FCFS prepass (`reorder_plan` non-empty) materializes the
+    [T, P, N] per-policy issue orders on device, or — with
+    backend="merged" — the scheduler fuses into the replay scan and no
+    [T, P, N] streams ever materialize.  Reference path: the arrays
+    arrive [T, P, N], already host-reordered, with an empty plan.
+    valid: [T, N] (shared across policies — reordering permutes only
+    the valid prefix); timings: [S, 6] or per-bank [S, B, 6];
+    closed/slacks/caps: [P].  `want` (static) selects the outputs:
+    "stats" computes masked mean/p99 in-dispatch, "lat" returns the
+    raw [T, P, S, N] latency grid; total runtime [T, P, S] is always
+    returned (an exact max reduction, so its in-dispatch order cannot
+    perturb bits).  `backend` (static) picks the replay core: "scan"
+    is the lane-stacked `dram_sim.replay_rows` lax.scan, "merged" the
+    scheduler-fused `dram_sim.replay_rows_frfcfs` scan,
+    "pallas"/"pallas_interpret" the `repro.kernels.replay` kernel
+    (lane-block size `bs`, None = kernel default).
     """
-    if arrival.ndim == 2:
-        a3, b3, r3, w3 = _reorder_prepass(
-            arrival, bank, row, is_write, valid, slacks, caps,
-            reorder_plan, n_banks, closed.shape[0])
+    if backend == "merged" and arrival.ndim == 2:
+        lat, total = _merged_replay(
+            arrival, bank, row, is_write, valid, timings, closed,
+            slacks, caps, reorder_plan, n_banks, mlp_window, all_valid)
     else:
-        a3, b3, r3, w3 = arrival, bank, row, is_write
+        if arrival.ndim == 2:
+            a3, b3, r3, w3 = _reorder_prepass(
+                arrival, bank, row, is_write, valid, slacks, caps,
+                reorder_plan, n_banks, closed.shape[0])
+        else:
+            a3, b3, r3, w3 = arrival, bank, row, is_write
 
-    if backend == "scan":
-        def one(a, b, r, w, v, c):
-            return replay_rows(a, b, r, w, v, timings, c, n_banks,
-                               mlp_window)
+        if backend in ("scan", "merged"):
+            def one(a, b, r, w, v, c):
+                return replay_rows(a, b, r, w, v, timings, c, n_banks,
+                                   mlp_window)
 
-        f_p = jax.vmap(one, in_axes=(0, 0, 0, 0, None, 0))
-        f_tp = jax.vmap(f_p, in_axes=(0, 0, 0, 0, 0, None))
-        lat, total = f_tp(a3, b3, r3, w3, valid, closed)
-    else:
-        from repro.kernels.replay import ops as replay_ops
-        lat, total = replay_ops.replay_grid(
-            a3, b3, r3, w3, valid, timings, closed, n_banks, mlp_window,
-            impl=backend)
+            f_p = jax.vmap(one, in_axes=(0, 0, 0, 0, None, 0))
+            f_tp = jax.vmap(f_p, in_axes=(0, 0, 0, 0, 0, None))
+            lat, total = f_tp(a3, b3, r3, w3, valid, closed)
+        else:
+            from repro.kernels.replay import ops as replay_ops
+            lat, total = replay_ops.replay_grid(
+                a3, b3, r3, w3, valid, timings, closed, n_banks,
+                mlp_window, impl=backend, bs=bs)
 
     out = {"total": total}
     if "stats" in want:
@@ -414,22 +540,29 @@ def _replay_grid(n_banks, mlp_window, reorder_plan, backend, want,
     return out
 
 
-@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3, 4))
-def _replay_grid_adaptive(n_banks, mlp_window, reorder_plan, want,
-                          p99_k, arrival, bank, row, is_write, valid,
-                          tables, bins, scns, tcfg, closed, slacks,
-                          caps):
-    """ONE dispatch: closed-loop replay of every (trace, policy, table
+def _adaptive_body(n_banks, mlp_window, reorder_plan, backend, want,
+                   p99_k, bs, arrival, bank, row, is_write, valid,
+                   tables, bins, scns, tcfg, closed, slacks, caps):
+    """Shared closed-loop replay body: every (trace, policy, table
     stack, thermal scenario) cell.
 
-    Stream layout and the FR-FCFS prepass follow `_replay_grid`;
-    tables: [K, S+1, 6] (JEDEC fallback row last); bins: [S]; scns:
-    [C, thermal.SCN_COLS]; tcfg: [6] `ThermalConfig.as_row`.  `want`
-    (static) selects outputs: "stats" adds in-dispatch mean/p99 and
-    the thermal diagnostics (temp_max/temp_mean/bin_switches);
-    "lat"/"temps"/"bins" return the raw [T, P, K, C, N] grids.  The
-    [T, P, K, C] total runtime and [T, P, K, C, B] end-of-trace bank
-    heat are always returned.
+    Stream layout and the FR-FCFS prepass follow `_static_body`;
+    tables: [K, S+1, 6] (JEDEC fallback row last) or per-bank
+    [K, S+1, B, 6]; bins: [S]; scns: [C, thermal.SCN_COLS]; tcfg: [6]
+    `ThermalConfig.as_row`.  `want` (static) selects outputs: "stats"
+    adds in-dispatch mean/p99 and the thermal diagnostics
+    (temp_max/temp_mean/bin_switches); "lat"/"temps"/"bins" return the
+    raw [T, P, K, C, N] grids.  The [T, P, K, C] total runtime and
+    [T, P, K, C, B] end-of-trace bank heat are always returned.
+
+    `backend` "pallas"/"pallas_interpret" runs the adaptive Pallas
+    kernel (`repro.kernels.replay`), whose OWN accumulator tiles
+    produce the thermal diagnostics on-device — the raw O(grid * N)
+    temperature/bin traces only materialize when "temps"/"bins" are
+    asked for.  "scan"/"merged" run the vmapped
+    `dram_sim.replay_adaptive` scan (the scheduler-fused merged core
+    is static-timing only, so "merged" degrades to the scan + prepass
+    here).
     """
     if arrival.ndim == 2:
         a3, b3, r3, w3 = _reorder_prepass(
@@ -438,23 +571,37 @@ def _replay_grid_adaptive(n_banks, mlp_window, reorder_plan, want,
     else:
         a3, b3, r3, w3 = arrival, bank, row, is_write
 
-    def one(a, b, r, w, v, tbl, scn, c):
-        return replay_adaptive(a, b, r, w, v, tbl, bins, scn, tcfg, c,
-                               n_banks, mlp_window)
+    diag = None
+    if backend in ("pallas", "pallas_interpret"):
+        from repro.kernels.replay import ops as replay_ops
+        emit_raw = ("temps" in want) or ("bins" in want)
+        lat, total, temps, bin_sel, bank_heat, diag = \
+            replay_ops.replay_grid_adaptive(
+                a3, b3, r3, w3, valid, tables, bins, scns, tcfg,
+                closed, n_banks, mlp_window, impl=backend, bs=bs,
+                emit_raw=emit_raw)
+    else:
+        def one(a, b, r, w, v, tbl, scn, c):
+            return replay_adaptive(a, b, r, w, v, tbl, bins, scn,
+                                   tcfg, c, n_banks, mlp_window)
 
-    f_c = jax.vmap(one, in_axes=(None,) * 5 + (None, 0, None))
-    f_kc = jax.vmap(f_c, in_axes=(None,) * 5 + (0, None, None))
-    f_pkc = jax.vmap(f_kc, in_axes=(0, 0, 0, 0, None, None, None, 0))
-    f_tpkc = jax.vmap(f_pkc, in_axes=(0, 0, 0, 0, 0, None, None, None))
-    lat, total, temps, bin_sel, bank_heat = f_tpkc(
-        a3, b3, r3, w3, valid, tables, scns, closed)
+        f_c = jax.vmap(one, in_axes=(None,) * 5 + (None, 0, None))
+        f_kc = jax.vmap(f_c, in_axes=(None,) * 5 + (0, None, None))
+        f_pkc = jax.vmap(f_kc, in_axes=(0, 0, 0, 0, None, None, None, 0))
+        f_tpkc = jax.vmap(f_pkc,
+                          in_axes=(0, 0, 0, 0, 0, None, None, None))
+        lat, total, temps, bin_sel, bank_heat = f_tpkc(
+            a3, b3, r3, w3, valid, tables, scns, closed)
 
     out = {"total": total, "bank_heat": bank_heat}
     if "stats" in want:
         out["mean"], out["p99"] = _device_stats(lat, valid, p99_k)
-        (out["temp_max"], out["temp_mean"],
-         out["bin_switches"]) = _device_thermal_diag(temps, bin_sel,
-                                                     valid)
+        if diag is not None:
+            out["temp_max"], out["temp_mean"], out["bin_switches"] = diag
+        else:
+            (out["temp_max"], out["temp_mean"],
+             out["bin_switches"]) = _device_thermal_diag(temps, bin_sel,
+                                                         valid)
     if "lat" in want:
         out["lat"] = lat
     if "temps" in want:
@@ -462,6 +609,86 @@ def _replay_grid_adaptive(n_banks, mlp_window, reorder_plan, want,
     if "bins" in want:
         out["bins"] = bin_sel
     return out
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3, 4, 5, 6, 7))
+def _replay_grid(synth, n_banks, mlp_window, reorder_plan, backend,
+                 want, p99_k, bs, arrival, bank, row, is_write, valid,
+                 timings, closed, slacks, caps):
+    """ONE dispatch: (optional in-dispatch trace synthesis +) static
+    replay grid — see `_static_body`.  `synth` (static) is None for
+    materialized streams, or the campaign's `dram_sim.SynthSpec`: the
+    stream/valid arguments are then ignored placeholders and the FCFS
+    streams are synthesized INSIDE this same dispatch (every synthetic
+    trace is full-length, which also unlocks the merged core's
+    rolling-ring `all_valid` form)."""
+    all_valid = synth is not None
+    if all_valid:
+        arrival, bank, row, is_write, valid = _synth_streams(synth)
+    return _static_body(n_banks, mlp_window, reorder_plan, backend,
+                        want, p99_k, bs, arrival, bank, row, is_write,
+                        valid, timings, closed, slacks, caps,
+                        all_valid=all_valid)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3, 4, 5, 6, 7))
+def _replay_grid_adaptive(synth, n_banks, mlp_window, reorder_plan,
+                          backend, want, p99_k, bs, arrival, bank, row,
+                          is_write, valid, tables, bins, scns, tcfg,
+                          closed, slacks, caps):
+    """ONE dispatch: (optional in-dispatch trace synthesis +)
+    closed-loop adaptive replay grid — see `_adaptive_body` and
+    `_replay_grid`'s `synth` contract."""
+    if synth is not None:
+        arrival, bank, row, is_write, valid = _synth_streams(synth)
+    return _adaptive_body(n_banks, mlp_window, reorder_plan, backend,
+                          want, p99_k, bs, arrival, bank, row,
+                          is_write, valid, tables, bins, scns, tcfg,
+                          closed, slacks, caps)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3, 4, 5, 6, 7))
+def _bracket_grid(synth, n_banks, mlp_window, reorder_plan, backend,
+                  p99_k, n_real, bs, arrival, bank, row, is_write,
+                  valid, tables, bins, scns, tcfg, closed, slacks,
+                  caps, base_row):
+    """ONE dispatch for the whole adaptive-vs-bracket evaluation
+    (`perf_model.evaluate_adaptive`'s inner loop): in-dispatch
+    synthesis (when `synth` is set) + the adaptive campaign + the
+    per-scenario worst-bin STATIC provisioning derived from its own
+    temperature peaks — the `searchsorted` bin round-up that used to
+    run host-side between two launches now runs on device between the
+    two replay halves.
+
+    `tables` must be a single stack ([1, S+1, (B,) 6]); `n_real`
+    (static) is the number of non-oracle scenarios (the leading
+    entries of the scenario axis) whose peaks drive the provisioning;
+    `base_row` is the JEDEC baseline timing row prepended to the
+    worst-bin rows, exactly like the host-side bracket.  Returns
+    {"adaptive": ..., "static": ..., "worst_bin" [n_real],
+    "temp_peak" [n_real]} with both halves reduced via "stats".
+    """
+    if synth is not None:
+        arrival, bank, row, is_write, valid = _synth_streams(synth)
+    out_a = _adaptive_body(n_banks, mlp_window, reorder_plan, backend,
+                           ("stats",), p99_k, bs, arrival, bank, row,
+                           is_write, valid, tables, bins, scns, tcfg,
+                           closed, slacks, caps)
+    # static-worst-case provisioning from the adaptive trajectory's
+    # peaks, guarded by the controller hysteresis (tcfg[2]) — same
+    # arithmetic as the host-side bracket in perf_model
+    peak = out_a["temp_max"][:, :, 0, :n_real].max(axis=(0, 1))
+    worst = jnp.searchsorted(bins, peak + tcfg[2], side="left")
+    tab0 = tables[0]                     # [S+1, (B,) 6], JEDEC last
+    base = jnp.broadcast_to(base_row, tab0.shape[1:])
+    rows = jnp.concatenate([base[None], jnp.take(tab0, worst, axis=0)],
+                           axis=0)
+    out_s = _static_body(n_banks, mlp_window, reorder_plan, backend,
+                         ("stats",), p99_k, bs, arrival, bank, row,
+                         is_write, valid, rows, closed, slacks, caps,
+                         all_valid=synth is not None)
+    return {"adaptive": out_a, "static": out_s, "worst_bin": worst,
+            "temp_peak": peak}
 
 
 def _masked_stats(lat: np.ndarray, valid: np.ndarray):
@@ -498,6 +725,29 @@ def _masked_stats(lat: np.ndarray, valid: np.ndarray):
     return mean, vlo + (vhi - vlo) * frac
 
 
+def _plan_entries(windows: np.ndarray, policies, arrival, valid,
+                  n: int) -> tuple:
+    """Static reorder plan: `(window, eff, policy idx)` per window
+    group.  With concrete [T, N] arrivals the buffer shrinks to the
+    EXACT `_eff_window` bound of the group's largest slack (a larger
+    slack can only need a deeper buffer, so one bound covers the
+    group); without them (an unmaterialized `SynthSpec`) it stays at
+    the nominal window."""
+    groups: dict[int, list[int]] = {}
+    for i, w in enumerate(windows.tolist()):
+        if w > 1:
+            groups.setdefault(int(w), []).append(i)
+    plan = []
+    for w, ix in sorted(groups.items()):
+        if arrival is None:
+            eff = min(w, n)
+        else:
+            slack = max(float(policies[i].reorder_slack_ns) for i in ix)
+            eff = _eff_window(arrival, valid, w, slack)
+        plan.append((w, eff, tuple(ix)))
+    return tuple(plan)
+
+
 @dataclasses.dataclass
 class SimEngine:
     """Facade that compiles a `SimSpec` into one replay dispatch —
@@ -506,37 +756,83 @@ class SimEngine:
 
     Knobs (see module docstring):
 
-      backend — "scan" (default: vmapped lax.scan), "pallas" /
-                "pallas_interpret" (the repro.kernels.replay kernel;
-                plain "pallas" falls back to interpret mode off-TPU),
-                "auto" (pallas on TPU, scan elsewhere).  Adaptive
-                campaigns always replay via the scan.
+      backend — "scan" (default: vmapped lax.scan), "merged"
+                (FR-FCFS fused into the replay scan — no [T, P, N]
+                streams materialize), "pallas" / "pallas_interpret"
+                (the repro.kernels.replay kernels, static AND
+                adaptive; plain "pallas" falls back to interpret mode
+                off-TPU), "auto" (the attached `tuner`'s profiled
+                choice, else pallas on TPU / scan elsewhere).
       stats   — "device" (default: in-dispatch reductions, only
                 [grid]-shaped summaries transferred, raw grids gated
                 by SimSpec.collect) or "host" (bit-exact numpy
                 reference, raw grids always materialized).
       reorder — "device" (default: FR-FCFS prepass inside the
                 dispatch) or "host" (retained Python loop in pack()).
+      tuner   — optional `autotune.ReplayTuner`; `autotune(spec)`
+                profiles every candidate (backend, block_rows,
+                fuse_synth) config on the campaign and records the
+                winner per (campaign kind, size bin), which
+                backend="auto" then consults.
+
+    A `SimSpec` whose trace axis is a declarative `dram_sim.SynthSpec`
+    fuses the trace synthesis INTO the dispatch (unless the resolved
+    config says otherwise): synthesis + FR-FCFS + replay + statistics
+    are then truly one launch.
     """
 
     dispatch_count: int = 0
     backend: str = "scan"
     stats: str = "device"
     reorder: str = "device"
+    tuner: "ReplayTuner | None" = None
 
     def __post_init__(self):
-        assert self.backend in ("auto", "scan", "pallas",
+        assert self.backend in ("auto", "scan", "merged", "pallas",
                                 "pallas_interpret"), self.backend
         assert self.stats in ("device", "host"), self.stats
         assert self.reorder in ("device", "host"), self.reorder
 
-    def _backend(self) -> str:
+    def _tuner_key(self, spec: SimSpec):
+        """(campaign-kind unit, request count) — the tuner table key."""
+        n = (spec.traces.n if spec.synth is not None else
+             max(int(np.asarray(t.arrival).shape[0])
+                 for t in spec.traces))
+        adaptive = spec.thermal is not None
+        banked = (spec.timings.ndim - (1 if adaptive else 0)) == 3
+        return replay_unit(adaptive, banked), n
+
+    def _resolve(self, spec: SimSpec,
+                 config: "ReplayConfig | None" = None):
+        """(backend, fuse_synth, block_rows) for one run: an explicit
+        `config` wins; otherwise backend="auto" + an attached tuner
+        answers with the profiled candidate for this campaign's
+        (kind, size) bin — falling back, AdaptiveTable-style, to
+        candidate 0 (the conservative scan default) on unprofiled
+        bins; plain "pallas" degrades to interpret mode off-TPU."""
+        cfg = config
+        if cfg is None and self.backend == "auto" and \
+                self.tuner is not None:
+            cfg = self.tuner.lookup(*self._tuner_key(spec))
+        if cfg is None:
+            backend, fuse, bs = self.backend, True, None
+        else:
+            backend, fuse, bs = cfg.backend, cfg.fuse_synth, \
+                cfg.block_rows
         on_tpu = jax.default_backend() == "tpu"
-        if self.backend == "auto":
-            return "pallas" if on_tpu else "scan"
-        if self.backend == "pallas" and not on_tpu:
-            return "pallas_interpret"     # CPU fallback: kernel body
-        return self.backend
+        if backend == "auto":
+            backend = "pallas" if on_tpu else "scan"
+        if backend == "pallas" and not on_tpu:
+            backend = "pallas_interpret"  # CPU fallback: kernel body
+        return backend, fuse, bs
+
+    def _backend(self) -> str:
+        return self._resolve(
+            SimSpec(traces=(Trace(np.zeros(1, np.float32),
+                                  np.zeros(1, np.int32),
+                                  np.zeros(1, np.int32),
+                                  np.zeros(1, bool)),),
+                    timings=np.zeros((1, 6), np.float32)))[0]
 
     def _inputs(self, spec: SimSpec):
         """(stream arrays ([T,N] fast / [T,P,N] reference), valid,
@@ -544,12 +840,8 @@ class SimEngine:
         if self.reorder == "device":
             arrival, bank, row, is_write, valid, windows, slacks, caps \
                 = spec.pack_device()
-            groups: dict[int, list[int]] = {}
-            for i, w in enumerate(windows.tolist()):
-                if w > 1:
-                    groups.setdefault(int(w), []).append(i)
-            plan = tuple(sorted((w, tuple(ix))
-                                for w, ix in groups.items()))
+            plan = _plan_entries(windows, spec.policies, arrival,
+                                 valid, arrival.shape[1])
         else:
             arrival, bank, row, is_write, valid, _ = spec.pack()
             p = len(spec.policies)
@@ -562,9 +854,68 @@ class SimEngine:
                 jnp.asarray(spec.closed_flags), jnp.asarray(slacks),
                 jnp.asarray(caps), plan)
 
-    def run(self, spec: SimSpec) -> SimResult:
-        (arrival, bank, row, is_write, valid_d, valid, closed, slacks,
-         caps, plan) = self._inputs(spec)
+    def _streams(self, spec: SimSpec, fuse: bool):
+        """Resolve the campaign streams: returns (synth, arrival, bank,
+        row, is_write, valid_device, valid_host, closed, slacks, caps,
+        plan).  When the trace axis is a `SynthSpec` and fusion is on
+        (device reorder only — the host reorder loop needs concrete
+        arrays), the stream slots are scalar placeholders and `synth`
+        carries the static spec into the dispatch; the reorder plan
+        then takes its EXACT buffer caps from the spec's cached
+        materialization when one exists (e.g. warmed by `autotune`) —
+        threefry determinism makes the in-dispatch streams bit-equal
+        to it — and the nominal window otherwise."""
+        synth = spec.synth if (fuse and self.reorder == "device") \
+            else None
+        if synth is None:
+            return (None,) + self._inputs(spec)
+        valid = np.ones((len(synth), synth.n), bool)
+        windows, slacks, caps = spec.policy_knobs()
+        cached = synth._cache.get("traces")
+        arr = (np.stack([np.asarray(t.arrival) for t in cached])
+               if cached is not None else None)
+        plan = _plan_entries(windows, spec.policies, arr, valid,
+                             synth.n)
+        z = jnp.zeros((), jnp.float32)
+        return (synth, z, z, z, z, z, valid,
+                jnp.asarray(spec.closed_flags), jnp.asarray(slacks),
+                jnp.asarray(caps), plan)
+
+    def autotune(self, spec: SimSpec, reps: int = 3) -> "ReplayConfig":
+        """Profile every candidate replay configuration on THIS
+        campaign and record the winner in the tuner's table (persisted
+        to disk), which `backend="auto"` consults on later runs of any
+        same-kind/size campaign.  Creates a platform-default
+        `ReplayTuner` when none is attached.  Materializes a
+        `SynthSpec` trace axis once up front, so the reorder plan gets
+        its exact buffer caps for BOTH the profiled and the later
+        fused runs.  Dispatch accounting stays honest — each profiling
+        run increments `dispatch_count` like any other, so call this
+        during warmup, not inside a measured section."""
+        import time
+        if self.tuner is None:
+            self.tuner = ReplayTuner(platform=jax.default_backend())
+        if spec.synth is not None:
+            spec.trace_tuple()    # warm cache -> exact reorder caps
+        unit, n = self._tuner_key(spec)
+
+        def measure(cfg: "ReplayConfig") -> float:
+            self.run(spec, config=cfg)            # compile + warm
+            best = np.inf
+            for _ in range(max(1, reps)):
+                t0 = time.perf_counter()
+                self.run(spec, config=cfg)
+                best = min(best, time.perf_counter() - t0)
+            return best
+
+        cfg, _ = self.tuner.tune(unit, n, measure)
+        return cfg
+
+    def run(self, spec: SimSpec,
+            config: "ReplayConfig | None" = None) -> SimResult:
+        backend, fuse, bs = self._resolve(spec, config)
+        (synth, arrival, bank, row, is_write, valid_d, valid, closed,
+         slacks, caps, plan) = self._streams(spec, fuse)
         self.dispatch_count += 1
 
         if spec.thermal is None:
@@ -572,8 +923,8 @@ class SimEngine:
                                   if "latencies" in spec.collect else ())
                     if self.stats == "device" else ("lat",))
             out = _replay_grid(
-                spec.n_banks, spec.mlp_window, plan, self._backend(),
-                want, _p99_k(valid), arrival, bank, row, is_write,
+                synth, spec.n_banks, spec.mlp_window, plan, backend,
+                want, _p99_k(valid), bs, arrival, bank, row, is_write,
                 valid_d, jnp.asarray(spec.timings), closed, slacks,
                 caps)
             if self.stats == "host":
@@ -596,8 +947,8 @@ class SimEngine:
         else:
             want = ("lat", "temps", "bins")
         out = _replay_grid_adaptive(
-            spec.n_banks, spec.mlp_window, plan, want, _p99_k(valid),
-            arrival, bank, row, is_write, valid_d,
+            synth, spec.n_banks, spec.mlp_window, plan, backend, want,
+            _p99_k(valid), bs, arrival, bank, row, is_write, valid_d,
             jnp.asarray(spec.timings), jnp.asarray(bins),
             jnp.asarray(scns), jnp.asarray(tcfg), closed, slacks, caps)
 
@@ -632,6 +983,49 @@ class SimEngine:
                          bin_switches=switches,
                          bank_heat=np.asarray(out["bank_heat"]))
 
+    def run_bracket(self, spec: SimSpec, base_row,
+                    n_real: int | None = None,
+                    config: "ReplayConfig | None" = None) -> dict:
+        """The adaptive-vs-static-worst-case bracket
+        (`perf_model.evaluate_adaptive`'s two replay launches) as ONE
+        dispatch: the adaptive campaign runs, its per-scenario
+        temperature peaks round up to worst-case provisioning bins ON
+        DEVICE, and the static campaign replays under those rows in
+        the same launch — with a `SynthSpec` trace axis the synthesis
+        fuses in too, making the whole evaluation `dispatches=1`.
+
+        `spec` must be adaptive with a single table stack; `base_row`
+        is the JEDEC baseline row prepended to the worst-bin rows;
+        `n_real` = number of non-oracle scenarios driving the
+        provisioning (default: all).  Returns numpy dicts
+        {"adaptive", "static", "worst_bin", "temp_peak", "valid"} —
+        "adaptive" carries mean/p99/total + thermal diagnostics +
+        bank_heat, "static" mean/p99/total over the [1 + n_real]
+        timing rows."""
+        assert spec.thermal is not None and spec.timings.shape[0] == 1, \
+            "run_bracket needs an adaptive spec with ONE table stack"
+        backend, fuse, bs = self._resolve(spec, config)
+        (synth, arrival, bank, row, is_write, valid_d, valid, closed,
+         slacks, caps, plan) = self._streams(spec, fuse)
+        scns, bins, tcfg = spec.thermal.pack()
+        n_real = len(scns) if n_real is None else int(n_real)
+        self.dispatch_count += 1
+        out = _bracket_grid(
+            synth, spec.n_banks, spec.mlp_window, plan, backend,
+            _p99_k(valid), n_real, bs, arrival, bank, row, is_write,
+            valid_d, jnp.asarray(spec.timings), jnp.asarray(bins),
+            jnp.asarray(scns), jnp.asarray(tcfg), closed, slacks, caps,
+            jnp.asarray(base_row, jnp.float32))
+
+        def host(d):
+            return {k: np.asarray(v) for k, v in d.items()}
+
+        return {"adaptive": host(out["adaptive"]),
+                "static": host(out["static"]),
+                "worst_bin": np.asarray(out["worst_bin"]),
+                "temp_peak": np.asarray(out["temp_peak"]),
+                "valid": valid}
+
 
 _DEFAULT: SimEngine | None = None
 
@@ -646,4 +1040,5 @@ def default_engine() -> SimEngine:
 
 
 __all__ = ["Policy", "OPEN_FCFS", "SimSpec", "SimResult", "SimEngine",
-           "ThermalSpec", "default_engine"]
+           "SynthSpec", "ThermalSpec", "ReplayConfig", "ReplayTuner",
+           "default_engine"]

@@ -20,6 +20,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.dram_sim import check_prefix_valid
 from repro.kernels.replay import ref, replay
 
 
@@ -44,6 +45,7 @@ def replay_grid(arrival, bank, row, is_write, valid, timings, closed,
     [T, P, S, N], total [T, P, S]) — same contract as the lax.scan
     path (`ref.replay_grid`).
     """
+    check_prefix_valid(valid, "replay_grid")
     if impl == "auto":
         impl = "pallas" if jax.default_backend() == "tpu" else "ref"
     if impl == "ref":
@@ -80,4 +82,107 @@ def replay_grid(arrival, bank, row, is_write, valid, timings, closed,
     return lat, total[:, :s].reshape(t, p, s)
 
 
-__all__ = ["replay_grid"]
+def _adaptive_bs(length: int, bs: int | None) -> int:
+    """Lane-block size for an adaptive launch: thermal campaigns often
+    have far fewer than 128 (table, scenario) lanes — padding a K*C=8
+    campaign to the full 128-lane block would do 16x the work — so
+    sub-128 lane counts round up to a multiple of 8 instead."""
+    if bs is not None:
+        return bs
+    return (replay.BLOCK_ROWS if length >= replay.BLOCK_ROWS
+            else -(-length // 8) * 8)
+
+
+def replay_grid_adaptive(arrival, bank, row, is_write, valid, tables,
+                         bins, scns, tcfg, closed, n_banks: int = 8,
+                         mlp_window: int = 8, impl: str = "auto",
+                         bs: int | None = None, emit_raw: bool = False):
+    """Adaptive-campaign counterpart of `replay_grid`: arrival/bank/
+    row/is_write: [T, P, N]; valid: [T, N]; tables: [K, S+1, 6] or
+    per-bank [K, S+1, banks, 6] (JEDEC fallback row last); bins: [S];
+    scns: [C, SCN_COLS]; tcfg: [6]; closed: [P].
+
+    The kernel lane axis carries the flattened (table k, scenario c)
+    pairs, l = k * C + c: the table tile repeats each stack C times
+    and the scenario tile is tiled K times, so every lane replays the
+    same (trace, policy) stream under its own closed thermal loop.
+
+    Returns (lat [T, P, K, C, N], total [T, P, K, C], temps, bin_sel,
+    bank_heat [T, P, K, C, banks], diag):
+
+      * kernel path — diag = (temp_max, temp_mean, bin_switches), all
+        [T, P, K, C], reduced ON-DEVICE in the kernel's own
+        accumulator tiles; temps/bin_sel are None unless `emit_raw`
+        (the O(grid * N) raw traces never leave VMEM otherwise).
+      * ref path — temps/bin_sel always populated (the scan emits
+        them anyway), diag = None (the engine reduces downstream).
+    """
+    check_prefix_valid(valid, "replay_grid_adaptive")
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        lat, total, temps, bin_sel, bank_heat = ref.replay_grid_adaptive(
+            arrival, bank, row, is_write, valid, tables, bins, scns,
+            tcfg, closed, n_banks, mlp_window)
+        return lat, total, temps, bin_sel, bank_heat, None
+
+    t, p, n = arrival.shape
+    tab = jnp.asarray(tables, jnp.float32)
+    banked = tab.ndim == 4
+    k = tab.shape[0]
+    c = scns.shape[0]
+    length = k * c
+    bs = _adaptive_bs(length, bs)
+    g = t * p
+
+    def cells(x, dtype):
+        return x.astype(dtype).reshape(g, n)
+
+    arrival_g = cells(arrival, jnp.float32)
+    bank_g = cells(bank, jnp.int32)
+    row_g = cells(row, jnp.int32)
+    wr_g = cells(is_write, jnp.int32)
+    val_g = jnp.broadcast_to(jnp.asarray(valid).astype(jnp.int32)
+                             [:, None, :], (t, p, n)).reshape(g, n)
+    closed_col = jnp.broadcast_to(
+        jnp.asarray(closed).astype(jnp.float32)[None, :],
+        (t, p)).reshape(g, 1)
+    # [K, S+1(, B), 6] -> [(B,) S+1, 6, K] -> repeat C: lane k*C+c
+    tab_t = (tab.transpose(2, 1, 3, 0) if banked else
+             tab.transpose(1, 2, 0))
+    tab_t = _pad_rows(jnp.repeat(tab_t, c, axis=-1), bs)
+    # [C, SCN_COLS] -> [SCN_COLS, C] tiled K times: lane k*C+c
+    scn_t = _pad_rows(jnp.tile(jnp.asarray(scns, jnp.float32).T,
+                               (1, k)), bs)
+    b_arr = jnp.asarray(bins, jnp.float32)
+    if b_arr.shape[0] == 0:
+        # empty bin-edge set (JEDEC-only table): a +inf row keeps the
+        # in-kernel `sum(bins < sensed)` at the scan's searchsorted(0)
+        b_arr = jnp.full((1,), jnp.inf, jnp.float32)
+    bins_t = jnp.broadcast_to(b_arr[:, None],
+                              (b_arr.shape[0], tab_t.shape[-1]))
+    tcfg_col = jnp.asarray(tcfg, jnp.float32)[:, None]
+
+    out = replay.adaptive_blocks(
+        closed_col, arrival_g, bank_g, row_g, wr_g, val_g, tab_t,
+        scn_t, bins_t, tcfg_col, n_banks=n_banks,
+        mlp_window=mlp_window, interpret=(impl == "pallas_interpret"),
+        bs=bs, emit_raw=emit_raw)
+    lat, total, tmax, tmean, switches, bank_heat = out[:6]
+
+    def grid4(x):                       # [G, L_pad] -> [T, P, K, C]
+        return x[:, :length].reshape(t, p, k, c)
+
+    def grid5(x):                       # [G, N, L_pad] -> [T,P,K,C,N]
+        return (x[:, :, :length].reshape(t, p, n, k, c)
+                .transpose(0, 1, 3, 4, 2))
+
+    diag = (grid4(tmax), grid4(tmean), grid4(switches))
+    heat = (bank_heat[:, :, :length].reshape(t, p, n_banks, k, c)
+            .transpose(0, 1, 3, 4, 2))
+    temps = grid5(out[6]) if emit_raw else None
+    bin_sel = grid5(out[7]) if emit_raw else None
+    return grid5(lat), grid4(total), temps, bin_sel, heat, diag
+
+
+__all__ = ["replay_grid", "replay_grid_adaptive"]

@@ -1,7 +1,7 @@
-"""lax.scan oracle for the replay kernel: the vmapped
-`repro.core.dram_sim.replay_one` path evaluated over the same
-flattened-cell layout the kernel uses.  Used for CPU execution and as
-the parity reference for the Pallas kernel."""
+"""lax.scan oracles for the replay kernels: the vmapped
+`repro.core.dram_sim.replay_one` / `replay_adaptive` paths evaluated
+over the same flattened-cell layouts the kernels use.  Used for CPU
+execution and as the parity references for the Pallas kernels."""
 
 from __future__ import annotations
 
@@ -10,7 +10,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.dram_sim import replay_one
+from repro.core.dram_sim import replay_adaptive, replay_one
 
 
 @functools.partial(jax.jit, static_argnames=("n_banks", "mlp_window"))
@@ -28,3 +28,26 @@ def replay_grid(arrival, bank, row, is_write, valid, timings, closed,
     f_tps = jax.vmap(f_ps, in_axes=(0, 0, 0, 0, 0, None, None))
     return f_tps(arrival, bank, row, is_write,
                  jnp.asarray(valid, bool), timings, closed)
+
+
+@functools.partial(jax.jit, static_argnames=("n_banks", "mlp_window"))
+def replay_grid_adaptive(arrival, bank, row, is_write, valid, tables,
+                         bins, scns, tcfg, closed, n_banks: int = 8,
+                         mlp_window: int = 8):
+    """Adaptive oracle: `dram_sim.replay_adaptive` vmapped over the
+    (trace, policy, table stack, scenario) axes.  arrival/bank/row/
+    is_write: [T, P, N]; valid: [T, N]; tables: [K, S+1, 6] or
+    per-bank [K, S+1, banks, 6]; bins: [S]; scns: [C, SCN_COLS];
+    tcfg: [6]; closed: [P] -> (latency [T, P, K, C, N], total
+    [T, P, K, C], temps [T, P, K, C, N], bins [T, P, K, C, N] int32,
+    bank_heat [T, P, K, C, banks])."""
+    def one(a, b, r, w, v, tbl, scn, c):
+        return replay_adaptive(a, b, r, w, v, tbl, bins, scn, tcfg, c,
+                               n_banks, mlp_window)
+
+    f_c = jax.vmap(one, in_axes=(None,) * 5 + (None, 0, None))
+    f_kc = jax.vmap(f_c, in_axes=(None,) * 5 + (0, None, None))
+    f_pkc = jax.vmap(f_kc, in_axes=(0, 0, 0, 0, None, None, None, 0))
+    f_tpkc = jax.vmap(f_pkc, in_axes=(0, 0, 0, 0, 0, None, None, None))
+    return f_tpkc(arrival, bank, row, is_write,
+                  jnp.asarray(valid, bool), tables, scns, closed)

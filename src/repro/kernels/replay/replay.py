@@ -45,6 +45,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.dram_sim import service_math
+from repro.core.power import access_energy_from_terms
+from repro.core.thermal import ambient_at
 
 # Timing rows per program, on the 128-lane minor axis.
 BLOCK_ROWS = 128
@@ -113,6 +115,227 @@ def _kernel(closed_ref, arr_ref, bank_ref, row_ref, wr_ref, val_ref,
     jax.lax.fori_loop(0, n_req, body, 0)
     total_ref[0, :] = jnp.maximum(jnp.max(rdy_s[...], axis=0),
                                   jnp.max(wrd_s[...], axis=0))
+
+
+def _adaptive_kernel(closed_ref, arr_ref, bank_ref, row_ref, wr_ref,
+                     val_ref, tim_ref, scn_ref, bins_ref, tcfg_ref,
+                     *refs, n_banks: int, mlp_window: int, n_req: int,
+                     banked: bool, emit_raw: bool):
+    """Closed-loop (adaptive) replay cell: the static kernel's layout
+    plus the `dram_sim.AdaptiveState` carried in VMEM scratch — per-
+    bank RC heat [n_banks, lanes], current bin + last arrival [1,
+    lanes] — with the per-request timing row RE-SELECTED in-kernel by
+    a one-hot bin(×bank) mask over the [S+1(, banks), 6, lanes] table
+    tile.  Each lane replays the same (trace, policy) stream under a
+    different (table stack, thermal scenario) pair; bin selection
+    mirrors `dram_sim.replay_adaptive` operation for operation:
+    up-switch immediate, down-switch hysteretic (`sum(bins < x)` IS
+    `searchsorted(bins, x, 'left')`), index len(bins) = the JEDEC
+    fallback row last in the stack.  The temp_max / temp_mean /
+    bin_switches diagnostics accumulate directly in their output
+    tiles, so the O(N * lanes) raw temperature/bin traces never leave
+    VMEM unless `emit_raw` asks for them."""
+    if emit_raw:
+        (lat_ref, total_ref, tmax_ref, tmean_ref, sw_ref, heat_ref,
+         traw_ref, braw_ref, open_s, act_s, wrd_s, rdy_s, ring_s,
+         heat_s, bin_s, tprev_s) = refs
+    else:
+        (lat_ref, total_ref, tmax_ref, tmean_ref, sw_ref, heat_ref,
+         open_s, act_s, wrd_s, rdy_s, ring_s, heat_s, bin_s,
+         tprev_s) = refs
+    bs = lat_ref.shape[-1]
+    n_bins = tim_ref.shape[-3]                 # S+1 (JEDEC row last)
+    closed = closed_ref[0, 0] > 0.5
+    scn = scn_ref[...]                         # [SCN_COLS, bs]
+    bins_t = bins_ref[...]                     # [S(pad), bs]
+    tau, c_heat = tcfg_ref[0, 0], tcfg_ref[1, 0]
+    e_burst, e_act_pre, p_as = (tcfg_ref[3, 0], tcfg_ref[4, 0],
+                                tcfg_ref[5, 0])
+    hyst = tcfg_ref[2, 0] * scn[8]             # per-scenario scale [bs]
+    bank_iota = jax.lax.broadcasted_iota(jnp.int32, (n_banks, bs), 0)
+    ring_iota = jax.lax.broadcasted_iota(jnp.int32, (mlp_window, bs), 0)
+    bin_iota = jax.lax.broadcasted_iota(jnp.int32, (n_bins, bs), 0)
+
+    # scratch persists across grid steps — re-arm controller + thermal
+    open_s[...] = jnp.full((n_banks, bs), -1.0, jnp.float32)
+    act_s[...] = jnp.zeros((n_banks, bs), jnp.float32)
+    wrd_s[...] = jnp.zeros((n_banks, bs), jnp.float32)
+    rdy_s[...] = jnp.zeros((n_banks, bs), jnp.float32)
+    ring_s[...] = jnp.zeros((mlp_window, bs), jnp.float32)
+    heat_s[...] = jnp.zeros((n_banks, bs), jnp.float32)
+    bin_s[...] = jnp.zeros((1, bs), jnp.int32)
+    tprev_s[...] = jnp.zeros((1, bs), jnp.float32)
+    tmax_ref[...] = jnp.full((1, bs), -jnp.inf, jnp.float32)
+    tmean_ref[...] = jnp.zeros((1, bs), jnp.float32)   # sum until /cnt
+    sw_ref[...] = jnp.zeros((1, bs), jnp.int32)
+
+    def body(k, _):
+        t = arr_ref[0, k]
+        b = bank_ref[0, k]
+        rf = row_ref[0, k].astype(jnp.float32)
+        w = wr_ref[0, k] > 0
+        v = val_ref[0, k] > 0
+        bm = bank_iota == b
+        rm = ring_iota == (k % mlp_window)
+
+        # thermal loop: decay toward ambient over the arrival gap,
+        # sense ambient + summed bank overheat, re-select the bin
+        tprev = tprev_s[0, :]
+        dt = jnp.maximum(t - tprev, 0.0)
+        heat = heat_s[...] * jnp.exp(-dt / tau)[None, :]
+        sensed = ambient_at(scn, t) + jnp.sum(heat, axis=0)
+        cur = bin_s[0, :]
+        up = jnp.sum((bins_t < sensed[None, :]).astype(jnp.int32),
+                     axis=0)
+        down = jnp.sum((bins_t < (sensed + hyst)[None, :])
+                       .astype(jnp.int32), axis=0)
+        new_bin = jnp.maximum(up, jnp.minimum(cur, down))
+
+        # timing row select: one-hot bin sublane mask (x bank mask on
+        # per-bank tiles), same masked-reduce idiom as the bank state
+        sel = bin_iota == new_bin[None, :]               # [S+1, bs]
+        if banked:
+            m = bm[:, None, :] & sel[None, :, :]         # [B, S+1, bs]
+            tim_b = jnp.sum(jnp.where(m[:, :, None, :], tim_ref[...],
+                                      0.0), axis=(0, 1))   # [6, bs]
+        else:
+            tim_b = jnp.sum(jnp.where(sel[:, None, :], tim_ref[...],
+                                      0.0), axis=0)         # [6, bs]
+        tc = (tim_b[0], tim_b[1], tim_b[2], tim_b[3], tim_b[5])
+
+        open_b = jnp.sum(jnp.where(bm, open_s[...], 0.0), axis=0)
+        act_b = jnp.sum(jnp.where(bm, act_s[...], 0.0), axis=0)
+        wrd_b = jnp.sum(jnp.where(bm, wrd_s[...], 0.0), axis=0)
+        rdy_b = jnp.sum(jnp.where(bm, rdy_s[...], 0.0), axis=0)
+        gate = jnp.sum(jnp.where(rm, ring_s[...], 0.0), axis=0)
+
+        (row_latched, act_new, wrd_new, rdy_new, done, lat,
+         is_hit) = service_math(t, gate, open_b, act_b, wrd_b, rdy_b,
+                                rf, w, tc[0], tc[1], tc[2], tc[3],
+                                tc[4], closed)
+
+        # closed loop: deposit the access energy of the timings we
+        # just SELECTED as heat on the accessed bank (shared formula)
+        miss = 1.0 - is_hit.astype(jnp.float32)
+        energy = access_energy_from_terms(e_burst, e_act_pre, p_as,
+                                          miss, tc[1])
+
+        upd = bm & v
+        open_s[...] = jnp.where(upd, row_latched, open_s[...])
+        act_s[...] = jnp.where(upd, act_new, act_s[...])
+        wrd_s[...] = jnp.where(upd, wrd_new, wrd_s[...])
+        rdy_s[...] = jnp.where(upd, rdy_new, rdy_s[...])
+        ring_s[...] = jnp.where(rm & v, done, ring_s[...])
+        heat_s[...] = jnp.where(
+            v, heat + jnp.where(bm, c_heat * energy, 0.0), heat_s[...])
+        bin_s[0, :] = jnp.where(v, new_bin, cur)
+        tprev_s[0, :] = jnp.where(v, t, tprev)
+
+        # diagnostics accumulate in their own output tiles
+        tmax_ref[0, :] = jnp.maximum(tmax_ref[0, :],
+                                     jnp.where(v, sensed, -jnp.inf))
+        tmean_ref[0, :] = tmean_ref[0, :] + jnp.where(v, sensed, 0.0)
+        sw_ref[0, :] = sw_ref[0, :] + (
+            (new_bin != cur) & v & (k > 0)).astype(jnp.int32)
+        lat_ref[0, k, :] = jnp.where(v, lat, 0.0)
+        if emit_raw:
+            traw_ref[0, k, :] = jnp.where(v, sensed, 0.0)
+            braw_ref[0, k, :] = jnp.where(v, new_bin, -1)
+        return 0
+
+    jax.lax.fori_loop(0, n_req, body, 0)
+    total_ref[0, :] = jnp.maximum(jnp.max(rdy_s[...], axis=0),
+                                  jnp.max(wrd_s[...], axis=0))
+    cnt = jnp.sum(val_ref[0, :]).astype(jnp.float32)
+    tmean_ref[0, :] = tmean_ref[0, :] / cnt
+    heat_ref[0, :, :] = heat_s[...]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_banks", "mlp_window",
+                                    "interpret", "bs", "emit_raw"))
+def adaptive_blocks(closed_col, arrival, bank, row, is_write, valid,
+                    tables_t, scn_t, bins_t, tcfg_col,
+                    n_banks: int = 8, mlp_window: int = 8,
+                    interpret: bool = False, bs: int = BLOCK_ROWS,
+                    emit_raw: bool = False):
+    """Adaptive-campaign kernel launch.  closed_col: [G, 1] float32;
+    arrival: [G, N] float32; bank/row/is_write/valid: [G, N] int32;
+    tables_t: [S+1, 6, L] (or PER-BANK [n_banks, S+1, 6, L]) — lane l
+    holds the table stack of its (table, scenario) pair; scn_t:
+    [SCN_COLS, L] scenario rows per lane; bins_t: [S(>=1, inf-padded),
+    L]; tcfg_col: [6, 1] `ThermalConfig.as_row`.  L % bs == 0.
+    Returns (lat [G, N, L], total [G, L], tmax [G, L], tmean [G, L],
+    switches [G, L] int32, bank_heat [G, n_banks, L]) plus, when
+    `emit_raw`, the raw (temps [G, N, L], bins [G, N, L] int32)."""
+    g, n = arrival.shape
+    banked = tables_t.ndim == 4
+    length = tables_t.shape[-1]
+    n_bins = tables_t.shape[-3]
+    assert tables_t.shape[-2] == 6 and length % bs == 0, \
+        (tables_t.shape, bs)
+    if banked:
+        assert tables_t.shape[0] == n_banks, (tables_t.shape, n_banks)
+    grid = (g, length // bs)
+    kernel = functools.partial(_adaptive_kernel, n_banks=n_banks,
+                               mlp_window=mlp_window, n_req=n,
+                               banked=banked, emit_raw=emit_raw)
+    tab_spec = (pl.BlockSpec((n_banks, n_bins, 6, bs),
+                             lambda i, j: (0, 0, 0, j))
+                if banked else
+                pl.BlockSpec((n_bins, 6, bs), lambda i, j: (0, 0, j)))
+    s_bins = bins_t.shape[0]
+    out_specs = [
+        pl.BlockSpec((1, n, bs), lambda i, j: (i, 0, j)),   # lat
+        pl.BlockSpec((1, bs), lambda i, j: (i, j)),         # total
+        pl.BlockSpec((1, bs), lambda i, j: (i, j)),         # tmax
+        pl.BlockSpec((1, bs), lambda i, j: (i, j)),         # tmean
+        pl.BlockSpec((1, bs), lambda i, j: (i, j)),         # switches
+        pl.BlockSpec((1, n_banks, bs), lambda i, j: (i, 0, j)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((g, n, length), jnp.float32),
+        jax.ShapeDtypeStruct((g, length), jnp.float32),
+        jax.ShapeDtypeStruct((g, length), jnp.float32),
+        jax.ShapeDtypeStruct((g, length), jnp.float32),
+        jax.ShapeDtypeStruct((g, length), jnp.int32),
+        jax.ShapeDtypeStruct((g, n_banks, length), jnp.float32),
+    ]
+    if emit_raw:
+        out_specs += [pl.BlockSpec((1, n, bs), lambda i, j: (i, 0, j)),
+                      pl.BlockSpec((1, n, bs), lambda i, j: (i, 0, j))]
+        out_shape += [jax.ShapeDtypeStruct((g, n, length), jnp.float32),
+                      jax.ShapeDtypeStruct((g, n, length), jnp.int32)]
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),      # closed
+            pl.BlockSpec((1, n), lambda i, j: (i, 0)),      # arrival
+            pl.BlockSpec((1, n), lambda i, j: (i, 0)),      # bank
+            pl.BlockSpec((1, n), lambda i, j: (i, 0)),      # row
+            pl.BlockSpec((1, n), lambda i, j: (i, 0)),      # is_write
+            pl.BlockSpec((1, n), lambda i, j: (i, 0)),      # valid
+            tab_spec,                                       # table tile
+            pl.BlockSpec((scn_t.shape[0], bs), lambda i, j: (0, j)),
+            pl.BlockSpec((s_bins, bs), lambda i, j: (0, j)),  # bins
+            pl.BlockSpec((6, 1), lambda i, j: (0, 0)),      # tcfg
+        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=[
+            pltpu.VMEM((n_banks, bs), jnp.float32),   # open_row
+            pltpu.VMEM((n_banks, bs), jnp.float32),   # act_time
+            pltpu.VMEM((n_banks, bs), jnp.float32),   # wr_done
+            pltpu.VMEM((n_banks, bs), jnp.float32),   # ready
+            pltpu.VMEM((mlp_window, bs), jnp.float32),  # done_ring
+            pltpu.VMEM((n_banks, bs), jnp.float32),   # RC bank heat
+            pltpu.VMEM((1, bs), jnp.int32),           # current bin
+            pltpu.VMEM((1, bs), jnp.float32),         # last arrival
+        ],
+        interpret=interpret,
+    )(closed_col, arrival, bank, row, is_write, valid, tables_t,
+      scn_t, bins_t, tcfg_col)
 
 
 @functools.partial(jax.jit,

@@ -1,15 +1,18 @@
 """Replay Pallas kernel (interpret mode) vs the vmapped lax.scan
 oracle: campaign-grid parity across page policies, ragged padding and
-timing-row blocking, plus the SimEngine backend plumbing."""
+timing-row blocking, the adaptive (closed thermal loop) kernel with
+its on-device diagnostics, plus the SimEngine backend plumbing."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import dram_sim
+from repro.core import dram_sim, sim_engine
 from repro.core.dram_sim import OPEN_FCFS, Policy
 from repro.core.sim_engine import SimEngine, SimSpec
+from repro.core.thermal import (ThermalConfig, ThermalSpec, diurnal,
+                                stack_scenarios, steady)
 from repro.core.timing import ALDRAM_55C_EVAL, DDR3_1600, stack_timing
 from repro.kernels.replay import ops as replay_ops
 
@@ -91,6 +94,85 @@ class TestReplayKernel:
                                        np.asarray(t_ref), rtol=1e-5)
 
 
+def _adaptive_inputs(t=2, p=2, n=96, k=2, s=2, banked=False, seed=0):
+    """Adaptive-campaign grid: streams as in `_grid_inputs` (ragged
+    valid prefixes) plus table stacks / bin edges / scenario rows /
+    thermal-config row."""
+    arr, bank, row, wr, val, _, closed = _grid_inputs(t, p, n, s=1,
+                                                      seed=seed)
+    closed = closed[:p]
+    # K stacks of S bin rows + JEDEC fallback, optionally per-bank
+    # (FLY-DRAM spatial variation: each bank gets its own scaling)
+    stacks = []
+    for j in range(k):
+        rows = [DDR3_1600.scaled(f, f, f, f).as_row()
+                for f in np.linspace(0.7 + 0.05 * j, 0.9, s)]
+        rows.append(DDR3_1600.as_row())
+        tab = np.stack(rows)                          # [S+1, 6]
+        if banked:
+            scale = np.linspace(1.0, 1.1, 8)[None, :, None]
+            tab = tab[:, None, :] * scale             # [S+1, B, 6]
+        stacks.append(tab)
+    tables = np.stack(stacks).astype(np.float32)
+    bins = np.linspace(55.0, 85.0, s).astype(np.float32)
+    scns = stack_scenarios((steady(48.0),
+                            diurnal(40.0, 90.0, period_ns=2.0e4)))
+    tcfg = ThermalConfig(tau_ns=5.0e3, c_heat=2.0e-4).as_row()
+    return (arr, bank, row, wr, val, jnp.asarray(tables),
+            jnp.asarray(bins), jnp.asarray(scns), jnp.asarray(tcfg),
+            closed)
+
+
+class TestAdaptiveKernel:
+    @pytest.mark.parametrize("banked", [False, True],
+                             ids=["per-module", "per-bank"])
+    def test_matches_scan_oracle_ragged(self, banked):
+        """Interpret-mode adaptive kernel vs the lax.scan reference on
+        a ragged campaign (trace 1 is half padding), per-module and
+        per-bank table stacks alike — raw latencies, temperature and
+        bin traces, bank heat, and the ON-DEVICE diagnostics."""
+        args = _adaptive_inputs(t=2, p=2, n=96, k=2, s=2, banked=banked)
+        l_ref, tot_ref, temps_ref, bins_ref, heat_ref, diag_ref = \
+            replay_ops.replay_grid_adaptive(*args, impl="ref")
+        assert diag_ref is None
+        l_pl, tot_pl, temps_pl, bins_pl, heat_pl, diag = \
+            replay_ops.replay_grid_adaptive(*args,
+                                            impl="pallas_interpret",
+                                            bs=8, emit_raw=True)
+        np.testing.assert_allclose(np.asarray(l_pl), np.asarray(l_ref),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(tot_pl),
+                                   np.asarray(tot_ref), rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(temps_pl),
+                                   np.asarray(temps_ref), rtol=1e-5,
+                                   atol=1e-4)
+        assert np.array_equal(np.asarray(bins_pl), np.asarray(bins_ref))
+        np.testing.assert_allclose(np.asarray(heat_pl),
+                                   np.asarray(heat_ref), rtol=1e-5,
+                                   atol=1e-4)
+        # the kernel's in-VMEM diagnostics must agree with the host
+        # reduction over the ref path's raw traces
+        valid = args[4]
+        tmax_h, tmean_h, sw_h = sim_engine._device_thermal_diag(
+            temps_ref, bins_ref, valid)
+        tmax_k, tmean_k, sw_k = diag
+        np.testing.assert_allclose(np.asarray(tmax_k),
+                                   np.asarray(tmax_h), rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(tmean_k),
+                                   np.asarray(tmean_h), rtol=1e-4)
+        assert np.array_equal(np.asarray(sw_k), np.asarray(sw_h))
+
+    def test_adaptive_block_size_invariance(self):
+        args = _adaptive_inputs(t=1, p=1, n=64, k=2, s=2)
+        outs = [replay_ops.replay_grid_adaptive(
+                    *args, impl="pallas_interpret", bs=bs)
+                for bs in (4, 8)]
+        for a, b in zip(outs[0][:2], outs[1][:2]):
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(outs[0][5], outs[1][5]):
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
 class TestEngineBackend:
     def test_pallas_backend_passes_parity_suite(self):
         """SimEngine(backend='pallas') — interpret fallback off-TPU —
@@ -131,16 +213,37 @@ class TestEngineBackend:
                 jax.random.PRNGKey(2), 64),), timings=DDR3_1600))
         assert calls["replay"] == 1
 
-    def test_adaptive_campaign_falls_back_to_scan(self):
-        """The thermal axis has no Pallas kernel: backend='pallas'
-        must still run the adaptive campaign (via the scan)."""
-        from repro.core.thermal import (ThermalConfig, ThermalSpec,
-                                        steady)
-        stack = stack_timing([ALDRAM_55C_EVAL, DDR3_1600])
-        res = SimEngine(backend="pallas").run(SimSpec(
-            traces=(dram_sim.synth_trace(jax.random.PRNGKey(3), 64),),
+    def test_adaptive_campaign_runs_kernel_with_scan_parity(self,
+                                                            monkeypatch):
+        """backend='pallas' routes the adaptive (thermal) campaign
+        through the adaptive kernel — no scan fallback — and its
+        stats match the scan backend's, FR-FCFS reorder included."""
+        calls = {"adaptive": 0}
+        real = replay_ops.replay_grid_adaptive
+
+        def spy(*a, **k):
+            calls["adaptive"] += 1
+            return real(*a, **k)
+
+        monkeypatch.setattr(replay_ops, "replay_grid_adaptive", spy)
+        stack = np.stack([ALDRAM_55C_EVAL.as_row(),
+                          DDR3_1600.as_row()])[None]    # [K=1, S+1, 6]
+        spec = SimSpec(
+            traces=(dram_sim.synth_trace(jax.random.PRNGKey(3), 72),
+                    dram_sim.synth_trace(jax.random.PRNGKey(4), 56)),
             timings=stack,
-            thermal=ThermalSpec(scenarios=(steady(40.0),),
-                                temp_bins=(55.0,),
-                                config=ThermalConfig(c_heat=0.0))))
-        assert res.mean_latency_ns.shape == (1, 1, 1, 1)
+            policies=(OPEN_FCFS, Policy(reorder_window=4)),
+            thermal=ThermalSpec(
+                scenarios=(steady(48.0),
+                           diurnal(40.0, 90.0, period_ns=2.0e4)),
+                temp_bins=(55.0,),
+                config=ThermalConfig(tau_ns=5.0e3, c_heat=2.0e-4)))
+        res_pl = SimEngine(backend="pallas").run(spec)
+        assert calls["adaptive"] >= 1, "adaptive kernel never invoked"
+        res_sc = SimEngine().run(spec)
+        for f in ("mean_latency_ns", "p99_latency_ns", "total_ns",
+                  "temp_max", "temp_mean", "bank_heat"):
+            np.testing.assert_allclose(getattr(res_pl, f),
+                                       getattr(res_sc, f), rtol=1e-5,
+                                       atol=1e-4, err_msg=f)
+        assert np.array_equal(res_pl.bin_switches, res_sc.bin_switches)
