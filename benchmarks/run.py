@@ -109,7 +109,8 @@ def main() -> None:
     from benchmarks import (fig2_refresh, fig2_timing, fig3_population,
                             fig4_system, fig_bank, fleet_bench, framework,
                             multi_timing, power_bench, repeatability,
-                            roofline, sim_bench, thermal_bench)
+                            roofline, sim_bench, thermal_bench,
+                            traffic_bench)
 
     benches = {
         "fig2_refresh": fig2_refresh.run,
@@ -124,6 +125,7 @@ def main() -> None:
         "repeatability": repeatability.run,
         "multi_timing": multi_timing.run,
         "fleet_bench": fleet_bench.run,
+        "traffic_bench": traffic_bench.run,
         "framework": framework.run,
         "roofline": roofline.run,
     }
@@ -154,7 +156,8 @@ def main() -> None:
                        error=err)
     if args.baseline:
         regressions = _compare_baseline(measured, args.baseline,
-                                        args.baseline_factor)
+                                        args.baseline_factor,
+                                        fast=args.fast)
         if regressions:
             raise SystemExit(f"wall-time regressions: {regressions}")
     if failed:
@@ -162,11 +165,14 @@ def main() -> None:
 
 
 def _compare_baseline(measured: dict[str, float], baseline_dir: str,
-                      factor: float) -> list[str]:
+                      factor: float, fast: bool = False) -> list[str]:
     """Print a wall-time table vs the committed baselines; return the
     benches slower than `factor` x baseline.  Benches without a
-    committed baseline (or baselines recorded with a different --fast
-    mode) just print as unbaselined — only comparable entries gate."""
+    committed baseline — or with an unreadable/malformed one, or one
+    recorded under a different --fast mode — just WARN and skip (the
+    run's own summaries are already written by this point; a missing
+    or stale baseline must never fail the run).  Only comparable
+    entries gate."""
     regressions = []
     print(f"\nbaseline compare vs {baseline_dir} "
           f"(fail > {factor:g}x):", file=sys.stderr)
@@ -178,6 +184,14 @@ def _compare_baseline(measured: dict[str, float], baseline_dir: str,
         except (OSError, ValueError):
             print(f"  {name}: {wall:.3f}s (no baseline)",
                   file=sys.stderr)
+            continue
+        if not isinstance(base, dict):
+            print(f"  {name}: {wall:.3f}s (malformed baseline)",
+                  file=sys.stderr)
+            continue
+        if bool(base.get("fast")) != bool(fast):
+            print(f"  {name}: {wall:.3f}s (baseline from different "
+                  f"--fast mode)", file=sys.stderr)
             continue
         base_wall = base.get("wall_s")
         if not base_wall:

@@ -134,10 +134,16 @@ class ReplayConfig:
     fuse_synth: bool = True
 
 
-def replay_unit(adaptive: bool, banked: bool) -> int:
-    """Campaign-kind unit of the tuner table: the four replay shapes
-    (static/adaptive x per-module/per-bank) tune independently."""
-    return (2 if adaptive else 0) + (1 if banked else 0)
+def replay_unit(adaptive: bool, banked: bool,
+                channels: bool = False) -> int:
+    """Campaign-kind unit of the tuner table: the replay shapes
+    (static/adaptive x per-module/per-bank x single/multi-channel)
+    tune independently.  Units 0-3 are the historical single-channel
+    kinds (stored tables stay valid); a multi-channel campaign
+    (`SimSpec.n_channels * n_ranks > 1` — different state footprint
+    and gather pattern) offsets by 4."""
+    return ((4 if channels else 0) + (2 if adaptive else 0)
+            + (1 if banked else 0))
 
 
 # log2(request count) bin edges: campaigns within a bin share a tuned

@@ -82,12 +82,39 @@ class Trace(NamedTuple):
     is_write: jnp.ndarray   # [N] bool
 
 
+# address-interleaving policies: how a request's (bank, row) address
+# maps onto the channel axis of a multi-channel module.  "row" keeps
+# whole rows on one channel (locality-preserving), "cacheline" stripes
+# consecutive addresses across channels (bandwidth-spreading), and
+# "bank_xor" hashes bank into the channel pick (breaks pathological
+# bank<->channel alignment, cf. permutation-based interleaving).
+ILEAVE_CODES = {"row": 0, "cacheline": 1, "bank_xor": 2}
+
+
+def chan_rank(bank, row, ileave, n_channels: int, n_ranks: int,
+              n_banks: int = 8):
+    """Elementwise (channel, rank) of each request under an
+    interleaving policy — pure jnp, so the mapping runs IN-SCAN (and
+    inside the Pallas kernel) from the same `ileave` code column the
+    policy axis carries.  `ileave` is a traced int32 scalar (one of
+    `ILEAVE_CODES`); bank/row are int32 of any matching shape."""
+    c = n_channels
+    addr = row * jnp.int32(n_banks) + bank    # flat address proxy
+    ch = jnp.where(ileave == 0, row % c,
+                   jnp.where(ileave == 1, addr % c, (bank ^ row) % c))
+    rank = (row // c) % n_ranks
+    return ch.astype(jnp.int32), rank.astype(jnp.int32)
+
+
 @dataclasses.dataclass(frozen=True)
 class Policy:
     """One memory-controller scheduling policy (a campaign axis).
 
     page: "open" (default) or "closed" (auto-precharge every access).
     reorder_window: FR-FCFS-lite lookahead; <= 1 keeps FCFS order.
+    interleave: address-interleaving policy mapping requests onto the
+    channels of a multi-channel `SimSpec` (one of `ILEAVE_CODES`;
+    inert when n_channels == 1).
     """
 
     page: str = "open"
@@ -97,13 +124,19 @@ class Policy:
     # reordering toward a request that is still in flight would stall
     # the channel longer than the conflict it avoids
     reorder_slack_ns: float = 30.0
+    interleave: str = "row"
 
     def __post_init__(self):
         assert self.page in ("open", "closed"), self.page
+        assert self.interleave in ILEAVE_CODES, self.interleave
 
     @property
     def closed(self) -> bool:
         return self.page == "closed"
+
+    @property
+    def ileave_code(self) -> int:
+        return ILEAVE_CODES[self.interleave]
 
 
 OPEN_FCFS = Policy()
@@ -211,10 +244,23 @@ class SynthSpec:
                 jnp.asarray(self.write_fracs, jnp.float32),
                 jnp.asarray(self.inter_arrivals, jnp.float32))
 
-    def synth(self):
-        """The in-dispatch synthesis prologue: [T, n] `Trace` batch as
-        traced arrays (call under jit)."""
-        key, offs, rhs, wfs, ias = self.knob_arrays()
+    def stream_knobs(self):
+        """The PER-STREAM knob arrays ([T]-leading, one row per
+        trace) that `synth_traced` consumes — the tree a sharded
+        campaign partitions across devices (`sim_engine`'s shard_map
+        path feeds each device only its shard of these rows)."""
+        return (jnp.asarray(self.offsets, jnp.int32),
+                jnp.asarray(self.row_hits, jnp.float32),
+                jnp.asarray(self.write_fracs, jnp.float32),
+                jnp.asarray(self.inter_arrivals, jnp.float32))
+
+    def synth_traced(self, knobs):
+        """Synthesize the [t, n] `Trace` batch from (possibly sharded)
+        traced knob rows — `knobs` is a `stream_knobs()`-shaped tuple;
+        the threefry key derives from the static seed, so any shard of
+        rows synthesizes bit-identically to its slice of `synth()`."""
+        key = jax.random.PRNGKey(self.seed)
+        offs, rhs, wfs, ias = knobs
 
         def one(off, rh, wf, ia):
             k = jax.random.fold_in(key, off)
@@ -223,6 +269,11 @@ class SynthSpec:
                                inter_arrival_ns=ia)
 
         return jax.vmap(one)(offs, rhs, wfs, ias)
+
+    def synth(self):
+        """The in-dispatch synthesis prologue: [T, n] `Trace` batch as
+        traced arrays (call under jit)."""
+        return self.synth_traced(self.stream_knobs())
 
     def materialize(self) -> tuple[Trace, ...]:
         """Host-side tuple-of-`Trace`s view (one synthesis launch,
@@ -238,6 +289,142 @@ class SynthSpec:
                 Trace(*(f[i] for f in fields))
                 for i in range(len(self)))
         return cache["traces"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantSpec:
+    """DECLARATIVE MULTI-TENANT trace batch: each stream is a mixture
+    of tenants drawn per request from a shared tenant pool, with
+    per-tenant arrival PROCESSES (Poisson / bursty / diurnal — the
+    `thermal.rate_scenario` closed-form rows, evaluated by the same
+    `ambient_at` machinery with base ~1.0 read as a rate multiplier).
+
+    Rides the `SynthSpec` machinery end to end: `sim_engine.SimSpec`
+    accepts one as its `traces` axis and fuses the synthesis INTO the
+    replay dispatch (the spec is a hashable static jit arg), and the
+    shard_map campaign path partitions `stream_knobs()` rows across
+    devices exactly like `SynthSpec`.
+
+    Pool axes ([K] tenants): `row_hits` / `write_fracs` /
+    `inter_arrivals` are the `synth_trace` knobs of each tenant;
+    `arrivals` holds each tenant's rate-scenario row ([K][SCN_COLS],
+    or `thermal.ThermalScenario`s / "poisson"/"bursty"/"diurnal" kind
+    strings, normalized at construction).  Stream axis ([T]): `mixes`
+    is the [T][K] tenant-probability matrix (rows need not be
+    normalized — the categorical draw normalizes), `offsets` the
+    per-stream threefry fold ids (default: the stream index).
+
+    Per stream, per request: a tenant is drawn from the mix, the
+    request's locality/write knobs gather from its tenant, base
+    exponential gaps scale by tenant `inter_arrivals`, and the gaps
+    are then modulated by the tenant's rate scenario evaluated at the
+    unmodulated cumulative time (rate 2x => half the gap), keeping the
+    synthesis fully vectorized — no scan, so it fuses into the replay
+    prologue."""
+
+    n: int
+    mixes: tuple
+    row_hits: tuple[float, ...]
+    write_fracs: tuple[float, ...]
+    inter_arrivals: tuple[float, ...]
+    arrivals: tuple = ("poisson",)
+    offsets: tuple[int, ...] = ()
+    seed: int = 0
+    n_banks: int = 8
+    n_rows: int = 4096
+
+    def __post_init__(self):
+        from repro.core import thermal
+        k = len(self.row_hits)
+        mixes = tuple(tuple(float(x) for x in m) for m in self.mixes)
+        assert mixes and all(len(m) == k for m in mixes), \
+            (len(mixes), k)
+        rows = []
+        for a in (self.arrivals if len(self.arrivals) > 1
+                  else tuple(self.arrivals) * k):
+            if isinstance(a, str):
+                a = thermal.rate_scenario(a)
+            if isinstance(a, thermal.ThermalScenario):
+                a = a.as_row()
+            rows.append(tuple(float(x) for x in np.asarray(a)))
+        assert len(rows) == k, (len(rows), k)
+        offsets = (tuple(range(len(mixes))) if not self.offsets
+                   else tuple(int(o) for o in self.offsets))
+        assert len(offsets) == len(mixes), (len(offsets), len(mixes))
+        object.__setattr__(self, "mixes", mixes)
+        object.__setattr__(self, "arrivals", tuple(rows))
+        object.__setattr__(self, "offsets", offsets)
+        for f in ("row_hits", "write_fracs", "inter_arrivals"):
+            object.__setattr__(
+                self, f, tuple(float(x) for x in getattr(self, f)))
+            assert len(getattr(self, f)) == k, f
+        object.__setattr__(self, "_cache", {})
+
+    def __len__(self) -> int:
+        return len(self.mixes)
+
+    def stream_knobs(self):
+        """PER-STREAM rows ([T]-leading) consumed by `synth_traced` —
+        the tree a sharded campaign partitions across devices."""
+        return (jnp.asarray(self.offsets, jnp.int32),
+                jnp.asarray(self.mixes, jnp.float32))
+
+    def synth_traced(self, knobs):
+        """Synthesize the [t, n] `Trace` batch from (possibly sharded)
+        traced `stream_knobs` rows; the tenant pool rides as static
+        constants, so any shard synthesizes bit-identically to its
+        slice of `synth()`."""
+        from repro.core.thermal import ambient_at
+        key = jax.random.PRNGKey(self.seed)
+        rhs = jnp.asarray(self.row_hits, jnp.float32)
+        wfs = jnp.asarray(self.write_fracs, jnp.float32)
+        ias = jnp.asarray(self.inter_arrivals, jnp.float32)
+        scn = jnp.asarray(self.arrivals, jnp.float32)   # [K, SCN_COLS]
+        offs, mixes = knobs
+
+        def one(off, mix):
+            k = jax.random.fold_in(key, off)
+            kt, kb, kr, kh, kw, ka = jax.random.split(k, 6)
+            tenant = jax.random.categorical(
+                kt, jnp.log(mix + 1e-9), shape=(self.n,))
+            bank = jax.random.randint(kb, (self.n,), 0, self.n_banks)
+            new_row = jax.random.randint(kr, (self.n,), 0, self.n_rows)
+            reuse = jax.random.uniform(kh, (self.n,)) < rhs[tenant]
+            row = _row_pick(bank, new_row, reuse, self.n_banks)
+            is_write = jax.random.uniform(kw, (self.n,)) < wfs[tenant]
+            gaps = jax.random.exponential(ka, (self.n,)) * ias[tenant]
+            # rate modulation at the UNMODULATED cumulative time keeps
+            # the generator closed-form (no gap->time recurrence)
+            t0 = jnp.cumsum(gaps)
+            rate = jax.vmap(ambient_at)(scn[tenant], t0)
+            arrival = jnp.cumsum(gaps / jnp.maximum(rate, 0.05))
+            return Trace(arrival, bank, row, is_write)
+
+        return jax.vmap(one)(offs, mixes)
+
+    def synth(self):
+        """The in-dispatch synthesis prologue: [T, n] `Trace` batch as
+        traced arrays (call under jit)."""
+        return self.synth_traced(self.stream_knobs())
+
+    def materialize(self) -> tuple[Trace, ...]:
+        """Host-side tuple-of-`Trace`s view (one synthesis launch,
+        cached on the instance)."""
+        cache = self._cache
+        if "traces" not in cache:
+            from repro.core import perf_model          # lazy: no cycle
+            perf_model.synth_dispatch_count += 1
+            tb = jax.jit(self.synth)()
+            fields = [np.asarray(f) for f in tb]
+            cache["traces"] = tuple(
+                Trace(*(f[i] for f in fields))
+                for i in range(len(self)))
+        return cache["traces"]
+
+
+# the declarative trace-axis types `sim_engine.SimSpec` accepts and
+# fuses into the replay dispatch
+SYNTH_SPECS = (SynthSpec, TenantSpec)
 
 
 def check_prefix_valid(valid, where: str = "replay"):
@@ -483,14 +670,19 @@ def service_math(t, gate, open_b, act_b, wrd_b, rdy_b, rf, w, trcd,
 
 
 def _service(s: BankState, t, b, r, w, trcd, tras, twr, trp, tcl,
-             closed, mlp_window: int):
+             closed, mlp_window: int, extra_gate=None):
     """Service ONE request: gathers bank `b`'s state, applies
     `service_math`, scatters the update back.  Shared bit-for-bit
     between `replay_one` (timing scalars fixed for the whole trace)
     and `replay_adaptive` (timing scalars gathered from the in-scan
-    bin selection).  Returns (next state, raw latency, row-hit
-    flag)."""
+    bin selection).  `extra_gate` (optional) is max'd into the MLP
+    ring gate — the per-channel bus-occupancy gate of multi-channel
+    replays; None keeps the single-channel arithmetic untouched.
+    Returns (next state, raw latency, row-hit flag, completion
+    time)."""
     gate = s.done_ring[s.idx % mlp_window]     # i-window completion
+    if extra_gate is not None:
+        gate = jnp.maximum(gate, extra_gate)
     (row_latched, act_new, wrd_new, ready_new, done, lat,
      is_hit) = service_math(t, gate, s.open_row[b], s.act_time[b],
                             s.wr_done[b], s.ready[b], r, w, trcd, tras,
@@ -501,11 +693,13 @@ def _service(s: BankState, t, b, r, w, trcd, tras, twr, trp, tcl,
                    ready=s.ready.at[b].set(ready_new),
                    done_ring=s.done_ring.at[s.idx % mlp_window].set(done),
                    idx=s.idx + 1)
-    return s2, lat, is_hit
+    return s2, lat, is_hit, done
 
 
 def replay_one(arrival, bank, row, is_write, valid, tp_row, closed,
-               n_banks: int = 8, mlp_window: int = 8):
+               n_banks: int = 8, mlp_window: int = 8,
+               n_channels: int = 1, n_ranks: int = 1, ileave=None,
+               t_burst: float = 5.0):
     """Replay one trace under one stacked timing row and page policy.
 
     arrival/bank/row/is_write: [N] request stream; `valid`: [N] mask
@@ -522,28 +716,63 @@ def replay_one(arrival, bank, row, is_write, valid, tp_row, closed,
     `mlp_window` models the CPU's bounded memory-level parallelism as a
     closed loop: request i cannot issue before request i-window
     completed (an out-of-order core stalls once its miss buffers fill),
-    which keeps the queue bounded instead of saturating open-loop."""
+    which keeps the queue bounded instead of saturating open-loop.
+
+    With `n_channels`/`n_ranks` > 1 the carried controller state holds
+    C*R*B independent bank FSMs — each request maps to a (channel,
+    rank) via `chan_rank(ileave)` IN-SCAN — plus a per-channel
+    bus-free time: a request's issue is additionally gated on its
+    channel's data bus (busy for `t_burst` ns from each data-burst
+    start), which is how per-channel queue contention is priced at
+    zero extra dispatches.  Per-bank timing rows stay keyed on the
+    ORIGINAL [0, n_banks) bank id (the spatial table is per rank-level
+    bank).  `n_channels == n_ranks == 1` is a static branch that keeps
+    the single-channel arithmetic bit-identical."""
     banked = tp_row.ndim == 2
+    multi = n_channels * n_ranks > 1
     if not banked:
         trcd, tras, twr, trp, tcl = (tp_row[0], tp_row[1], tp_row[2],
                                      tp_row[3], tp_row[5])
+    if multi:
+        il = jnp.asarray(0 if ileave is None else ileave, jnp.int32)
 
-    def step(s: BankState, req):
+    def step(carry, req):
+        s, cf = carry if multi else (carry, None)
         t, b, r, w, v = req
+        if multi:
+            ch, rk = chan_rank(b, r, il, n_channels, n_ranks, n_banks)
+            gb = (ch * n_ranks + rk) * n_banks + b
+            eg = cf[ch]
+        else:
+            gb, eg = b, None
         if banked:
             tb = tp_row[b]
-            s2, lat, _ = _service(s, t, b, r, w, tb[0], tb[1], tb[2],
-                                  tb[3], tb[5], closed, mlp_window)
+            s2, lat, _, done = _service(s, t, gb, r, w, tb[0], tb[1],
+                                        tb[2], tb[3], tb[5], closed,
+                                        mlp_window, extra_gate=eg)
+            tcl_b = tb[5]
         else:
-            s2, lat, _ = _service(s, t, b, r, w, trcd, tras, twr, trp,
-                                  tcl, closed, mlp_window)
+            s2, lat, _, done = _service(s, t, gb, r, w, trcd, tras,
+                                        twr, trp, tcl, closed,
+                                        mlp_window, extra_gate=eg)
+            tcl_b = tcl
+        if multi:
+            # the channel data bus is busy for t_burst from the burst
+            # start (done - tCL): later requests on this channel wait
+            c2 = (s2, cf.at[ch].set(done - tcl_b + t_burst))
+            c1 = (s, cf)
+        else:
+            c2, c1 = s2, s
         # padding: keep every state component as-is and emit zero latency
-        s3 = jax.tree_util.tree_map(
-            lambda new, old: jnp.where(v, new, old), s2, s)
-        return s3, jnp.where(v, lat, 0.0)
+        c3 = jax.tree_util.tree_map(
+            lambda new, old: jnp.where(v, new, old), c2, c1)
+        return c3, jnp.where(v, lat, 0.0)
 
-    s_end, lat = jax.lax.scan(step, _bank_state0(n_banks, mlp_window),
+    s0 = _bank_state0(n_channels * n_ranks * n_banks, mlp_window)
+    carry0 = (s0, jnp.zeros((n_channels,))) if multi else s0
+    c_end, lat = jax.lax.scan(step, carry0,
                               (arrival, bank, row, is_write, valid))
+    s_end = c_end[0] if multi else c_end
     # runtime includes the trailing write-recovery window: the module is
     # busy until the last write has restored, not just until last data
     total = jnp.maximum(s_end.ready.max(), s_end.wr_done.max())
@@ -551,7 +780,9 @@ def replay_one(arrival, bank, row, is_write, valid, tp_row, closed,
 
 
 def replay_rows(arrival, bank, row, is_write, valid, timings, closed,
-                n_banks: int = 8, mlp_window: int = 8):
+                n_banks: int = 8, mlp_window: int = 8,
+                n_channels: int = 1, n_ranks: int = 1, ileave=None,
+                t_burst: float = 5.0):
     """Replay one trace under a whole [S, 6] STACK of timing rows in
     one `lax.scan` — the timing-row axis rides the minor (lane) axis
     of the carried bank state ([B, 4, S] packed as open-row/act/
@@ -569,22 +800,42 @@ def replay_rows(arrival, bank, row, is_write, valid, timings, closed,
     alongside the bank-state gather.  Constant-across-banks input
     replays bit-identical to the [S, 6] path.
 
+    With `n_channels`/`n_ranks` > 1 the packed bank state grows to
+    [C*R*B, 4, S] (the channel/rank axes fold into the bank-FSM axis —
+    same one gather/scatter per request) plus a [C, S] per-channel
+    bus-free time max'd into the issue gate; requests map to channels
+    in-scan via `chan_rank(ileave)`, and per-bank timing rows stay
+    keyed on the ORIGINAL bank id.  C == R == 1 is a static branch
+    that keeps the single-channel arithmetic bit-identical.
+
     Returns (per-request latency [S, N] with zeros at padding, total
     runtime [S]).  Padding must be a suffix of `valid` (the ring gate
     is masked, not re-indexed — same contract as the Pallas kernel).
     """
     banked = timings.ndim == 3
+    multi = n_channels * n_ranks > 1
     if not banked:
         trcd, tras, twr, trp, tcl = (timings[:, 0], timings[:, 1],
                                      timings[:, 2], timings[:, 3],
                                      timings[:, 5])
     s_rows = timings.shape[0]
+    if multi:
+        il = jnp.asarray(0 if ileave is None else ileave, jnp.int32)
 
     def step(st, req):
-        bs, ring, idx = st              # [B, 4, S], [W, S], scalar
+        if multi:
+            bs, ring, cf, idx = st      # [CRB, 4, S], [W, S], [C, S]
+        else:
+            bs, ring, idx = st          # [B, 4, S], [W, S], scalar
         t, b, r, w, v = req
-        rowb = bs[b]                    # [4, S] one gather per request
-        gate = ring[idx % mlp_window]   # [S]
+        if multi:
+            ch, rk = chan_rank(b, r, il, n_channels, n_ranks, n_banks)
+            gb = (ch * n_ranks + rk) * n_banks + b
+        else:
+            gb = b
+        rowb = bs[gb]                   # [4, S] one gather per request
+        gate0 = ring[idx % mlp_window]  # [S]
+        gate = (jnp.maximum(gate0, cf[ch]) if multi else gate0)
         rf = r.astype(jnp.float32)
         if banked:
             tb = timings[:, b, :]       # [S, 6] this bank's columns
@@ -597,17 +848,24 @@ def replay_rows(arrival, bank, row, is_write, valid, timings, closed,
                            tc_[4], closed)
         new_row = jnp.stack([jnp.broadcast_to(latched, (s_rows,)),
                              act_new, wrd_new, rdy_new])
-        bs2 = bs.at[b].set(jnp.where(v, new_row, rowb))
-        ring2 = ring.at[idx % mlp_window].set(jnp.where(v, done, gate))
-        return ((bs2, ring2, idx + v.astype(jnp.int32)),
-                jnp.where(v, lat, 0.0))
+        bs2 = bs.at[gb].set(jnp.where(v, new_row, rowb))
+        ring2 = ring.at[idx % mlp_window].set(jnp.where(v, done, gate0))
+        idx2 = idx + v.astype(jnp.int32)
+        if multi:
+            busy = done - tc_[4] + t_burst     # burst start + t_burst
+            cf2 = cf.at[ch].set(jnp.where(v, busy, cf[ch]))
+            return (bs2, ring2, cf2, idx2), jnp.where(v, lat, 0.0)
+        return (bs2, ring2, idx2), jnp.where(v, lat, 0.0)
 
-    bs0 = jnp.concatenate([jnp.full((n_banks, 1, s_rows), -1.0),
-                           jnp.zeros((n_banks, 3, s_rows))], axis=1)
-    (bse, _, _), lat = jax.lax.scan(
-        step, (bs0, jnp.zeros((mlp_window, s_rows)),
-               jnp.zeros((), jnp.int32)),
-        (arrival, bank, row, is_write, valid))
+    nb_tot = n_channels * n_ranks * n_banks
+    bs0 = jnp.concatenate([jnp.full((nb_tot, 1, s_rows), -1.0),
+                           jnp.zeros((nb_tot, 3, s_rows))], axis=1)
+    st0 = (bs0, jnp.zeros((mlp_window, s_rows)))
+    st0 += ((jnp.zeros((n_channels, s_rows)),) if multi else ())
+    st0 += (jnp.zeros((), jnp.int32),)
+    st_end, lat = jax.lax.scan(
+        step, st0, (arrival, bank, row, is_write, valid))
+    bse = st_end[0]
     total = jnp.maximum(bse[:, 3].max(0), bse[:, 2].max(0))
     return lat.T, total                  # [S, N], [S]
 
@@ -615,7 +873,9 @@ def replay_rows(arrival, bank, row, is_write, valid, timings, closed,
 def replay_rows_frfcfs(arrival, bank, row, is_write, valid, timings,
                        closed, window, slack_ns, cap, max_window: int,
                        n_banks: int = 8, mlp_window: int = 8,
-                       all_valid: bool = False):
+                       all_valid: bool = False, n_channels: int = 1,
+                       n_ranks: int = 1, ileave=None,
+                       t_burst: float = 5.0):
     """MERGED FR-FCFS-lite + replay: one `lax.scan` that both picks the
     next request to issue (the `frfcfs_perm` pending-buffer scheduler)
     and services it against the `replay_rows` lane-major bank state —
@@ -638,6 +898,14 @@ def replay_rows_frfcfs(arrival, bank, row, is_write, valid, timings,
     pure roll — cheaper on sublane hardware and exact because the
     issue counter then advances every step.
 
+    With `n_channels`/`n_ranks` > 1 the SERVICE half carries the
+    [C*R*B, 4, S] channelized bank state and the [C, S] bus-free gate
+    of `replay_rows` (same `chan_rank(ileave)` in-scan mapping); the
+    SCHEDULER half stays channel-agnostic (its open-row prediction is
+    keyed on the rank-level bank id, exactly like `frfcfs_perm`), so
+    the merged core remains bit-identical to prepass + channelized
+    `replay_rows`.
+
     Returns (latency [S, N] in ISSUE order — the same positional
     order the prepass pipeline emits — and total runtime [S]).
     Padding must be a suffix of `valid` (`check_prefix_valid`)."""
@@ -645,6 +913,9 @@ def replay_rows_frfcfs(arrival, bank, row, is_write, valid, timings,
     w = max_window
     assert 1 <= w <= n, (w, n)
     banked = timings.ndim == 3
+    multi = n_channels * n_ranks > 1
+    il = (jnp.asarray(0 if ileave is None else ileave, jnp.int32)
+          if multi else None)
     if not banked:
         trcd, tras, twr, trp, tcl = (timings[:, 0], timings[:, 1],
                                      timings[:, 2], timings[:, 3],
@@ -666,17 +937,19 @@ def replay_rows_frfcfs(arrival, bank, row, is_write, valid, timings,
         jnp.array([[0.0], [0.0], [-2.0], [0.0], [0.0]], jnp.float32),
     ], axis=1)
 
-    bs0 = jnp.concatenate([jnp.full((n_banks, 1, s_rows), -1.0),
-                           jnp.zeros((n_banks, 3, s_rows))], axis=1)
+    nb_tot = n_channels * n_ranks * n_banks
+    bs0 = jnp.concatenate([jnp.full((nb_tot, 1, s_rows), -1.0),
+                           jnp.zeros((nb_tot, 3, s_rows))], axis=1)
     state0 = (stream[:, :w],                        # pending buffer
               jnp.full((n_banks,), -1.0, jnp.float32),  # open-row pred
               jnp.zeros((), jnp.int32),             # defer counter
               jnp.asarray(w, jnp.int32),            # next refill
               bs0, jnp.zeros((mlp_window, s_rows)),
+              jnp.zeros((n_channels, s_rows)),      # chan bus free
               jnp.zeros((), jnp.int32))
 
     def step(st, _):
-        buf, open_pred, defer, nxt, bs, ring, idx = st
+        buf, open_pred, defer, nxt, bs, ring, cf, idx = st
         # --- scheduler: pick the issue slot (mirrors frfcfs_perm) ---
         b_int = buf[1].astype(jnp.int32)
         hit = open_pred[b_int] == buf[2]
@@ -695,11 +968,19 @@ def replay_rows_frfcfs(arrival, bank, row, is_write, valid, timings,
         shifted = jnp.concatenate([buf[:, 1:], refill[:, None]], axis=1)
         buf2 = jnp.where(slots[None, :] >= pick, shifted, buf)
         # --- service: replay_rows' lane-major bank state ---
-        rowb = bs[b]                           # [4, S]
-        if all_valid:
-            gate = ring[0]
+        if multi:
+            row_i = rf.astype(jnp.int32)
+            ch, rk = chan_rank(b, row_i, il, n_channels, n_ranks,
+                               n_banks)
+            gb = (ch * n_ranks + rk) * n_banks + b
         else:
-            gate = ring[idx % mlp_window]      # [S]
+            gb = b
+        rowb = bs[gb]                          # [4, S]
+        if all_valid:
+            gate0 = ring[0]
+        else:
+            gate0 = ring[idx % mlp_window]     # [S]
+        gate = jnp.maximum(gate0, cf[ch]) if multi else gate0
         if banked:
             tb = timings[:, b, :]              # [S, 6]
             tc_ = (tb[:, 0], tb[:, 1], tb[:, 2], tb[:, 3], tb[:, 5])
@@ -712,20 +993,24 @@ def replay_rows_frfcfs(arrival, bank, row, is_write, valid, timings,
         new_row = jnp.stack([jnp.broadcast_to(latched, (s_rows,)),
                              act_new, wrd_new, rdy_new])
         if all_valid:
-            bs2 = bs.at[b].set(new_row)
+            bs2 = bs.at[gb].set(new_row)
             ring2 = jnp.concatenate([ring[1:], done[None]])
             idx2 = idx + 1
             lat_out = lat
+            cf2 = (cf.at[ch].set(done - tc_[4] + t_burst) if multi
+                   else cf)
         else:
-            bs2 = bs.at[b].set(jnp.where(v, new_row, rowb))
+            bs2 = bs.at[gb].set(jnp.where(v, new_row, rowb))
             ring2 = ring.at[idx % mlp_window].set(
-                jnp.where(v, done, gate))
+                jnp.where(v, done, gate0))
             idx2 = idx + v.astype(jnp.int32)
             lat_out = jnp.where(v, lat, 0.0)
-        return ((buf2, open_pred, defer, nxt + 1, bs2, ring2, idx2),
-                lat_out)
+            cf2 = (cf.at[ch].set(jnp.where(v, done - tc_[4] + t_burst,
+                                           cf[ch])) if multi else cf)
+        return ((buf2, open_pred, defer, nxt + 1, bs2, ring2, cf2,
+                 idx2), lat_out)
 
-    (_, _, _, _, bse, _, _), lat = jax.lax.scan(
+    (_, _, _, _, bse, _, _, _), lat = jax.lax.scan(
         step, state0, None, length=n)
     total = jnp.maximum(bse[:, 3].max(0), bse[:, 2].max(0))
     return lat.T, total                        # [S, N], [S]
@@ -742,7 +1027,9 @@ class AdaptiveState(NamedTuple):
 
 def replay_adaptive(arrival, bank, row, is_write, valid, table, bins,
                     scn_row, tcfg_row, closed,
-                    n_banks: int = 8, mlp_window: int = 8):
+                    n_banks: int = 8, mlp_window: int = 8,
+                    n_channels: int = 1, n_ranks: int = 1, ileave=None,
+                    t_burst: float = 5.0):
     """Closed-loop replay: per-request in-scan timing-bin selection.
 
     `table`: [S+1, 6] stacked timing rows — one per temperature bin
@@ -768,6 +1055,14 @@ def replay_adaptive(arrival, bank, row, is_write, valid, table, bins,
     plus the row-active window of the *selected* tRAS — as heat on the
     accessed bank.
 
+    With `n_channels`/`n_ranks` > 1 the controller state and the
+    per-bank heat grow to the C*R*B bank-FSM axis (requests map to
+    channels in-scan via `chan_rank(ileave)`, per-bank table rows stay
+    keyed on the rank-level bank id) and a per-channel bus-free time
+    gates issue exactly like `replay_rows` — the returned overheat is
+    then [C*R*B].  C == R == 1 is a static branch that keeps the
+    single-channel arithmetic bit-identical.
+
     Returns (latency [N], total runtime, sensed temperature [N],
     selected bin [N] int32 with -1 at padding, end-of-trace per-bank
     overheat [B] in C — the bank-resolved footprint of the access
@@ -780,8 +1075,13 @@ def replay_adaptive(arrival, bank, row, is_write, valid, table, bins,
     e_burst, e_act_pre, p_as = tcfg_row[3], tcfg_row[4], tcfg_row[5]
     hyst = hyst_c * scn_row[8]                   # per-scenario scale
     banked = table.ndim == 3
+    multi = n_channels * n_ranks > 1
+    nb_tot = n_channels * n_ranks * n_banks
+    il = (jnp.asarray(0 if ileave is None else ileave, jnp.int32)
+          if multi else None)
 
-    def step(s: AdaptiveState, req):
+    def step(carry, req):
+        s, cf = carry if multi else (carry, None)
         t, b, r, w, v = req
         dt = jnp.maximum(t - s.t_prev, 0.0)
         heat = s.heat * jnp.exp(-dt / tau)
@@ -794,9 +1094,16 @@ def replay_adaptive(arrival, bank, row, is_write, valid, table, bins,
         down = jnp.searchsorted(bins, sensed + hyst, side="left")
         new_bin = jnp.maximum(up, jnp.minimum(s.cur_bin, down))
         tp = table[new_bin, b] if banked else table[new_bin]
-        s2b, lat, is_hit = _service(s.bank, t, b, r, w, tp[0], tp[1],
-                                    tp[2], tp[3], tp[5], closed,
-                                    mlp_window)
+        if multi:
+            ch, rk = chan_rank(b, r, il, n_channels, n_ranks, n_banks)
+            gb = (ch * n_ranks + rk) * n_banks + b
+            eg = cf[ch]
+        else:
+            gb, eg = b, None
+        s2b, lat, is_hit, done = _service(s.bank, t, gb, r, w, tp[0],
+                                          tp[1], tp[2], tp[3], tp[5],
+                                          closed, mlp_window,
+                                          extra_gate=eg)
         # closed loop: the heat deposit depends on the row-active
         # window of the timings we just selected (same formula as the
         # host-side power model, by construction)
@@ -804,21 +1111,26 @@ def replay_adaptive(arrival, bank, row, is_write, valid, table, bins,
         energy = access_energy_from_terms(e_burst, e_act_pre, p_as,
                                           miss, tp[1])
         s2 = AdaptiveState(bank=s2b,
-                           heat=heat.at[b].add(c_heat * energy),
+                           heat=heat.at[gb].add(c_heat * energy),
                            cur_bin=new_bin.astype(jnp.int32),
                            t_prev=t + 0.0)
-        s3 = jax.tree_util.tree_map(
-            lambda new, old: jnp.where(v, new, old), s2, s)
-        return s3, (jnp.where(v, lat, 0.0),
+        c2 = (s2, cf.at[ch].set(done - tp[5] + t_burst)) if multi \
+            else s2
+        c1 = (s, cf) if multi else s
+        c3 = jax.tree_util.tree_map(
+            lambda new, old: jnp.where(v, new, old), c2, c1)
+        return c3, (jnp.where(v, lat, 0.0),
                     jnp.where(v, sensed, 0.0),
                     jnp.where(v, new_bin.astype(jnp.int32), -1))
 
-    s0 = AdaptiveState(bank=_bank_state0(n_banks, mlp_window),
-                       heat=jnp.zeros((n_banks,)),
+    s0 = AdaptiveState(bank=_bank_state0(nb_tot, mlp_window),
+                       heat=jnp.zeros((nb_tot,)),
                        cur_bin=jnp.zeros((), jnp.int32),
                        t_prev=jnp.zeros(()))
-    s_end, (lat, temp, bin_sel) = jax.lax.scan(
-        step, s0, (arrival, bank, row, is_write, valid))
+    carry0 = (s0, jnp.zeros((n_channels,))) if multi else s0
+    c_end, (lat, temp, bin_sel) = jax.lax.scan(
+        step, carry0, (arrival, bank, row, is_write, valid))
+    s_end = c_end[0] if multi else c_end
     total = jnp.maximum(s_end.bank.ready.max(), s_end.bank.wr_done.max())
     return lat, total, temp, bin_sel, s_end.heat
 

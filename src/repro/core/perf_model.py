@@ -237,6 +237,33 @@ def synth_spec(n: int = 8192, seed: int = 0,
                               seed=seed, n_banks=n_banks)
 
 
+def tenant_spec(n: int = 8192, n_streams: int = 8, seed: int = 0,
+                n_banks: int = 8,
+                kinds=("poisson", "bursty", "diurnal")
+                ) -> dram_sim.TenantSpec:
+    """MULTI-TENANT traffic over the SAME workload pool: the 70
+    (workload x core-mode) pool entries become tenants, each with the
+    locality/write/inter-arrival knobs of `_pool_knobs` plus an
+    arrival-rate process cycled from `kinds`
+    (`thermal.rate_scenario`), and every stream is a Dirichlet tenant
+    mix (alpha 0.15 — a few dominant tenants per stream, the rest
+    background) drawn deterministically from `seed`.  Hand the spec to
+    a `SimSpec` as the trace axis: the per-request tenant draw, knob
+    gather, and rate-modulated arrivals all fuse INTO the replay
+    dispatch exactly like `synth_spec` — `synth_dispatch_count` never
+    moves."""
+    offs, rhs, wfs, ias = _pool_knobs()
+    k = len(rhs)
+    r = np.random.default_rng(seed)
+    mixes = r.dirichlet(np.full(k, 0.15), size=n_streams)
+    return dram_sim.TenantSpec(
+        n=n, mixes=tuple(tuple(m) for m in mixes),
+        row_hits=tuple(rhs), write_fracs=tuple(wfs),
+        inter_arrivals=tuple(ias),
+        arrivals=tuple(kinds[i % len(kinds)] for i in range(k)),
+        seed=seed, n_banks=n_banks)
+
+
 def evaluate_many(timings, n: int = 8192, seed: int = 0,
                   engine: SimEngine | None = None,
                   policies: tuple[dram_sim.Policy, ...] = (dram_sim.OPEN_FCFS,),

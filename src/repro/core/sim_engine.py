@@ -67,7 +67,8 @@ import numpy as np
 
 from repro.core import timing as T
 from repro.core.autotune import ReplayConfig, ReplayTuner, replay_unit
-from repro.core.dram_sim import (OPEN_FCFS, Policy, SynthSpec, Trace,
+from repro.core.dram_sim import (OPEN_FCFS, SYNTH_SPECS, Policy,
+                                 SynthSpec, TenantSpec, Trace,
                                  check_prefix_valid, frfcfs_perm,
                                  frfcfs_reorder, replay_adaptive,
                                  replay_rows, replay_rows_frfcfs)
@@ -119,10 +120,10 @@ class SimSpec:
     materialize O(grid * N) arrays host-side.  The host-stats reference
     path always materializes them (it needs the raw grid anyway)."""
 
-    # tuple of `Trace`s, or a `dram_sim.SynthSpec` — the DECLARATIVE
-    # trace batch whose synthesis the engine fuses INTO the replay
-    # dispatch (the whole campaign is then truly one launch)
-    traces: tuple[Trace, ...] | SynthSpec
+    # tuple of `Trace`s, or a `dram_sim.SynthSpec` / `TenantSpec` —
+    # the DECLARATIVE trace batch whose synthesis the engine fuses
+    # INTO the replay dispatch (the whole campaign is one launch)
+    traces: tuple[Trace, ...] | SynthSpec | TenantSpec
     # [S, 6] rows | per-bank [S, banks, 6] | adaptive [K, S+1, 6] |
     # adaptive per-bank [K, S+1, banks, 6]
     timings: np.ndarray
@@ -133,6 +134,14 @@ class SimSpec:
     # replay; `timings` is then a stack of per-bin TABLES, not rows
     thermal: ThermalSpec | None = None
     collect: tuple[str, ...] = ()
+    # multi-channel module geometry: C*R independent bank groups, with
+    # the per-policy `Policy.interleave` mapping requests to channels
+    # in-scan; `t_burst_ns` is the per-channel data-bus occupancy of
+    # one burst (the contention price).  1/1 degenerates bit-exactly
+    # to the single-channel replay.
+    n_channels: int = 1
+    n_ranks: int = 1
+    t_burst_ns: float = 5.0
 
     def __post_init__(self):
         tr = self.traces
@@ -140,9 +149,11 @@ class SimSpec:
             tr = (tuple(Trace(*(np.asarray(f)[i] for f in tr))
                         for i in range(np.asarray(tr.arrival).shape[0]))
                   if np.asarray(tr.arrival).ndim == 2 else (tr,))
-        if not isinstance(tr, SynthSpec):
+        if not isinstance(tr, SYNTH_SPECS):
             tr = tuple(tr)
         object.__setattr__(self, "traces", tr)
+        assert self.n_channels >= 1 and self.n_ranks >= 1, \
+            (self.n_channels, self.n_ranks)
         object.__setattr__(
             self, "timings",
             _as_rows(self.timings) if self.thermal is None else
@@ -169,9 +180,23 @@ class SimSpec:
                 base + (len(self.thermal.scenarios),))
 
     @property
-    def synth(self) -> SynthSpec | None:
+    def synth(self) -> "SynthSpec | TenantSpec | None":
         """The declarative synthesis spec, when the trace axis is one."""
-        return self.traces if isinstance(self.traces, SynthSpec) else None
+        return (self.traces if isinstance(self.traces, SYNTH_SPECS)
+                else None)
+
+    @property
+    def chan(self) -> tuple:
+        """The STATIC channel geometry (n_channels, n_ranks,
+        t_burst_ns) threaded through the jitted replay bodies."""
+        return (self.n_channels, self.n_ranks, float(self.t_burst_ns))
+
+    @property
+    def ileave_codes(self) -> np.ndarray:
+        """Per-policy interleave codes [P] (a traced campaign column,
+        like `closed_flags`)."""
+        return np.array([p.ileave_code for p in self.policies],
+                        np.int32)
 
     def trace_tuple(self) -> tuple[Trace, ...]:
         """The trace axis as materialized `Trace`s (a `SynthSpec` axis
@@ -362,7 +387,8 @@ def _reorder_prepass(arrival, bank, row, is_write, valid, slacks, caps,
 
 def _merged_replay(arrival, bank, row, is_write, valid, timings, closed,
                    slacks, caps, reorder_plan: tuple, n_banks: int,
-                   mlp_window: int, all_valid: bool):
+                   mlp_window: int, all_valid: bool,
+                   chan: tuple = (1, 1, 5.0), ileave=None):
     """The `backend="merged"` replay core: [T, N] FCFS streams ->
     (lat [T, P, S, N], total [T, P, S]) with the FR-FCFS schedule
     FUSED into the replay scan itself (`dram_sim.replay_rows_frfcfs`)
@@ -376,6 +402,9 @@ def _merged_replay(arrival, bank, row, is_write, valid, timings, closed,
     t, n = arrival.shape
     p = closed.shape[0]
     s = timings.shape[0]
+    n_ch, n_rk, t_burst = chan
+    il = (jnp.zeros((p,), jnp.int32) if ileave is None
+          else jnp.asarray(ileave, jnp.int32))
     lat = jnp.zeros((t, p, s, n))
     total = jnp.zeros((t, p, s))
     grouped: set[int] = set()
@@ -386,28 +415,33 @@ def _merged_replay(arrival, bank, row, is_write, valid, timings, closed,
     if ident:
         sel = np.asarray(ident, np.int32)
 
-        def plain(a, b, r, w, v, c):
+        def plain(a, b, r, w, v, c, i_):
             return replay_rows(a, b, r, w, v, timings, c, n_banks,
-                               mlp_window)
+                               mlp_window, n_channels=n_ch,
+                               n_ranks=n_rk, ileave=i_, t_burst=t_burst)
 
-        f_p = jax.vmap(plain, in_axes=(None,) * 5 + (0,))
-        f_tp = jax.vmap(f_p, in_axes=(0, 0, 0, 0, 0, None))
-        l_, t_ = f_tp(arrival, bank, row, is_write, valid, closed[sel])
+        f_p = jax.vmap(plain, in_axes=(None,) * 5 + (0, 0))
+        f_tp = jax.vmap(f_p, in_axes=(0, 0, 0, 0, 0, None, None))
+        l_, t_ = f_tp(arrival, bank, row, is_write, valid, closed[sel],
+                      il[sel])
         lat = lat.at[:, sel].set(l_)
         total = total.at[:, sel].set(t_)
 
     for window, eff, idx in reorder_plan:
         sel = np.asarray(idx, np.int32)
 
-        def fused(a, b, r, w, v, c, s_, cp, _w=window, _e=eff):
+        def fused(a, b, r, w, v, c, s_, cp, i_, _w=window, _e=eff):
             return replay_rows_frfcfs(a, b, r, w, v, timings, c, _w,
                                       s_, cp, min(_e, n), n_banks,
-                                      mlp_window, all_valid=all_valid)
+                                      mlp_window, all_valid=all_valid,
+                                      n_channels=n_ch, n_ranks=n_rk,
+                                      ileave=i_, t_burst=t_burst)
 
-        f_p = jax.vmap(fused, in_axes=(None,) * 5 + (0, 0, 0))
-        f_tp = jax.vmap(f_p, in_axes=(0, 0, 0, 0, 0, None, None, None))
+        f_p = jax.vmap(fused, in_axes=(None,) * 5 + (0, 0, 0, 0))
+        f_tp = jax.vmap(f_p, in_axes=(0, 0, 0, 0, 0, None, None, None,
+                                      None))
         l_, t_ = f_tp(arrival, bank, row, is_write, valid, closed[sel],
-                      slacks[sel], caps[sel])
+                      slacks[sel], caps[sel], il[sel])
         lat = lat.at[:, sel].set(l_)
         total = total.at[:, sel].set(t_)
     return lat, total
@@ -484,7 +518,8 @@ def _synth_streams(synth):
 
 def _static_body(n_banks, mlp_window, reorder_plan, backend, want,
                  p99_k, bs, arrival, bank, row, is_write, valid,
-                 timings, closed, slacks, caps, all_valid=False):
+                 timings, closed, slacks, caps, all_valid=False,
+                 chan=(1, 1, 5.0), ileave=None):
     """Shared static-timing replay body (traced under a jit wrapper):
     replay every (trace, policy, timing row) cell and reduce.
 
@@ -506,10 +541,14 @@ def _static_body(n_banks, mlp_window, reorder_plan, backend, want,
     "pallas"/"pallas_interpret" the `repro.kernels.replay` kernel
     (lane-block size `bs`, None = kernel default).
     """
+    n_ch, n_rk, t_burst = chan
+    il = (jnp.zeros((closed.shape[0],), jnp.int32) if ileave is None
+          else jnp.asarray(ileave, jnp.int32))
     if backend == "merged" and arrival.ndim == 2:
         lat, total = _merged_replay(
             arrival, bank, row, is_write, valid, timings, closed,
-            slacks, caps, reorder_plan, n_banks, mlp_window, all_valid)
+            slacks, caps, reorder_plan, n_banks, mlp_window, all_valid,
+            chan=chan, ileave=il)
     else:
         if arrival.ndim == 2:
             a3, b3, r3, w3 = _reorder_prepass(
@@ -519,18 +558,20 @@ def _static_body(n_banks, mlp_window, reorder_plan, backend, want,
             a3, b3, r3, w3 = arrival, bank, row, is_write
 
         if backend in ("scan", "merged"):
-            def one(a, b, r, w, v, c):
+            def one(a, b, r, w, v, c, i_):
                 return replay_rows(a, b, r, w, v, timings, c, n_banks,
-                                   mlp_window)
+                                   mlp_window, n_channels=n_ch,
+                                   n_ranks=n_rk, ileave=i_,
+                                   t_burst=t_burst)
 
-            f_p = jax.vmap(one, in_axes=(0, 0, 0, 0, None, 0))
-            f_tp = jax.vmap(f_p, in_axes=(0, 0, 0, 0, 0, None))
-            lat, total = f_tp(a3, b3, r3, w3, valid, closed)
+            f_p = jax.vmap(one, in_axes=(0, 0, 0, 0, None, 0, 0))
+            f_tp = jax.vmap(f_p, in_axes=(0, 0, 0, 0, 0, None, None))
+            lat, total = f_tp(a3, b3, r3, w3, valid, closed, il)
         else:
             from repro.kernels.replay import ops as replay_ops
             lat, total = replay_ops.replay_grid(
                 a3, b3, r3, w3, valid, timings, closed, n_banks,
-                mlp_window, impl=backend, bs=bs)
+                mlp_window, impl=backend, bs=bs, chan=chan, ileave=il)
 
     out = {"total": total}
     if "stats" in want:
@@ -542,7 +583,8 @@ def _static_body(n_banks, mlp_window, reorder_plan, backend, want,
 
 def _adaptive_body(n_banks, mlp_window, reorder_plan, backend, want,
                    p99_k, bs, arrival, bank, row, is_write, valid,
-                   tables, bins, scns, tcfg, closed, slacks, caps):
+                   tables, bins, scns, tcfg, closed, slacks, caps,
+                   chan=(1, 1, 5.0), ileave=None):
     """Shared closed-loop replay body: every (trace, policy, table
     stack, thermal scenario) cell.
 
@@ -564,6 +606,9 @@ def _adaptive_body(n_banks, mlp_window, reorder_plan, backend, want,
     is static-timing only, so "merged" degrades to the scan + prepass
     here).
     """
+    n_ch, n_rk, t_burst = chan
+    il = (jnp.zeros((closed.shape[0],), jnp.int32) if ileave is None
+          else jnp.asarray(ileave, jnp.int32))
     if arrival.ndim == 2:
         a3, b3, r3, w3 = _reorder_prepass(
             arrival, bank, row, is_write, valid, slacks, caps,
@@ -571,6 +616,10 @@ def _adaptive_body(n_banks, mlp_window, reorder_plan, backend, want,
     else:
         a3, b3, r3, w3 = arrival, bank, row, is_write
 
+    # the adaptive Pallas kernel is single-channel: multi-channel
+    # adaptive campaigns ride the (channelized) scan instead
+    if n_ch * n_rk > 1 and backend in ("pallas", "pallas_interpret"):
+        backend = "scan"
     diag = None
     if backend in ("pallas", "pallas_interpret"):
         from repro.kernels.replay import ops as replay_ops
@@ -581,17 +630,23 @@ def _adaptive_body(n_banks, mlp_window, reorder_plan, backend, want,
                 closed, n_banks, mlp_window, impl=backend, bs=bs,
                 emit_raw=emit_raw)
     else:
-        def one(a, b, r, w, v, tbl, scn, c):
+        def one(a, b, r, w, v, tbl, scn, c, i_):
             return replay_adaptive(a, b, r, w, v, tbl, bins, scn,
-                                   tcfg, c, n_banks, mlp_window)
+                                   tcfg, c, n_banks, mlp_window,
+                                   n_channels=n_ch, n_ranks=n_rk,
+                                   ileave=i_, t_burst=t_burst)
 
-        f_c = jax.vmap(one, in_axes=(None,) * 5 + (None, 0, None))
-        f_kc = jax.vmap(f_c, in_axes=(None,) * 5 + (0, None, None))
-        f_pkc = jax.vmap(f_kc, in_axes=(0, 0, 0, 0, None, None, None, 0))
+        f_c = jax.vmap(one,
+                       in_axes=(None,) * 5 + (None, 0, None, None))
+        f_kc = jax.vmap(f_c,
+                        in_axes=(None,) * 5 + (0, None, None, None))
+        f_pkc = jax.vmap(f_kc,
+                         in_axes=(0, 0, 0, 0, None, None, None, 0, 0))
         f_tpkc = jax.vmap(f_pkc,
-                          in_axes=(0, 0, 0, 0, 0, None, None, None))
+                          in_axes=(0, 0, 0, 0, 0, None, None, None,
+                                   None))
         lat, total, temps, bin_sel, bank_heat = f_tpkc(
-            a3, b3, r3, w3, valid, tables, scns, closed)
+            a3, b3, r3, w3, valid, tables, scns, closed, il)
 
     out = {"total": total, "bank_heat": bank_heat}
     if "stats" in want:
@@ -611,31 +666,33 @@ def _adaptive_body(n_banks, mlp_window, reorder_plan, backend, want,
     return out
 
 
-@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3, 4, 5, 6, 7))
+@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3, 4, 5, 6, 7, 8))
 def _replay_grid(synth, n_banks, mlp_window, reorder_plan, backend,
-                 want, p99_k, bs, arrival, bank, row, is_write, valid,
-                 timings, closed, slacks, caps):
+                 want, p99_k, bs, chan, arrival, bank, row, is_write,
+                 valid, timings, closed, slacks, caps, ileave):
     """ONE dispatch: (optional in-dispatch trace synthesis +) static
     replay grid — see `_static_body`.  `synth` (static) is None for
-    materialized streams, or the campaign's `dram_sim.SynthSpec`: the
-    stream/valid arguments are then ignored placeholders and the FCFS
-    streams are synthesized INSIDE this same dispatch (every synthetic
-    trace is full-length, which also unlocks the merged core's
-    rolling-ring `all_valid` form)."""
+    materialized streams, or the campaign's `dram_sim.SynthSpec` /
+    `TenantSpec`: the stream/valid arguments are then ignored
+    placeholders and the FCFS streams are synthesized INSIDE this same
+    dispatch (every synthetic trace is full-length, which also unlocks
+    the merged core's rolling-ring `all_valid` form).  `chan` (static)
+    is the `SimSpec.chan` channel geometry; `ileave` the per-policy
+    interleave-code column."""
     all_valid = synth is not None
     if all_valid:
         arrival, bank, row, is_write, valid = _synth_streams(synth)
     return _static_body(n_banks, mlp_window, reorder_plan, backend,
                         want, p99_k, bs, arrival, bank, row, is_write,
                         valid, timings, closed, slacks, caps,
-                        all_valid=all_valid)
+                        all_valid=all_valid, chan=chan, ileave=ileave)
 
 
-@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3, 4, 5, 6, 7))
+@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3, 4, 5, 6, 7, 8))
 def _replay_grid_adaptive(synth, n_banks, mlp_window, reorder_plan,
-                          backend, want, p99_k, bs, arrival, bank, row,
-                          is_write, valid, tables, bins, scns, tcfg,
-                          closed, slacks, caps):
+                          backend, want, p99_k, bs, chan, arrival,
+                          bank, row, is_write, valid, tables, bins,
+                          scns, tcfg, closed, slacks, caps, ileave):
     """ONE dispatch: (optional in-dispatch trace synthesis +)
     closed-loop adaptive replay grid — see `_adaptive_body` and
     `_replay_grid`'s `synth` contract."""
@@ -644,14 +701,15 @@ def _replay_grid_adaptive(synth, n_banks, mlp_window, reorder_plan,
     return _adaptive_body(n_banks, mlp_window, reorder_plan, backend,
                           want, p99_k, bs, arrival, bank, row,
                           is_write, valid, tables, bins, scns, tcfg,
-                          closed, slacks, caps)
+                          closed, slacks, caps, chan=chan,
+                          ileave=ileave)
 
 
-@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3, 4, 5, 6, 7))
+@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3, 4, 5, 6, 7, 8))
 def _bracket_grid(synth, n_banks, mlp_window, reorder_plan, backend,
-                  p99_k, n_real, bs, arrival, bank, row, is_write,
-                  valid, tables, bins, scns, tcfg, closed, slacks,
-                  caps, base_row):
+                  p99_k, n_real, bs, chan, arrival, bank, row,
+                  is_write, valid, tables, bins, scns, tcfg, closed,
+                  slacks, caps, base_row, ileave):
     """ONE dispatch for the whole adaptive-vs-bracket evaluation
     (`perf_model.evaluate_adaptive`'s inner loop): in-dispatch
     synthesis (when `synth` is set) + the adaptive campaign + the
@@ -673,7 +731,8 @@ def _bracket_grid(synth, n_banks, mlp_window, reorder_plan, backend,
     out_a = _adaptive_body(n_banks, mlp_window, reorder_plan, backend,
                            ("stats",), p99_k, bs, arrival, bank, row,
                            is_write, valid, tables, bins, scns, tcfg,
-                           closed, slacks, caps)
+                           closed, slacks, caps, chan=chan,
+                           ileave=ileave)
     # static-worst-case provisioning from the adaptive trajectory's
     # peaks, guarded by the controller hysteresis (tcfg[2]) — same
     # arithmetic as the host-side bracket in perf_model
@@ -686,9 +745,109 @@ def _bracket_grid(synth, n_banks, mlp_window, reorder_plan, backend,
     out_s = _static_body(n_banks, mlp_window, reorder_plan, backend,
                          ("stats",), p99_k, bs, arrival, bank, row,
                          is_write, valid, rows, closed, slacks, caps,
-                         all_valid=synth is not None)
+                         all_valid=synth is not None, chan=chan,
+                         ileave=ileave)
     return {"adaptive": out_a, "static": out_s, "worst_bin": worst,
             "temp_peak": peak}
+
+
+def _shard_pad(tree, n_dev: int):
+    """Pad every [T, ...]-leading leaf of a per-stream tree to a T
+    divisible by the device count by REPEATING the last row (real
+    work, so padded shards stay finite; the engine slices the extra
+    rows off after the gather).  Returns (padded tree, real T)."""
+    t = int(jax.tree_util.tree_leaves(tree)[0].shape[0])
+    pad = (-t) % n_dev
+    if pad == 0:
+        return tree, t
+
+    def p(x):
+        x = jnp.asarray(x)
+        return jnp.concatenate([x, jnp.repeat(x[-1:], pad, axis=0)], 0)
+
+    return jax.tree_util.tree_map(p, tree), t
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2))
+def _sharded_grid(mesh, kind, statics, per_stream, extras):
+    """ONE SHARDED dispatch: the campaign's (trace x tenant-mix)
+    leading axis is partitioned across the mesh's "campaign" axis via
+    `shard_map`, each device replaying only its shard of streams
+    through the SAME `_static_body` / `_adaptive_body` the
+    single-device grids run — so a one-device mesh is bit-identical to
+    the unsharded path (identical ops on identical values).  Only the
+    `want`-selected outputs cross the shard boundary ([t_local, ...]
+    masked stats, all-gathered on the campaign axis); per-trace
+    mean/p99 are shard-local reductions, so the gathered statistics
+    are EXACT, not approximations.
+
+    `kind` (static): "static" | "adaptive" | "bracket".  `statics`:
+    (synth, n_banks, mlp_window, reorder_plan, backend, want, p99_k,
+    bs, chan, n_real).  `per_stream`: the [T]-leading tree — the
+    packed (arrival, bank, row, is_write, valid) streams, or a
+    declarative spec's `stream_knobs()` rows when synthesis is fused
+    (each device then synthesizes only its shard, threefry-identical
+    to its slice of the unsharded batch).  `extras`: the replicated
+    inputs in the matching grid-function order.  The "bracket" kind
+    `pmax`es the per-scenario temperature peaks across shards between
+    the two replay halves, so worst-bin provisioning still sees the
+    GLOBAL peak."""
+    from jax.experimental.shard_map import shard_map
+    P_ = jax.sharding.PartitionSpec
+    (synth, n_banks, mlp_window, plan, backend, want, p99_k, bs, chan,
+     n_real) = statics
+    sh, rep = P_("campaign"), P_()
+
+    def body(per_stream, extras):
+        if synth is not None:
+            tb = synth.synth_traced(per_stream)
+            arrival, bank, row, is_write = (tb.arrival, tb.bank,
+                                            tb.row, tb.is_write)
+            valid = jnp.ones(arrival.shape, bool)
+        else:
+            arrival, bank, row, is_write, valid = per_stream
+        if kind == "static":
+            timings, closed, slacks, caps, ileave = extras
+            return _static_body(
+                n_banks, mlp_window, plan, backend, want, p99_k, bs,
+                arrival, bank, row, is_write, valid, timings, closed,
+                slacks, caps, all_valid=synth is not None, chan=chan,
+                ileave=ileave)
+        if kind == "adaptive":
+            tables, bins, scns, tcfg, closed, slacks, caps, ileave = \
+                extras
+            return _adaptive_body(
+                n_banks, mlp_window, plan, backend, want, p99_k, bs,
+                arrival, bank, row, is_write, valid, tables, bins,
+                scns, tcfg, closed, slacks, caps, chan=chan,
+                ileave=ileave)
+        (tables, bins, scns, tcfg, closed, slacks, caps, base_row,
+         ileave) = extras
+        out_a = _adaptive_body(
+            n_banks, mlp_window, plan, backend, ("stats",), p99_k, bs,
+            arrival, bank, row, is_write, valid, tables, bins, scns,
+            tcfg, closed, slacks, caps, chan=chan, ileave=ileave)
+        peak = out_a["temp_max"][:, :, 0, :n_real].max(axis=(0, 1))
+        peak = jax.lax.pmax(peak, "campaign")    # global, all shards
+        worst = jnp.searchsorted(bins, peak + tcfg[2], side="left")
+        tab0 = tables[0]
+        base = jnp.broadcast_to(base_row, tab0.shape[1:])
+        rows = jnp.concatenate(
+            [base[None], jnp.take(tab0, worst, axis=0)], axis=0)
+        out_s = _static_body(
+            n_banks, mlp_window, plan, backend, ("stats",), p99_k, bs,
+            arrival, bank, row, is_write, valid, rows, closed, slacks,
+            caps, all_valid=synth is not None, chan=chan,
+            ileave=ileave)
+        return {"adaptive": out_a, "static": out_s, "worst_bin": worst,
+                "temp_peak": peak}
+
+    out_specs = (sh if kind != "bracket" else
+                 {"adaptive": sh, "static": sh, "worst_bin": rep,
+                  "temp_peak": rep})
+    return shard_map(body, mesh=mesh, in_specs=(sh, rep),
+                     out_specs=out_specs, check_rep=False)(
+        per_stream, extras)
 
 
 def _masked_stats(lat: np.ndarray, valid: np.ndarray):
@@ -774,11 +933,20 @@ class SimEngine:
                 fuse_synth) config on the campaign and records the
                 winner per (campaign kind, size bin), which
                 backend="auto" then consults.
+      mesh    — optional `jax.sharding.Mesh` with a "campaign" axis
+                (see `launch.mesh.make_campaign_mesh`): every run then
+                goes through the `shard_map` path, partitioning the
+                (trace x tenant-mix) leading axis across the mesh's
+                devices with only masked per-shard stats crossing the
+                boundary — still ONE dispatch, bit-identical to the
+                unsharded path on a one-device mesh.  Requires the
+                default device stats + device reorder.
 
     A `SimSpec` whose trace axis is a declarative `dram_sim.SynthSpec`
-    fuses the trace synthesis INTO the dispatch (unless the resolved
-    config says otherwise): synthesis + FR-FCFS + replay + statistics
-    are then truly one launch.
+    / `TenantSpec` fuses the trace synthesis INTO the dispatch (unless
+    the resolved config says otherwise): synthesis + FR-FCFS + replay
+    + statistics are then truly one launch — and under a mesh each
+    device synthesizes ONLY its shard of streams.
     """
 
     dispatch_count: int = 0
@@ -786,12 +954,16 @@ class SimEngine:
     stats: str = "device"
     reorder: str = "device"
     tuner: "ReplayTuner | None" = None
+    mesh: "jax.sharding.Mesh | None" = None
 
     def __post_init__(self):
         assert self.backend in ("auto", "scan", "merged", "pallas",
                                 "pallas_interpret"), self.backend
         assert self.stats in ("device", "host"), self.stats
         assert self.reorder in ("device", "host"), self.reorder
+        if self.mesh is not None:
+            assert "campaign" in self.mesh.axis_names, \
+                "campaign mesh needs a 'campaign' axis"
 
     def _tuner_key(self, spec: SimSpec):
         """(campaign-kind unit, request count) — the tuner table key."""
@@ -800,7 +972,9 @@ class SimEngine:
                  for t in spec.traces))
         adaptive = spec.thermal is not None
         banked = (spec.timings.ndim - (1 if adaptive else 0)) == 3
-        return replay_unit(adaptive, banked), n
+        return replay_unit(adaptive, banked,
+                           channels=spec.n_channels * spec.n_ranks > 1
+                           ), n
 
     def _resolve(self, spec: SimSpec,
                  config: "ReplayConfig | None" = None):
@@ -881,6 +1055,48 @@ class SimEngine:
                 jnp.asarray(spec.closed_flags), jnp.asarray(slacks),
                 jnp.asarray(caps), plan)
 
+    def _dispatch(self, kind, spec, synth, plan, backend, want, p99_k,
+                  bs, streams, extras, n_real=0):
+        """Route one campaign launch: the plain jitted grid, or — when
+        a `mesh` is attached — the `shard_map` path (trace axis
+        partitioned across the "campaign" devices, per-stream inputs
+        padded to a device multiple by repeating the last stream and
+        sliced back after the gather).  Either way: ONE dispatch."""
+        chan = spec.chan
+        if self.mesh is None:
+            if kind == "static":
+                return _replay_grid(synth, spec.n_banks,
+                                    spec.mlp_window, plan, backend,
+                                    want, p99_k, bs, chan, *streams,
+                                    *extras)
+            if kind == "adaptive":
+                return _replay_grid_adaptive(
+                    synth, spec.n_banks, spec.mlp_window, plan,
+                    backend, want, p99_k, bs, chan, *streams, *extras)
+            return _bracket_grid(synth, spec.n_banks, spec.mlp_window,
+                                 plan, backend, p99_k, n_real, bs,
+                                 chan, *streams, *extras)
+        assert self.stats == "device" and self.reorder == "device", \
+            "sharded campaigns need device stats + device reorder"
+        n_dev = self.mesh.shape["campaign"]
+        per_stream = (synth.stream_knobs() if synth is not None
+                      else streams)
+        per_stream, t = _shard_pad(per_stream, n_dev)
+        t_pad = int(jax.tree_util.tree_leaves(per_stream)[0].shape[0])
+        n = synth.n if synth is not None else streams[0].shape[-1]
+        self.shard_shape = (n_dev, t_pad // n_dev, int(n))
+        statics = (synth, spec.n_banks, spec.mlp_window, plan, backend,
+                   want, p99_k, bs, chan, n_real)
+        out = _sharded_grid(self.mesh, kind, statics, per_stream,
+                            extras)
+        if kind == "bracket":
+            sl = lambda d: {k: v[:t] for k, v in d.items()}
+            return {"adaptive": sl(out["adaptive"]),
+                    "static": sl(out["static"]),
+                    "worst_bin": out["worst_bin"],
+                    "temp_peak": out["temp_peak"]}
+        return {k: v[:t] for k, v in out.items()}
+
     def autotune(self, spec: SimSpec, reps: int = 3) -> "ReplayConfig":
         """Profile every candidate replay configuration on THIS
         campaign and record the winner in the tuner's table (persisted
@@ -922,11 +1138,12 @@ class SimEngine:
             want = (("stats",) + (("lat",)
                                   if "latencies" in spec.collect else ())
                     if self.stats == "device" else ("lat",))
-            out = _replay_grid(
-                synth, spec.n_banks, spec.mlp_window, plan, backend,
-                want, _p99_k(valid), bs, arrival, bank, row, is_write,
-                valid_d, jnp.asarray(spec.timings), closed, slacks,
-                caps)
+            out = self._dispatch(
+                "static", spec, synth, plan, backend, want,
+                _p99_k(valid), bs,
+                (arrival, bank, row, is_write, valid_d),
+                (jnp.asarray(spec.timings), closed, slacks, caps,
+                 jnp.asarray(spec.ileave_codes)))
             if self.stats == "host":
                 lat = np.asarray(out["lat"])
                 mean, p99 = _masked_stats(lat, valid)
@@ -946,11 +1163,12 @@ class SimEngine:
             want += ("bins",) if "bins" in spec.collect else ()
         else:
             want = ("lat", "temps", "bins")
-        out = _replay_grid_adaptive(
-            synth, spec.n_banks, spec.mlp_window, plan, backend, want,
-            _p99_k(valid), bs, arrival, bank, row, is_write, valid_d,
-            jnp.asarray(spec.timings), jnp.asarray(bins),
-            jnp.asarray(scns), jnp.asarray(tcfg), closed, slacks, caps)
+        out = self._dispatch(
+            "adaptive", spec, synth, plan, backend, want,
+            _p99_k(valid), bs, (arrival, bank, row, is_write, valid_d),
+            (jnp.asarray(spec.timings), jnp.asarray(bins),
+             jnp.asarray(scns), jnp.asarray(tcfg), closed, slacks,
+             caps, jnp.asarray(spec.ileave_codes)))
 
         if self.stats == "host":
             lat, temps, bin_sel = (np.asarray(out["lat"]),
@@ -1010,12 +1228,14 @@ class SimEngine:
         scns, bins, tcfg = spec.thermal.pack()
         n_real = len(scns) if n_real is None else int(n_real)
         self.dispatch_count += 1
-        out = _bracket_grid(
-            synth, spec.n_banks, spec.mlp_window, plan, backend,
-            _p99_k(valid), n_real, bs, arrival, bank, row, is_write,
-            valid_d, jnp.asarray(spec.timings), jnp.asarray(bins),
-            jnp.asarray(scns), jnp.asarray(tcfg), closed, slacks, caps,
-            jnp.asarray(base_row, jnp.float32))
+        out = self._dispatch(
+            "bracket", spec, synth, plan, backend, ("stats",),
+            _p99_k(valid), bs, (arrival, bank, row, is_write, valid_d),
+            (jnp.asarray(spec.timings), jnp.asarray(bins),
+             jnp.asarray(scns), jnp.asarray(tcfg), closed, slacks,
+             caps, jnp.asarray(base_row, jnp.float32),
+             jnp.asarray(spec.ileave_codes)),
+            n_real=n_real)
 
         def host(d):
             return {k: np.asarray(v) for k, v in d.items()}
@@ -1040,5 +1260,5 @@ def default_engine() -> SimEngine:
 
 
 __all__ = ["Policy", "OPEN_FCFS", "SimSpec", "SimResult", "SimEngine",
-           "SynthSpec", "ThermalSpec", "ReplayConfig", "ReplayTuner",
-           "default_engine"]
+           "SynthSpec", "TenantSpec", "ThermalSpec", "ReplayConfig",
+           "ReplayTuner", "default_engine"]

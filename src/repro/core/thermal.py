@@ -169,6 +169,22 @@ def stack_scenarios(scns: Sequence[ThermalScenario]) -> np.ndarray:
     return np.stack([s.as_row() for s in scns], axis=0)
 
 
+def rate_scenario(kind: str) -> ThermalScenario:
+    """Arrival-RATE modulation for multi-tenant traffic
+    (`dram_sim.TenantSpec`): the same closed-form scenario encoding
+    and `ambient_at` evaluator, with base ~1.0 read as a
+    dimensionless rate multiplier instead of a temperature.  "poisson"
+    is a flat 1.0 (plain exponential gaps), "diurnal" swings the rate
+    0.4x-1.6x sinusoidally, "bursty" square-waves 1.0x-2.5x."""
+    if kind == "poisson":
+        return steady(1.0, name="poisson-rate")
+    if kind == "diurnal":
+        return diurnal(0.4, 1.6, name="diurnal-rate")
+    if kind == "bursty":
+        return bursty(1.0, 1.5, duty=0.3, name="bursty-rate")
+    raise ValueError(f"unknown rate scenario {kind!r}")
+
+
 def ambient_at(scn_row, t):
     """Ambient temperature of a scenario row at time `t` (ns).  Pure
     jnp arithmetic (no control flow) so the scenario axis vmaps."""
@@ -219,4 +235,5 @@ class ThermalSpec:
 
 __all__ = ["SCN_COLS", "ThermalConfig", "ThermalScenario", "ThermalSpec",
            "steady", "diurnal", "cooling_failure", "bursty",
-           "stack_scenarios", "ambient_at", "ambient_at_host"]
+           "stack_scenarios", "rate_scenario", "ambient_at",
+           "ambient_at_host"]

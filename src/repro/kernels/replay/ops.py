@@ -39,18 +39,23 @@ def _pad_rows(timings_t: jnp.ndarray, bs: int) -> jnp.ndarray:
 
 def replay_grid(arrival, bank, row, is_write, valid, timings, closed,
                 n_banks: int = 8, mlp_window: int = 8,
-                impl: str = "auto", bs: int | None = None):
+                impl: str = "auto", bs: int | None = None,
+                chan=(1, 1, 5.0), ileave=None):
     """arrival/bank/row/is_write: [T, P, N]; valid: [T, N]; timings:
-    [S, 6] or per-bank [S, banks, 6]; closed: [P] bool -> (latency
-    [T, P, S, N], total [T, P, S]) — same contract as the lax.scan
-    path (`ref.replay_grid`).
+    [S, 6] or per-bank [S, banks, 6]; closed: [P] bool; `chan`
+    (static) = (n_channels, n_ranks, t_burst_ns) channel geometry and
+    `ileave` the per-policy [P] interleave-code column (both inert at
+    the single-channel default) -> (latency [T, P, S, N], total
+    [T, P, S]) — same contract as the lax.scan path
+    (`ref.replay_grid`).
     """
     check_prefix_valid(valid, "replay_grid")
     if impl == "auto":
         impl = "pallas" if jax.default_backend() == "tpu" else "ref"
     if impl == "ref":
         return ref.replay_grid(arrival, bank, row, is_write, valid,
-                               timings, closed, n_banks, mlp_window)
+                               timings, closed, n_banks, mlp_window,
+                               chan=tuple(chan), ileave=ileave)
 
     bs = bs or replay.BLOCK_ROWS
     t, p, n = arrival.shape
@@ -68,15 +73,19 @@ def replay_grid(arrival, bank, row, is_write, valid, timings, closed,
                              (t, p, n)).reshape(g, n)
     closed_col = jnp.broadcast_to(
         closed.astype(jnp.float32)[None, :], (t, p)).reshape(g, 1)
+    il = (jnp.zeros((p,), jnp.int32) if ileave is None
+          else jnp.asarray(ileave, jnp.int32))
+    il_col = jnp.broadcast_to(il[None, :], (t, p)).reshape(g, 1)
     tim = jnp.asarray(timings, jnp.float32)
     # [S, 6] -> [6, S]; per-bank [S, B, 6] -> [B, 6, S]
     tim_t = _pad_rows(tim.T if tim.ndim == 2
                       else tim.transpose(1, 2, 0), bs)
 
     lat, total = replay.replay_blocks(
-        closed_col, arrival_g, bank_g, row_g, wr_g, val_g, tim_t,
-        n_banks=n_banks, mlp_window=mlp_window,
-        interpret=(impl == "pallas_interpret"), bs=bs)
+        closed_col, il_col, arrival_g, bank_g, row_g, wr_g, val_g,
+        tim_t, n_banks=n_banks, mlp_window=mlp_window,
+        interpret=(impl == "pallas_interpret"), bs=bs,
+        chan=tuple(chan))
     # [G, N, S_pad] -> [T, P, S, N]
     lat = lat[:, :, :s].reshape(t, p, n, s).transpose(0, 1, 3, 2)
     return lat, total[:, :s].reshape(t, p, s)

@@ -13,21 +13,32 @@ import jax.numpy as jnp
 from repro.core.dram_sim import replay_adaptive, replay_one
 
 
-@functools.partial(jax.jit, static_argnames=("n_banks", "mlp_window"))
+@functools.partial(jax.jit,
+                   static_argnames=("n_banks", "mlp_window", "chan"))
 def replay_grid(arrival, bank, row, is_write, valid, timings, closed,
-                n_banks: int = 8, mlp_window: int = 8):
+                n_banks: int = 8, mlp_window: int = 8,
+                chan=(1, 1, 5.0), ileave=None):
     """arrival/bank/row/is_write: [T, P, N]; valid: [T, N]; timings:
     [S, 6] or per-bank [S, banks, 6] (vmapping the timing axis hands
-    `replay_one` a [banks, 6] row set per lane); closed: [P] bool ->
+    `replay_one` a [banks, 6] row set per lane); closed: [P] bool;
+    `chan` (static) = (n_channels, n_ranks, t_burst_ns) channel
+    geometry, `ileave` the per-policy interleave-code column ->
     (latency [T, P, S, N], total [T, P, S])."""
-    def one(a, b, r, w, v, tp, c):
-        return replay_one(a, b, r, w, v, tp, c, n_banks, mlp_window)
+    n_ch, n_rk, t_burst = chan
+    il = (jnp.zeros((arrival.shape[1],), jnp.int32) if ileave is None
+          else jnp.asarray(ileave, jnp.int32))
 
-    f_s = jax.vmap(one, in_axes=(None, None, None, None, None, 0, None))
-    f_ps = jax.vmap(f_s, in_axes=(0, 0, 0, 0, None, None, 0))
-    f_tps = jax.vmap(f_ps, in_axes=(0, 0, 0, 0, 0, None, None))
+    def one(a, b, r, w, v, tp, c, i_):
+        return replay_one(a, b, r, w, v, tp, c, n_banks, mlp_window,
+                          n_channels=n_ch, n_ranks=n_rk, ileave=i_,
+                          t_burst=t_burst)
+
+    f_s = jax.vmap(one, in_axes=(None, None, None, None, None, 0,
+                                 None, None))
+    f_ps = jax.vmap(f_s, in_axes=(0, 0, 0, 0, None, None, 0, 0))
+    f_tps = jax.vmap(f_ps, in_axes=(0, 0, 0, 0, 0, None, None, None))
     return f_tps(arrival, bank, row, is_write,
-                 jnp.asarray(valid, bool), timings, closed)
+                 jnp.asarray(valid, bool), timings, closed, il)
 
 
 @functools.partial(jax.jit, static_argnames=("n_banks", "mlp_window"))

@@ -30,9 +30,23 @@ selected with the same one-hot bank mask that gathers its bank-state
 rows, so the per-bank gather costs one extra masked reduce per
 request and nothing else changes.
 
+Multi-channel campaigns (`chan=(n_channels, n_ranks, t_burst)` with
+C*R > 1) widen the state tiles to [C*R*n_banks, BLOCK_ROWS] — the
+global FSM index is (channel*n_ranks + rank)*n_banks + bank, computed
+in-loop by `dram_sim.chan_rank` from the per-policy interleave code
+(an `il_ref` scalar-prefetch column) — and add one [n_channels,
+BLOCK_ROWS] bus-free scratch tile: the issue gate maxes in the
+request's channel-bus row (selected by the same one-hot trick, here
+over the channel axis) and the bus stays busy for `t_burst` after
+each data transfer.  Per-bank timing tables keep their rank-level
+[n_banks, 6, S] tile — spatial tables are per-module, not
+per-channel.  C*R == 1 compiles the exact single-channel kernel (the
+channel branches are static).
+
 VMEM per grid step: 5 request streams of N float32/int32 + the
 [6, 128] timing tile + the [N, 128] latency out tile + ~14 KB of
-state scratch — ~4.3 MB at N = 8192, under the ~16 MB budget.
+state scratch (x C*R on the bank tiles for multi-channel) — ~4.3 MB
+at N = 8192, under the ~16 MB budget.
 """
 
 from __future__ import annotations
@@ -44,7 +58,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.dram_sim import service_math
+from repro.core.dram_sim import chan_rank, service_math
 from repro.core.power import access_energy_from_terms
 from repro.core.thermal import ambient_at
 
@@ -52,44 +66,68 @@ from repro.core.thermal import ambient_at
 BLOCK_ROWS = 128
 
 
-def _kernel(closed_ref, arr_ref, bank_ref, row_ref, wr_ref, val_ref,
-            tim_ref, lat_ref, total_ref, open_s, act_s, wrd_s, rdy_s,
-            ring_s, *, n_banks: int, mlp_window: int, n_req: int,
-            banked: bool = False):
-    bs = tim_ref.shape[-1]
+def _kernel(closed_ref, il_ref, arr_ref, bank_ref, row_ref, wr_ref,
+            val_ref, tim_ref, lat_ref, total_ref, open_s, act_s,
+            wrd_s, rdy_s, ring_s, cf_s, *, n_banks: int,
+            mlp_window: int, n_req: int, banked: bool = False,
+            chan=(1, 1, 5.0)):
+    bs = lat_ref.shape[-1]
+    n_ch, n_rk, t_burst = chan
+    multi = n_ch * n_rk > 1          # static: C*R == 1 keeps the
+    nb_tot = n_ch * n_rk * n_banks   # original single-channel kernel
     closed = closed_ref[0, 0] > 0.5
     if not banked:
         trcd, tras, twr, trp, tcl = (tim_ref[0, :], tim_ref[1, :],
                                      tim_ref[2, :], tim_ref[3, :],
                                      tim_ref[5, :])
-    bank_iota = jax.lax.broadcasted_iota(jnp.int32, (n_banks, bs), 0)
+    bank_iota = jax.lax.broadcasted_iota(jnp.int32, (nb_tot, bs), 0)
     ring_iota = jax.lax.broadcasted_iota(jnp.int32, (mlp_window, bs), 0)
+    if multi:
+        il = il_ref[0, 0]
+        # the timing tile stays keyed on the rank-level bank id
+        bank_iota_b = jax.lax.broadcasted_iota(jnp.int32,
+                                               (n_banks, bs), 0)
+        chan_iota = jax.lax.broadcasted_iota(jnp.int32, (n_ch, bs), 0)
 
     # scratch persists across grid steps — re-arm the controller state
-    open_s[...] = jnp.full((n_banks, bs), -1.0, jnp.float32)
-    act_s[...] = jnp.zeros((n_banks, bs), jnp.float32)
-    wrd_s[...] = jnp.zeros((n_banks, bs), jnp.float32)
-    rdy_s[...] = jnp.zeros((n_banks, bs), jnp.float32)
+    open_s[...] = jnp.full((nb_tot, bs), -1.0, jnp.float32)
+    act_s[...] = jnp.zeros((nb_tot, bs), jnp.float32)
+    wrd_s[...] = jnp.zeros((nb_tot, bs), jnp.float32)
+    rdy_s[...] = jnp.zeros((nb_tot, bs), jnp.float32)
     ring_s[...] = jnp.zeros((mlp_window, bs), jnp.float32)
+    cf_s[...] = jnp.zeros((n_ch, bs), jnp.float32)
 
     def body(k, _):
         t = arr_ref[0, k]
         b = bank_ref[0, k]
-        rf = row_ref[0, k].astype(jnp.float32)
+        r_i = row_ref[0, k]
+        rf = r_i.astype(jnp.float32)
         w = wr_ref[0, k] > 0
         v = val_ref[0, k] > 0
-        bm = bank_iota == b                       # one-hot bank rows
-        rm = ring_iota == (k % mlp_window)        # one-hot ring slot
+        if multi:
+            # global FSM index of the request's (channel, rank, bank)
+            ch, rank = chan_rank(b, r_i, il, n_ch, n_rk, n_banks)
+            gb = (ch * n_rk + rank) * n_banks + b
+            cm = chan_iota == ch              # one-hot channel row
+        else:
+            gb = b
+        bm = bank_iota == gb                  # one-hot bank rows
+        rm = ring_iota == (k % mlp_window)    # one-hot ring slot
 
         open_b = jnp.sum(jnp.where(bm, open_s[...], 0.0), axis=0)
         act_b = jnp.sum(jnp.where(bm, act_s[...], 0.0), axis=0)
         wrd_b = jnp.sum(jnp.where(bm, wrd_s[...], 0.0), axis=0)
         rdy_b = jnp.sum(jnp.where(bm, rdy_s[...], 0.0), axis=0)
         gate = jnp.sum(jnp.where(rm, ring_s[...], 0.0), axis=0)
+        if multi:
+            # channel bus contention joins the issue gate
+            cf_b = jnp.sum(jnp.where(cm, cf_s[...], 0.0), axis=0)
+            gate = jnp.maximum(gate, cf_b)
         if banked:
             # per-bank timing tile [n_banks, 6, bs]: select the
             # request's bank with the same one-hot sublane mask
-            tim_b = jnp.sum(jnp.where(bm[:, None, :], tim_ref[...],
+            bmb = bank_iota_b == b if multi else bm
+            tim_b = jnp.sum(jnp.where(bmb[:, None, :], tim_ref[...],
                                       0.0), axis=0)         # [6, bs]
             tc = (tim_b[0], tim_b[1], tim_b[2], tim_b[3], tim_b[5])
         else:
@@ -108,6 +146,10 @@ def _kernel(closed_ref, arr_ref, bank_ref, row_ref, wr_ref, val_ref,
         wrd_s[...] = jnp.where(upd, wrd_new, wrd_s[...])
         rdy_s[...] = jnp.where(upd, rdy_new, rdy_s[...])
         ring_s[...] = jnp.where(rm & v, done, ring_s[...])
+        if multi:
+            # bus busy for t_burst ns from the burst start (done - tCL)
+            busy = done - tc[4] + t_burst
+            cf_s[...] = jnp.where(cm & v, busy, cf_s[...])
 
         lat_ref[0, k, :] = jnp.where(v, lat, 0.0)
         return 0
@@ -340,27 +382,34 @@ def adaptive_blocks(closed_col, arrival, bank, row, is_write, valid,
 
 @functools.partial(jax.jit,
                    static_argnames=("n_banks", "mlp_window",
-                                    "interpret", "bs"))
-def replay_blocks(closed_col, arrival, bank, row, is_write, valid,
-                  timings_t, n_banks: int = 8, mlp_window: int = 8,
-                  interpret: bool = False, bs: int = BLOCK_ROWS):
-    """closed_col: [G, 1] float32 (1.0 = closed page); arrival: [G, N]
-    float32; bank/row/is_write/valid: [G, N] int32 (flags as 0/1);
-    timings_t: [6, S] float32 with S % bs == 0 (rows = as_row
-    columns), or the PER-BANK tile [n_banks, 6, S] — each request's
-    timing lane columns are then selected with the same one-hot bank
-    mask that gathers its bank state.  G = flattened (trace x policy)
-    cells.  Returns (latency [G, N, S], total runtime [G, S])."""
+                                    "interpret", "bs", "chan"))
+def replay_blocks(closed_col, ileave_col, arrival, bank, row, is_write,
+                  valid, timings_t, n_banks: int = 8,
+                  mlp_window: int = 8, interpret: bool = False,
+                  bs: int = BLOCK_ROWS, chan=(1, 1, 5.0)):
+    """closed_col: [G, 1] float32 (1.0 = closed page); ileave_col:
+    [G, 1] int32 per-cell interleave code (`dram_sim.ILEAVE_CODES`,
+    inert on a single-channel launch); arrival: [G, N] float32;
+    bank/row/is_write/valid: [G, N] int32 (flags as 0/1); timings_t:
+    [6, S] float32 with S % bs == 0 (rows = as_row columns), or the
+    PER-BANK tile [n_banks, 6, S] — each request's timing lane columns
+    are then selected with the same one-hot bank mask that gathers its
+    bank state.  `chan` (static) = (n_channels, n_ranks, t_burst_ns):
+    C*R > 1 sizes the controller-state scratch [C*R*n_banks, bs] and
+    adds the per-channel bus-free scratch [C, bs] (see `_kernel`).
+    G = flattened (trace x policy) cells.  Returns (latency [G, N, S],
+    total runtime [G, S])."""
     g, n = arrival.shape
     banked = timings_t.ndim == 3
     s = timings_t.shape[-1]
+    nb_tot = chan[0] * chan[1] * n_banks
     assert timings_t.shape[-2] == 6 and s % bs == 0, (timings_t.shape, bs)
     if banked:
         assert timings_t.shape[0] == n_banks, (timings_t.shape, n_banks)
     grid = (g, s // bs)
     kernel = functools.partial(_kernel, n_banks=n_banks,
                                mlp_window=mlp_window, n_req=n,
-                               banked=banked)
+                               banked=banked, chan=chan)
     tim_spec = (pl.BlockSpec((n_banks, 6, bs), lambda i, j: (0, 0, j))
                 if banked else
                 pl.BlockSpec((6, bs), lambda i, j: (0, j)))
@@ -369,6 +418,7 @@ def replay_blocks(closed_col, arrival, bank, row, is_write, valid,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, 1), lambda i, j: (i, 0)),      # closed
+            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),      # ileave
             pl.BlockSpec((1, n), lambda i, j: (i, 0)),      # arrival
             pl.BlockSpec((1, n), lambda i, j: (i, 0)),      # bank
             pl.BlockSpec((1, n), lambda i, j: (i, 0)),      # row
@@ -385,11 +435,13 @@ def replay_blocks(closed_col, arrival, bank, row, is_write, valid,
             jax.ShapeDtypeStruct((g, s), jnp.float32),
         ],
         scratch_shapes=[
-            pltpu.VMEM((n_banks, bs), jnp.float32),   # open_row
-            pltpu.VMEM((n_banks, bs), jnp.float32),   # act_time
-            pltpu.VMEM((n_banks, bs), jnp.float32),   # wr_done
-            pltpu.VMEM((n_banks, bs), jnp.float32),   # ready
+            pltpu.VMEM((nb_tot, bs), jnp.float32),    # open_row
+            pltpu.VMEM((nb_tot, bs), jnp.float32),    # act_time
+            pltpu.VMEM((nb_tot, bs), jnp.float32),    # wr_done
+            pltpu.VMEM((nb_tot, bs), jnp.float32),    # ready
             pltpu.VMEM((mlp_window, bs), jnp.float32),  # done_ring
+            pltpu.VMEM((chan[0], bs), jnp.float32),   # chan bus-free
         ],
         interpret=interpret,
-    )(closed_col, arrival, bank, row, is_write, valid, timings_t)
+    )(closed_col, ileave_col, arrival, bank, row, is_write, valid,
+      timings_t)

@@ -23,3 +23,19 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_smoke_mesh():
     """1-device mesh with the production axis names, for CPU tests."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_campaign_mesh(n_devices: int | None = None):
+    """1-D "campaign" mesh for sharded replay campaigns
+    (`sim_engine.SimEngine(mesh=...)`): the (trace x tenant-mix)
+    leading axis of a campaign partitions across it, every other
+    campaign axis stays device-local.  Defaults to ALL visible
+    devices; `n_devices` clamps to a prefix (n_devices=1 is the
+    degenerate mesh the parity tests pin against the unsharded path).
+    On CPU, `XLA_FLAGS=--xla_force_host_platform_device_count=N`
+    (set before first jax init) fans one host out to N devices."""
+    devs = jax.devices()
+    if n_devices is not None:
+        assert 1 <= n_devices <= len(devs), (n_devices, len(devs))
+        devs = devs[:n_devices]
+    return jax.make_mesh((len(devs),), ("campaign",), devices=devs)

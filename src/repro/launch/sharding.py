@@ -171,3 +171,28 @@ def cache_shardings(cfg: ModelConfig, mesh: Mesh, cache_shape,
 
 def replicated(mesh: Mesh):
     return NamedSharding(mesh, P())
+
+
+# -------------------------------------------------- campaign sharding
+# Replay campaigns (`sim_engine.SimEngine(mesh=...)`) use a 1-D
+# "campaign" mesh (`launch.mesh.make_campaign_mesh`): the
+# (trace x tenant-mix) leading axis partitions, everything else —
+# timing tables, scenario rows, policy knobs — replicates.
+
+def campaign_spec() -> P:
+    """Partition the leading (trace) axis over "campaign"."""
+    return P("campaign")
+
+
+def campaign_sharding(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, campaign_spec())
+
+
+def shard_campaign(mesh: Mesh, tree: Any) -> Any:
+    """Place every [T, ...]-leading leaf of a per-stream tree on the
+    campaign mesh (T must divide the device count — the engine's
+    `_shard_pad` handles ragged T).  Committing inputs up front keeps
+    the sharded dispatch transfer-free."""
+    sh = campaign_sharding(mesh)
+    return jax.tree_util.tree_map(
+        lambda x: jax.device_put(x, sh), tree)

@@ -1,0 +1,55 @@
+"""Benchmark harness contracts: the ``--baseline DIR`` compare must
+never fail a run over a baseline it cannot use — missing, unreadable,
+malformed, or recorded under the other ``--fast`` mode — it warns and
+skips; only comparable entries gate."""
+
+import json
+
+from benchmarks.run import _compare_baseline
+
+
+def _write(path, obj):
+    path.write_text(obj if isinstance(obj, str) else
+                    json.dumps(obj) + "\n")
+
+
+class TestBaselineCompare:
+    def test_missing_baseline_warns_and_passes(self, tmp_path):
+        assert _compare_baseline({"sim_bench": 1.0}, str(tmp_path),
+                                 2.0) == []
+
+    def test_missing_dir_warns_and_passes(self, tmp_path):
+        assert _compare_baseline({"sim_bench": 1.0},
+                                 str(tmp_path / "nope"), 2.0) == []
+
+    def test_malformed_json_skips(self, tmp_path):
+        _write(tmp_path / "BENCH_a.json", "{not json")
+        _write(tmp_path / "BENCH_b.json", [1, 2, 3])
+        assert _compare_baseline({"a": 1.0, "b": 1.0}, str(tmp_path),
+                                 2.0) == []
+
+    def test_fast_mode_mismatch_skips(self, tmp_path):
+        # fast baseline never gates a full run (and vice versa) — the
+        # wall times are not comparable across modes
+        _write(tmp_path / "BENCH_a.json",
+               {"wall_s": 0.001, "fast": True})
+        assert _compare_baseline({"a": 100.0}, str(tmp_path), 2.0,
+                                 fast=False) == []
+        assert _compare_baseline({"a": 100.0}, str(tmp_path), 2.0,
+                                 fast=True) == ["a"]
+
+    def test_zero_or_missing_wall_skips(self, tmp_path):
+        _write(tmp_path / "BENCH_a.json", {"fast": False})
+        _write(tmp_path / "BENCH_b.json",
+               {"wall_s": 0.0, "fast": False})
+        assert _compare_baseline({"a": 1.0, "b": 1.0}, str(tmp_path),
+                                 2.0) == []
+
+    def test_regression_still_gates(self, tmp_path):
+        _write(tmp_path / "BENCH_a.json",
+               {"wall_s": 1.0, "fast": False})
+        _write(tmp_path / "BENCH_ok.json",
+               {"wall_s": 1.0, "fast": False})
+        out = _compare_baseline({"a": 3.0, "ok": 1.1}, str(tmp_path),
+                                2.0)
+        assert out == ["a"]
