@@ -1,0 +1,181 @@
+"""Fault-injection benchmark: the watchdog's bounded-error /
+latency-give-back contract (ISSUE 9; `repro.core.faults`).
+
+Replays ONE adaptive campaign — (traces x policies x {tuned, JEDEC}
+tables x thermal scenarios x fault rows) — in a single traced
+dispatch.  The fault axis is a (mode x severity x watchdog) grid over
+a cold-reading sensor: a sensor that reads LOW (stuck-at or drifting
+calibration) makes the controller keep the aggressive cold-bin rows
+through the hot bursts of the `bursty` ambient, so margin-conditioned
+read errors arrive in episodes.  Each faulted (mode, severity) pair
+appears twice:
+
+  * watchdog OFF — every detected error pays the retry surcharge and
+    the silent-corruption counter accumulates for as long as the hot
+    burst lasts: nothing in the loop stops it, so the count scales
+    with the burst-request total (unbounded in trace length),
+  * watchdog ON  — the cumulative detected-error budget trips a
+    sticky degradation to the JEDEC fallback row mid-burst; every
+    32nd degraded request probes the adaptive row, and two
+    consecutive clean probes (the burst has passed) recover it.
+
+The bench asserts the acceptance bracket of the fault subsystem:
+
+  * the whole fault grid is exactly ONE SimEngine dispatch
+    (`dispatches=1` in the derived CSV line, grepped by CI),
+  * the watchdog detected-error bound is EXACT in every grid cell —
+    ``detected <= wd_err_n * (trips + 1) + probes`` — the
+    `wd_bound=exact` token CI greps,
+  * every watchdog-on lane shows >= 10x fewer silent corruptions and
+    a lower effective error rate than its watchdog-off twin, at
+    <= 2 points of timing reduction given back vs the fault-free
+    lane (the give-back is the probe cadence: ~2x32 requests of
+    post-burst recovery lag plus the priced retries).
+
+Timing reduction is measured in-grid: the K axis carries the tuned
+table AND an all-JEDEC table, so the JEDEC reference latency comes
+from the same dispatch (`red = 1 - lat_tuned / lat_jedec`, fault-free
+JEDEC lane as denominator).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timed
+
+
+def _mk_trace(n: int, seed: int):
+    from repro.core.dram_sim import Trace
+    r = np.random.default_rng(seed)
+    t = np.cumsum(r.uniform(2.0, 14.0, n)).astype(np.float32)
+    return Trace(t, r.integers(0, 8, n).astype(np.int32),
+                 r.integers(0, 64, n).astype(np.int32),
+                 (r.uniform(size=n) < 0.3))
+
+
+def _fault_grid(fast: bool, span_ns: float):
+    """none + (mode x severity x {off, wd}) fault rows; returns the
+    FaultSpec plus the (mode, severity) -> (f_off, f_wd) lane map.
+
+    Both modes read LOW — a sensor stuck cold from t=0 and one that
+    dies mid-service (`stuck_from_ns` at 40% of the trace) — so every
+    mis-bin picks a row MORE aggressive than the truth (the dangerous
+    direction)."""
+    from repro.core import faults
+    modes = {"stuck": dict(stuck_c=40.0, stuck_from_ns=0.0)}
+    if not fast:
+        modes["latched"] = dict(stuck_c=40.0,
+                                stuck_from_ns=0.4 * span_ns)
+    sevs = {"mild": 0.03, "severe": 0.08}
+    rows = [faults.FaultScenario(name="none")]
+    lanes = {}
+    for m, mkw in modes.items():
+        for s, bin_c in sevs.items():
+            base = dict(err_bin_c=bin_c, err_scale=0.0,
+                        detect_frac=0.75, retry_ns=60.0, **mkw)
+            lanes[(m, s)] = (len(rows), len(rows) + 1)
+            rows.append(faults.FaultScenario(name=f"{m}.{s}", **base))
+            rows.append(faults.FaultScenario(
+                name=f"{m}.{s}.wd", wd_err_n=4, wd_probe=32,
+                wd_recover_n=2, **base))
+    return faults.FaultSpec(scenarios=tuple(rows), seed=11), lanes
+
+
+def run(fast: bool = False) -> dict:
+    from repro.core.dram_sim import OPEN_FCFS, Policy
+    from repro.core.sim_engine import SimEngine, SimSpec
+    from repro.core.thermal import ThermalSpec, bursty, steady
+    from repro.core.timing import TimingParams
+
+    n = 2048 if fast else 4096
+    traces = (_mk_trace(n, 1), _mk_trace(n - n // 8, 2))
+    span_ns = float(np.asarray(traces[0].arrival)[-1])
+    pols = (OPEN_FCFS,) if fast else (OPEN_FCFS, Policy(page="closed"))
+
+    jedec = TimingParams(trcd=13.75, tras=35.0, twr=15.0, trp=13.75)
+    # hot bins serve JEDEC outright: the adaptive win is the cold bins
+    tuned = np.stack([
+        TimingParams(trcd=10.0, tras=27.0, twr=11.0, trp=10.0).as_row(),
+        TimingParams(trcd=12.0, tras=31.0, twr=13.0, trp=12.0).as_row(),
+        jedec.as_row(), jedec.as_row()])
+    tables = np.stack([tuned, np.tile(jedec.as_row(), (4, 1))])
+
+    # cool control + hot bursts: 2 bursts per trace, 20% duty
+    scens = (steady(50.0), bursty(48.0, 30.0, span_ns / 2.0, duty=0.2))
+    if not fast:
+        scens += (bursty(44.0, 34.0, span_ns / 3.0, duty=0.2),)
+    thermal = ThermalSpec(scenarios=scens, temp_bins=(55.0, 70.0, 85.0))
+
+    fspec, lanes = _fault_grid(fast, span_ns)
+    engine = SimEngine()
+    d0 = engine.dispatch_count
+    spec = SimSpec(traces=traces, timings=tables, policies=pols,
+                   thermal=thermal, faults=fspec)
+    with timed() as t:
+        res = engine.run(spec)
+        np.asarray(res.mean_latency_ns)  # block until the grid lands
+    dispatches = engine.dispatch_count - d0
+    assert dispatches == 1, dispatches
+
+    lat = res.mean_latency_ns                      # [T, P, K, C, F]
+    lat_j = lat[:, :, 1, :, 0]                     # JEDEC table, no fault
+    red = 1.0 - lat[:, :, 0] / lat_j[..., None]    # [T, P, C, F]
+    red_f = red.mean(axis=(0, 1, 2))               # [F] reduction points
+
+    wd_n = np.asarray(fspec.pack()[:, 12])         # WD_ERR_N per lane
+    det, sil = res.detected_errors, res.silent_errors
+    trips, probes = res.wd_trips, res.wd_probes
+    # the watchdog bound is EXACT in every grid cell of every wd lane
+    bound = wd_n * (trips + 1) + probes
+    wd_on = wd_n > 0
+    assert (det[..., wd_on] <= bound[..., wd_on]).all(), \
+        "watchdog detected-error bound violated"
+
+    n_req = (sum(tr.arrival.shape[0] for tr in traces)
+             * len(pols) * len(scens))
+    tuned_cnt = lambda a, f: int(a[:, :, 0, :, f].sum())  # noqa: E731
+
+    assert tuned_cnt(det, 0) == 0 and tuned_cnt(sil, 0) == 0
+    pairs, parts = {}, []
+    for (m, s), (f_off, f_wd) in lanes.items():
+        sil_off, sil_on = tuned_cnt(sil, f_off), tuned_cnt(sil, f_wd)
+        det_off, det_on = tuned_cnt(det, f_off), tuned_cnt(det, f_wd)
+        gb = float(red_f[0] - red_f[f_wd]) * 100.0  # points given back
+        ratio = sil_off / max(sil_on, 1)
+        rate_off = (det_off + sil_off) / n_req
+        rate_on = (det_on + sil_on) / n_req
+        # watchdog-off keeps accumulating; watchdog-on is clamped
+        assert sil_off >= 50, (m, s, sil_off)
+        assert ratio >= 10.0, (m, s, sil_off, sil_on)
+        assert gb <= 2.0, (m, s, gb)
+        assert rate_on < rate_off, (m, s)
+        pairs[f"{m}.{s}"] = {
+            "silent_off": sil_off, "silent_on": sil_on,
+            "detected_off": det_off, "detected_on": det_on,
+            "trips": tuned_cnt(trips, f_wd),
+            "probes": tuned_cnt(probes, f_wd),
+            "err_rate_off": round(rate_off, 5),
+            "err_rate_on": round(rate_on, 5),
+            "giveback_pt": round(gb, 3),
+            "silent_ratio": round(ratio, 1)}
+        parts.append(f"{m}.{s}:sil {sil_off}->{sil_on}"
+                     f"/gb={gb:.2f}pt/x{ratio:.0f}")
+
+    emit("fault_grid", t.us,
+         "none:red={:.1%}|".format(float(red_f[0])) + "|".join(parts)
+         + f"|wd_bound=exact|dispatches={dispatches}")
+
+    return {
+        "reduction_none": float(red_f[0]),
+        "pairs": pairs,
+        "grid": {"traces": len(traces), "policies": len(pols),
+                 "tables": 2, "scenarios": len(scens),
+                 "faults": len(fspec), "requests": n_req},
+        "dispatches": {"replay": dispatches, "total": dispatches},
+    }
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(fast=True), indent=1))

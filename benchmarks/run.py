@@ -106,11 +106,11 @@ def main() -> None:
                          "FACTOR x its baseline (default 2.0)")
     args = ap.parse_args()
 
-    from benchmarks import (fig2_refresh, fig2_timing, fig3_population,
-                            fig4_system, fig_bank, fleet_bench, framework,
-                            multi_timing, power_bench, repeatability,
-                            roofline, sim_bench, thermal_bench,
-                            traffic_bench)
+    from benchmarks import (fault_bench, fig2_refresh, fig2_timing,
+                            fig3_population, fig4_system, fig_bank,
+                            fleet_bench, framework, multi_timing,
+                            power_bench, repeatability, roofline,
+                            sim_bench, thermal_bench, traffic_bench)
 
     benches = {
         "fig2_refresh": fig2_refresh.run,
@@ -125,6 +125,7 @@ def main() -> None:
         "repeatability": repeatability.run,
         "multi_timing": multi_timing.run,
         "fleet_bench": fleet_bench.run,
+        "fault_bench": fault_bench.run,
         "traffic_bench": traffic_bench.run,
         "framework": framework.run,
         "roofline": roofline.run,
@@ -171,11 +172,24 @@ def _compare_baseline(measured: dict[str, float], baseline_dir: str,
     committed baseline — or with an unreadable/malformed one, or one
     recorded under a different --fast mode — just WARN and skip (the
     run's own summaries are already written by this point; a missing
-    or stale baseline must never fail the run).  Only comparable
-    entries gate."""
+    or stale baseline must never fail the run).  The converse holds
+    too: a baseline for a bench that did NOT run this time (renamed,
+    removed, or filtered by --only) warns and is skipped — it must
+    never gate either.  Only comparable entries gate."""
     regressions = []
     print(f"\nbaseline compare vs {baseline_dir} "
           f"(fail > {factor:g}x):", file=sys.stderr)
+    try:
+        stale = sorted(
+            f[len("BENCH_"):-len(".json")]
+            for f in os.listdir(baseline_dir)
+            if f.startswith("BENCH_") and f.endswith(".json"))
+    except OSError:
+        stale = []
+    for name in stale:
+        if name not in measured:
+            print(f"  {name}: baseline present but bench did not run "
+                  f"this time — skipped", file=sys.stderr)
     for name, wall in measured.items():
         path = os.path.join(baseline_dir, f"BENCH_{name}.json")
         try:

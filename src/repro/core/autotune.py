@@ -68,7 +68,15 @@ class AdaptiveTable:
         self._samples.setdefault((unit, b), []).append(float(value))
 
     def fit(self, min_samples: int = 16):
-        """Build the guardbanded table from observations."""
+        """Build the guardbanded table from observations.
+
+        `min_samples` is clamped to >= 2: a quantile + k*sigma
+        guardband needs a spread, and 0/1 observations have none
+        (std degenerates to 0, the "guardband" would be the single
+        sample itself).  Bins left unfitted stay out of the table, so
+        `select` answers with the static worst case — profiling with
+        degenerate data is a no-op, never an unsafe threshold."""
+        min_samples = max(int(min_samples), 2)
         for key, vals in self._samples.items():
             if len(vals) < min_samples:
                 continue

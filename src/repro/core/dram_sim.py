@@ -72,6 +72,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import faults
 from repro.core.timing import TimingParams
 
 
@@ -670,7 +671,7 @@ def service_math(t, gate, open_b, act_b, wrd_b, rdy_b, rf, w, trcd,
 
 
 def _service(s: BankState, t, b, r, w, trcd, tras, twr, trp, tcl,
-             closed, mlp_window: int, extra_gate=None):
+             closed, mlp_window: int, extra_gate=None, surcharge=None):
     """Service ONE request: gathers bank `b`'s state, applies
     `service_math`, scatters the update back.  Shared bit-for-bit
     between `replay_one` (timing scalars fixed for the whole trace)
@@ -678,8 +679,12 @@ def _service(s: BankState, t, b, r, w, trcd, tras, twr, trp, tcl,
     bin selection).  `extra_gate` (optional) is max'd into the MLP
     ring gate — the per-channel bus-occupancy gate of multi-channel
     replays; None keeps the single-channel arithmetic untouched.
-    Returns (next state, raw latency, row-hit flag, completion
-    time)."""
+    `surcharge` (optional) is a traced delay added to the request's
+    completion, latency and downstream readiness — the detected-error
+    retry price of `repro.core.faults` (the bank stays busy through
+    the JEDEC re-issue); None keeps the fault-free arithmetic
+    untouched.  Returns (next state, raw latency, row-hit flag,
+    completion time)."""
     gate = s.done_ring[s.idx % mlp_window]     # i-window completion
     if extra_gate is not None:
         gate = jnp.maximum(gate, extra_gate)
@@ -687,6 +692,11 @@ def _service(s: BankState, t, b, r, w, trcd, tras, twr, trp, tcl,
      is_hit) = service_math(t, gate, s.open_row[b], s.act_time[b],
                             s.wr_done[b], s.ready[b], r, w, trcd, tras,
                             twr, trp, tcl, closed)
+    if surcharge is not None:
+        done = done + surcharge
+        lat = lat + surcharge
+        wrd_new = jnp.where(w, wrd_new + surcharge, wrd_new)
+        ready_new = ready_new + surcharge
     s2 = BankState(open_row=s.open_row.at[b].set(row_latched),
                    act_time=s.act_time.at[b].set(act_new),
                    wr_done=s.wr_done.at[b].set(wrd_new),
@@ -699,7 +709,7 @@ def _service(s: BankState, t, b, r, w, trcd, tras, twr, trp, tcl,
 def replay_one(arrival, bank, row, is_write, valid, tp_row, closed,
                n_banks: int = 8, mlp_window: int = 8,
                n_channels: int = 1, n_ranks: int = 1, ileave=None,
-               t_burst: float = 5.0):
+               t_burst: float = 5.0, fault=None):
     """Replay one trace under one stacked timing row and page policy.
 
     arrival/bank/row/is_write: [N] request stream; `valid`: [N] mask
@@ -727,18 +737,38 @@ def replay_one(arrival, bank, row, is_write, valid, tp_row, closed,
     zero extra dispatches.  Per-bank timing rows stay keyed on the
     ORIGINAL [0, n_banks) bank id (the spatial table is per rank-level
     bank).  `n_channels == n_ranks == 1` is a static branch that keeps
-    the single-channel arithmetic bit-identical."""
+    the single-channel arithmetic bit-identical.
+
+    `fault` (optional, STATIC branch — None compiles the exact
+    fault-free path) is a `(fault_row [faults.F_COLS], jedec_row [6],
+    u [N])` triple: each request then draws a margin-conditioned
+    transient-error outcome from its issue-order uniform (detected
+    errors retry at the JEDEC tCL + `retry_ns`, priced via
+    `_service(surcharge=...)`), and a per-module watchdog degrades to
+    the JEDEC row on a tripped detected-error budget (see
+    `repro.core.faults`).  Returns then gain a third element: the
+    [faults.N_COUNTERS] int32 counter vector (detected, silent,
+    trips, degraded, probes)."""
     banked = tp_row.ndim == 2
     multi = n_channels * n_ranks > 1
+    faulted = fault is not None
     if not banked:
         trcd, tras, twr, trp, tcl = (tp_row[0], tp_row[1], tp_row[2],
                                      tp_row[3], tp_row[5])
     if multi:
         il = jnp.asarray(0 if ileave is None else ileave, jnp.int32)
+    if faulted:
+        f_row, j_row, u_arr = fault
+        j6 = (j_row[0], j_row[1], j_row[2], j_row[3], j_row[5])
+        jsum = j_row[0] + j_row[1] + j_row[2] + j_row[3]
 
     def step(carry, req):
+        if faulted:
+            carry, wd, cnt = carry
+            t, b, r, w, v, u_k = req
+        else:
+            t, b, r, w, v = req
         s, cf = carry if multi else (carry, None)
-        t, b, r, w, v = req
         if multi:
             ch, rk = chan_rank(b, r, il, n_channels, n_ranks, n_banks)
             gb = (ch * n_ranks + rk) * n_banks + b
@@ -747,42 +777,69 @@ def replay_one(arrival, bank, row, is_write, valid, tp_row, closed,
             gb, eg = b, None
         if banked:
             tb = tp_row[b]
-            s2, lat, _, done = _service(s, t, gb, r, w, tb[0], tb[1],
-                                        tb[2], tb[3], tb[5], closed,
-                                        mlp_window, extra_gate=eg)
-            tcl_b = tb[5]
+            tc6 = (tb[0], tb[1], tb[2], tb[3], tb[5])
         else:
-            s2, lat, _, done = _service(s, t, gb, r, w, trcd, tras,
-                                        twr, trp, tcl, closed,
-                                        mlp_window, extra_gate=eg)
-            tcl_b = tcl
+            tc6 = (trcd, tras, twr, trp, tcl)
+        if faulted:
+            is_probe, use_agg = faults.wd_gate(f_row, wd)
+            tc6 = tuple(jnp.where(use_agg, a, jb)
+                        for a, jb in zip(tc6, j6))
+            red = jnp.maximum(
+                1.0 - (tc6[0] + tc6[1] + tc6[2] + tc6[3]) / jsum, 0.0)
+            p = faults.error_prob(f_row, red, 0.0)
+            _, det, sil = faults.error_draw(f_row, u_k, p)
+            sur = jnp.where(det, j6[4] + f_row[faults.RETRY_NS], 0.0)
+        else:
+            sur = None
+        s2, lat, _, done = _service(s, t, gb, r, w, tc6[0], tc6[1],
+                                    tc6[2], tc6[3], tc6[4], closed,
+                                    mlp_window, extra_gate=eg,
+                                    surcharge=sur)
         if multi:
             # the channel data bus is busy for t_burst from the burst
             # start (done - tCL): later requests on this channel wait
-            c2 = (s2, cf.at[ch].set(done - tcl_b + t_burst))
+            c2 = (s2, cf.at[ch].set(done - tc6[4] + t_burst))
             c1 = (s, cf)
         else:
             c2, c1 = s2, s
         # padding: keep every state component as-is and emit zero latency
         c3 = jax.tree_util.tree_map(
             lambda new, old: jnp.where(v, new, old), c2, c1)
+        if faulted:
+            degraded = wd[4] > 0
+            wd2, new_trip = faults.wd_update(f_row, wd, det, False,
+                                            is_probe)
+            wd2 = jax.tree_util.tree_map(
+                lambda new, old: jnp.where(v, new, old), wd2, wd)
+            cnt2 = faults.counter_update(cnt, v, det, sil, new_trip,
+                                         degraded, is_probe)
+            return (c3, wd2, cnt2), jnp.where(v, lat, 0.0)
         return c3, jnp.where(v, lat, 0.0)
 
     s0 = _bank_state0(n_channels * n_ranks * n_banks, mlp_window)
     carry0 = (s0, jnp.zeros((n_channels,))) if multi else s0
-    c_end, lat = jax.lax.scan(step, carry0,
-                              (arrival, bank, row, is_write, valid))
+    xs = (arrival, bank, row, is_write, valid)
+    if faulted:
+        carry0 = (carry0, faults.wd_state0(),
+                  tuple(jnp.zeros((), jnp.int32)
+                        for _ in range(faults.N_COUNTERS)))
+        xs = xs + (u_arr,)
+    c_end, lat = jax.lax.scan(step, carry0, xs)
+    if faulted:
+        c_end, _, cnt_end = c_end
     s_end = c_end[0] if multi else c_end
     # runtime includes the trailing write-recovery window: the module is
     # busy until the last write has restored, not just until last data
     total = jnp.maximum(s_end.ready.max(), s_end.wr_done.max())
+    if faulted:
+        return lat, total, jnp.stack(cnt_end)
     return lat, total
 
 
 def replay_rows(arrival, bank, row, is_write, valid, timings, closed,
                 n_banks: int = 8, mlp_window: int = 8,
                 n_channels: int = 1, n_ranks: int = 1, ileave=None,
-                t_burst: float = 5.0):
+                t_burst: float = 5.0, fault=None):
     """Replay one trace under a whole [S, 6] STACK of timing rows in
     one `lax.scan` — the timing-row axis rides the minor (lane) axis
     of the carried bank state ([B, 4, S] packed as open-row/act/
@@ -811,9 +868,16 @@ def replay_rows(arrival, bank, row, is_write, valid, timings, closed,
     Returns (per-request latency [S, N] with zeros at padding, total
     runtime [S]).  Padding must be a suffix of `valid` (the ring gate
     is masked, not re-indexed — same contract as the Pallas kernel).
-    """
+
+    `fault` (optional, STATIC branch) is `(fault_rows [S,
+    faults.F_COLS], jedec_row [6], u [N])`: PER-LANE fault scenarios
+    against the common issue-order uniform stream — each lane carries
+    its own watchdog and counters, so the (timing x fault) product
+    rides the lane axis of one scan.  Returns then gain a third
+    element: [faults.N_COUNTERS, S] int32 counters."""
     banked = timings.ndim == 3
     multi = n_channels * n_ranks > 1
+    faulted = fault is not None
     if not banked:
         trcd, tras, twr, trp, tcl = (timings[:, 0], timings[:, 1],
                                      timings[:, 2], timings[:, 3],
@@ -821,13 +885,22 @@ def replay_rows(arrival, bank, row, is_write, valid, timings, closed,
     s_rows = timings.shape[0]
     if multi:
         il = jnp.asarray(0 if ileave is None else ileave, jnp.int32)
+    if faulted:
+        f_rows, j_row, u_arr = fault
+        fpT = f_rows.T                  # [F_COLS, S] lane columns
+        j6 = (j_row[0], j_row[1], j_row[2], j_row[3], j_row[5])
+        jsum = j_row[0] + j_row[1] + j_row[2] + j_row[3]
 
     def step(st, req):
+        if faulted:
+            st, wd, cnt = st
+            t, b, r, w, v, u_k = req
+        else:
+            t, b, r, w, v = req
         if multi:
             bs, ring, cf, idx = st      # [CRB, 4, S], [W, S], [C, S]
         else:
             bs, ring, idx = st          # [B, 4, S], [W, S], scalar
-        t, b, r, w, v = req
         if multi:
             ch, rk = chan_rank(b, r, il, n_channels, n_ranks, n_banks)
             gb = (ch * n_ranks + rk) * n_banks + b
@@ -842,10 +915,24 @@ def replay_rows(arrival, bank, row, is_write, valid, timings, closed,
             tc_ = (tb[:, 0], tb[:, 1], tb[:, 2], tb[:, 3], tb[:, 5])
         else:
             tc_ = (trcd, tras, twr, trp, tcl)
+        if faulted:
+            is_probe, use_agg = faults.wd_gate(fpT, wd)
+            tc_ = tuple(jnp.where(use_agg, a, jb)
+                        for a, jb in zip(tc_, j6))
+            red = jnp.maximum(
+                1.0 - (tc_[0] + tc_[1] + tc_[2] + tc_[3]) / jsum, 0.0)
+            p = faults.error_prob(fpT, red, 0.0)
+            _, det, sil = faults.error_draw(fpT, u_k, p)
+            sur = jnp.where(det, j6[4] + fpT[faults.RETRY_NS], 0.0)
         (latched, act_new, wrd_new, rdy_new, done, lat,
          _) = service_math(t, gate, rowb[0], rowb[1], rowb[2], rowb[3],
                            rf, w, tc_[0], tc_[1], tc_[2], tc_[3],
                            tc_[4], closed)
+        if faulted:
+            done = done + sur
+            lat = lat + sur
+            wrd_new = jnp.where(w, wrd_new + sur, wrd_new)
+            rdy_new = rdy_new + sur
         new_row = jnp.stack([jnp.broadcast_to(latched, (s_rows,)),
                              act_new, wrd_new, rdy_new])
         bs2 = bs.at[gb].set(jnp.where(v, new_row, rowb))
@@ -854,8 +941,19 @@ def replay_rows(arrival, bank, row, is_write, valid, timings, closed,
         if multi:
             busy = done - tc_[4] + t_burst     # burst start + t_burst
             cf2 = cf.at[ch].set(jnp.where(v, busy, cf[ch]))
-            return (bs2, ring2, cf2, idx2), jnp.where(v, lat, 0.0)
-        return (bs2, ring2, idx2), jnp.where(v, lat, 0.0)
+            st2 = (bs2, ring2, cf2, idx2)
+        else:
+            st2 = (bs2, ring2, idx2)
+        if faulted:
+            degraded = wd[4] > 0
+            wd2, new_trip = faults.wd_update(fpT, wd, det, False,
+                                            is_probe)
+            wd2 = jax.tree_util.tree_map(
+                lambda new, old: jnp.where(v, new, old), wd2, wd)
+            cnt2 = faults.counter_update(cnt, v, det, sil, new_trip,
+                                         degraded, is_probe)
+            return (st2, wd2, cnt2), jnp.where(v, lat, 0.0)
+        return st2, jnp.where(v, lat, 0.0)
 
     nb_tot = n_channels * n_ranks * n_banks
     bs0 = jnp.concatenate([jnp.full((nb_tot, 1, s_rows), -1.0),
@@ -863,10 +961,19 @@ def replay_rows(arrival, bank, row, is_write, valid, timings, closed,
     st0 = (bs0, jnp.zeros((mlp_window, s_rows)))
     st0 += ((jnp.zeros((n_channels, s_rows)),) if multi else ())
     st0 += (jnp.zeros((), jnp.int32),)
-    st_end, lat = jax.lax.scan(
-        step, st0, (arrival, bank, row, is_write, valid))
+    xs = (arrival, bank, row, is_write, valid)
+    if faulted:
+        st0 = (st0, faults.wd_state0((s_rows,)),
+               tuple(jnp.zeros((s_rows,), jnp.int32)
+                     for _ in range(faults.N_COUNTERS)))
+        xs = xs + (u_arr,)
+    st_end, lat = jax.lax.scan(step, st0, xs)
+    if faulted:
+        st_end, _, cnt_end = st_end
     bse = st_end[0]
     total = jnp.maximum(bse[:, 3].max(0), bse[:, 2].max(0))
+    if faulted:
+        return lat.T, total, jnp.stack(cnt_end)   # + [NC, S]
     return lat.T, total                  # [S, N], [S]
 
 
@@ -875,7 +982,7 @@ def replay_rows_frfcfs(arrival, bank, row, is_write, valid, timings,
                        n_banks: int = 8, mlp_window: int = 8,
                        all_valid: bool = False, n_channels: int = 1,
                        n_ranks: int = 1, ileave=None,
-                       t_burst: float = 5.0):
+                       t_burst: float = 5.0, fault=None):
     """MERGED FR-FCFS-lite + replay: one `lax.scan` that both picks the
     next request to issue (the `frfcfs_perm` pending-buffer scheduler)
     and services it against the `replay_rows` lane-major bank state —
@@ -908,12 +1015,25 @@ def replay_rows_frfcfs(arrival, bank, row, is_write, valid, timings,
 
     Returns (latency [S, N] in ISSUE order — the same positional
     order the prepass pipeline emits — and total runtime [S]).
-    Padding must be a suffix of `valid` (`check_prefix_valid`)."""
+    Padding must be a suffix of `valid` (`check_prefix_valid`).
+
+    `fault` (optional, STATIC branch) matches `replay_rows`:
+    `(fault_rows [S, faults.F_COLS], jedec_row [6], u [N])` with the
+    uniform stream consumed positionally by ISSUE step — exactly the
+    order the prepass pipeline consumes it, so the merged core stays
+    bit-identical to prepass + faulted `replay_rows`.  Returns then
+    gain [faults.N_COUNTERS, S] int32 counters."""
     n = arrival.shape[0]
     w = max_window
     assert 1 <= w <= n, (w, n)
     banked = timings.ndim == 3
     multi = n_channels * n_ranks > 1
+    faulted = fault is not None
+    if faulted:
+        f_rows, j_row, u_arr = fault
+        fpT = f_rows.T                  # [F_COLS, S] lane columns
+        j6 = (j_row[0], j_row[1], j_row[2], j_row[3], j_row[5])
+        jsum = j_row[0] + j_row[1] + j_row[2] + j_row[3]
     il = (jnp.asarray(0 if ileave is None else ileave, jnp.int32)
           if multi else None)
     if not banked:
@@ -948,7 +1068,9 @@ def replay_rows_frfcfs(arrival, bank, row, is_write, valid, timings,
               jnp.zeros((n_channels, s_rows)),      # chan bus free
               jnp.zeros((), jnp.int32))
 
-    def step(st, _):
+    def step(st, u_k):
+        if faulted:
+            st, wd, cnt = st
         buf, open_pred, defer, nxt, bs, ring, cf, idx = st
         # --- scheduler: pick the issue slot (mirrors frfcfs_perm) ---
         b_int = buf[1].astype(jnp.int32)
@@ -986,10 +1108,24 @@ def replay_rows_frfcfs(arrival, bank, row, is_write, valid, timings,
             tc_ = (tb[:, 0], tb[:, 1], tb[:, 2], tb[:, 3], tb[:, 5])
         else:
             tc_ = (trcd, tras, twr, trp, tcl)
+        if faulted:
+            is_probe, use_agg = faults.wd_gate(fpT, wd)
+            tc_ = tuple(jnp.where(use_agg, a, jb)
+                        for a, jb in zip(tc_, j6))
+            red = jnp.maximum(
+                1.0 - (tc_[0] + tc_[1] + tc_[2] + tc_[3]) / jsum, 0.0)
+            p_e = faults.error_prob(fpT, red, 0.0)
+            _, det, sil = faults.error_draw(fpT, u_k, p_e)
+            sur = jnp.where(det, j6[4] + fpT[faults.RETRY_NS], 0.0)
         (latched, act_new, wrd_new, rdy_new, done, lat,
          _) = service_math(t, gate, rowb[0], rowb[1], rowb[2], rowb[3],
                            rf, wr, tc_[0], tc_[1], tc_[2], tc_[3],
                            tc_[4], closed)
+        if faulted:
+            done = done + sur
+            lat = lat + sur
+            wrd_new = jnp.where(wr, wrd_new + sur, wrd_new)
+            rdy_new = rdy_new + sur
         new_row = jnp.stack([jnp.broadcast_to(latched, (s_rows,)),
                              act_new, wrd_new, rdy_new])
         if all_valid:
@@ -1007,9 +1143,28 @@ def replay_rows_frfcfs(arrival, bank, row, is_write, valid, timings,
             lat_out = jnp.where(v, lat, 0.0)
             cf2 = (cf.at[ch].set(jnp.where(v, done - tc_[4] + t_burst,
                                            cf[ch])) if multi else cf)
-        return ((buf2, open_pred, defer, nxt + 1, bs2, ring2, cf2,
-                 idx2), lat_out)
+        st2 = (buf2, open_pred, defer, nxt + 1, bs2, ring2, cf2, idx2)
+        if faulted:
+            degraded = wd[4] > 0
+            wd2, new_trip = faults.wd_update(fpT, wd, det, False,
+                                            is_probe)
+            if not all_valid:
+                wd2 = jax.tree_util.tree_map(
+                    lambda new, old: jnp.where(v, new, old), wd2, wd)
+            cnt2 = faults.counter_update(cnt, v, det, sil, new_trip,
+                                         degraded, is_probe)
+            return (st2, wd2, cnt2), lat_out
+        return st2, lat_out
 
+    if faulted:
+        state0 = (state0, faults.wd_state0((s_rows,)),
+                  tuple(jnp.zeros((s_rows,), jnp.int32)
+                        for _ in range(faults.N_COUNTERS)))
+        st_end, lat = jax.lax.scan(step, state0, u_arr, length=n)
+        st_end, _, cnt_end = st_end
+        bse = st_end[4]
+        total = jnp.maximum(bse[:, 3].max(0), bse[:, 2].max(0))
+        return lat.T, total, jnp.stack(cnt_end)
     (_, _, _, _, bse, _, _, _), lat = jax.lax.scan(
         step, state0, None, length=n)
     total = jnp.maximum(bse[:, 3].max(0), bse[:, 2].max(0))
@@ -1029,7 +1184,7 @@ def replay_adaptive(arrival, bank, row, is_write, valid, table, bins,
                     scn_row, tcfg_row, closed,
                     n_banks: int = 8, mlp_window: int = 8,
                     n_channels: int = 1, n_ranks: int = 1, ileave=None,
-                    t_burst: float = 5.0):
+                    t_burst: float = 5.0, fault=None):
     """Closed-loop replay: per-request in-scan timing-bin selection.
 
     `table`: [S+1, 6] stacked timing rows — one per temperature bin
@@ -1068,7 +1223,22 @@ def replay_adaptive(arrival, bank, row, is_write, valid, table, bins,
     overheat [B] in C — the bank-resolved footprint of the access
     stream, so hot banks are attributable even though the module-level
     sensor reads their sum).  With `c_heat = 0` and a steady scenario
-    this reduces to `replay_one` of the constant row, bit-for-bit."""
+    this reduces to `replay_one` of the constant row, bit-for-bit.
+
+    `fault` (optional, STATIC branch — None compiles the exact
+    fault-free path) is `(fault_row [faults.F_COLS], u [N])`: the
+    sensed temperature then runs through the `faults.fault_sensor`
+    pipeline (stuck-at / drift / noise / quantization / lag / dropout)
+    BEFORE bin selection, each request draws a margin-conditioned
+    transient-error outcome (the TRUE temperature's excess over the
+    served bin's upper edge conditions the probability — the JEDEC
+    fallback row is structurally error-free), and the watchdog
+    (detected-error budget + sensor rate-of-change implausibility)
+    degrades stickily to the table's JEDEC row with probe-based
+    recovery.  The emitted temperature/bin streams then report the
+    CONTROLLER's view: the faulted reading and the bin actually served
+    (including watchdog degradation).  Returns gain a sixth element:
+    the [faults.N_COUNTERS] int32 counter vector."""
     from repro.core.power import access_energy_from_terms
     from repro.core.thermal import ambient_at
     tau, c_heat, hyst_c = tcfg_row[0], tcfg_row[1], tcfg_row[2]
@@ -1076,24 +1246,62 @@ def replay_adaptive(arrival, bank, row, is_write, valid, table, bins,
     hyst = hyst_c * scn_row[8]                   # per-scenario scale
     banked = table.ndim == 3
     multi = n_channels * n_ranks > 1
+    faulted = fault is not None
     nb_tot = n_channels * n_ranks * n_banks
+    n_rows_t = table.shape[0]                    # S + 1 (JEDEC last)
     il = (jnp.asarray(0 if ileave is None else ileave, jnp.int32)
           if multi else None)
+    if faulted:
+        f_row, u_arr = fault
+        # bin s's upper edge; the JEDEC fallback "bin" has none
+        bins_ext = jnp.concatenate(
+            [jnp.asarray(bins, jnp.float32),
+             jnp.full((1,), jnp.inf, jnp.float32)])
 
     def step(carry, req):
+        if faulted:
+            carry, fstate = carry
+            lag_p, held_p, psen_p, wd, cnt = fstate
+            t, b, r, w, v, u_k, k_idx = req
+        else:
+            t, b, r, w, v = req
         s, cf = carry if multi else (carry, None)
-        t, b, r, w, v = req
         dt = jnp.maximum(t - s.t_prev, 0.0)
         heat = s.heat * jnp.exp(-dt / tau)
         sensed = ambient_at(scn_row, t) + heat.sum()
+        if faulted:
+            reading, lag2, held2 = faults.fault_sensor(
+                f_row, t, dt, sensed, lag_p, held_p, k_idx)
+        else:
+            reading = sensed
         # conservative rounding UP (smallest bin edge >= sensed); the
         # index len(bins) selects the JEDEC fallback row
-        up = jnp.searchsorted(bins, sensed, side="left")
+        up = jnp.searchsorted(bins, reading, side="left")
         # down-switch only once sensed has fallen `hyst` below the
         # cooler bin's edge; up-switches bypass the hysteresis entirely
-        down = jnp.searchsorted(bins, sensed + hyst, side="left")
+        down = jnp.searchsorted(bins, reading + hyst, side="left")
         new_bin = jnp.maximum(up, jnp.minimum(s.cur_bin, down))
-        tp = table[new_bin, b] if banked else table[new_bin]
+        if faulted:
+            is_probe, use_agg = faults.wd_gate(f_row, wd)
+            use_bin = jnp.where(use_agg, new_bin, n_rows_t - 1)
+        else:
+            use_bin = new_bin
+        tp = table[use_bin, b] if banked else table[use_bin]
+        if faulted:
+            jed = table[n_rows_t - 1, b] if banked \
+                else table[n_rows_t - 1]
+            jsum = jed[0] + jed[1] + jed[2] + jed[3]
+            red = jnp.maximum(
+                1.0 - (tp[0] + tp[1] + tp[2] + tp[3]) / jsum, 0.0)
+            # the TRUE temperature's excess over the served bin's
+            # edge — a mis-binned hot module errors even though its
+            # (faulted) reading looked fine
+            excess = jnp.maximum(sensed - bins_ext[use_bin], 0.0)
+            p_e = faults.error_prob(f_row, red, excess)
+            _, det, sil = faults.error_draw(f_row, u_k, p_e)
+            sur = jnp.where(det, jed[5] + f_row[faults.RETRY_NS], 0.0)
+        else:
+            sur = None
         if multi:
             ch, rk = chan_rank(b, r, il, n_channels, n_ranks, n_banks)
             gb = (ch * n_ranks + rk) * n_banks + b
@@ -1103,7 +1311,7 @@ def replay_adaptive(arrival, bank, row, is_write, valid, table, bins,
         s2b, lat, is_hit, done = _service(s.bank, t, gb, r, w, tp[0],
                                           tp[1], tp[2], tp[3], tp[5],
                                           closed, mlp_window,
-                                          extra_gate=eg)
+                                          extra_gate=eg, surcharge=sur)
         # closed loop: the heat deposit depends on the row-active
         # window of the timings we just selected (same formula as the
         # host-side power model, by construction)
@@ -1117,21 +1325,48 @@ def replay_adaptive(arrival, bank, row, is_write, valid, table, bins,
         c2 = (s2, cf.at[ch].set(done - tp[5] + t_burst)) if multi \
             else s2
         c1 = (s, cf) if multi else s
+        if faulted:
+            # implausibility: per-request reading jump beyond the
+            # rate-of-change bound (needs a previous reading)
+            implaus = ((f_row[faults.WD_JUMP_C] > 0.0)
+                       & (psen_p > 0.5 * faults.NO_READING)
+                       & (jnp.abs(reading - psen_p)
+                          > f_row[faults.WD_JUMP_C]))
+            degraded = wd[4] > 0
+            wd2, new_trip = faults.wd_update(f_row, wd, det, implaus,
+                                             is_probe)
+            cnt2 = faults.counter_update(cnt, v, det, sil, new_trip,
+                                         degraded, is_probe)
+            c2 = (c2, (lag2, held2, reading, wd2, cnt2))
+            c1 = (c1, fstate)
         c3 = jax.tree_util.tree_map(
             lambda new, old: jnp.where(v, new, old), c2, c1)
         return c3, (jnp.where(v, lat, 0.0),
-                    jnp.where(v, sensed, 0.0),
-                    jnp.where(v, new_bin.astype(jnp.int32), -1))
+                    jnp.where(v, reading, 0.0),
+                    jnp.where(v, use_bin.astype(jnp.int32), -1))
 
     s0 = AdaptiveState(bank=_bank_state0(nb_tot, mlp_window),
                        heat=jnp.zeros((nb_tot,)),
                        cur_bin=jnp.zeros((), jnp.int32),
                        t_prev=jnp.zeros(()))
     carry0 = (s0, jnp.zeros((n_channels,))) if multi else s0
-    c_end, (lat, temp, bin_sel) = jax.lax.scan(
-        step, carry0, (arrival, bank, row, is_write, valid))
+    xs = (arrival, bank, row, is_write, valid)
+    if faulted:
+        no_r = jnp.asarray(faults.NO_READING, jnp.float32)
+        carry0 = (carry0, (no_r, no_r, no_r, faults.wd_state0(),
+                           tuple(jnp.zeros((), jnp.int32)
+                                 for _ in range(faults.N_COUNTERS))))
+        xs = xs + (u_arr,
+                   jnp.arange(arrival.shape[0], dtype=jnp.int32))
+    c_end, (lat, temp, bin_sel) = jax.lax.scan(step, carry0, xs)
+    if faulted:
+        c_end, fstate_end = c_end
+        cnt_end = fstate_end[4]
     s_end = c_end[0] if multi else c_end
     total = jnp.maximum(s_end.bank.ready.max(), s_end.bank.wr_done.max())
+    if faulted:
+        return (lat, total, temp, bin_sel, s_end.heat,
+                jnp.stack(cnt_end))
     return lat, total, temp, bin_sel, s_end.heat
 
 

@@ -65,6 +65,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import faults
 from repro.core import timing as T
 from repro.core.autotune import ReplayConfig, ReplayTuner, replay_unit
 from repro.core.dram_sim import (OPEN_FCFS, SYNTH_SPECS, Policy,
@@ -142,6 +143,13 @@ class SimSpec:
     n_channels: int = 1
     n_ranks: int = 1
     t_burst_ns: float = 5.0
+    # optional fault AXIS (`faults.FaultSpec`): every campaign cell
+    # additionally replays under every fault scenario, all in the SAME
+    # dispatch — results then gain a trailing F axis plus the
+    # [..., F, faults.N_COUNTERS] counter grid.  None (or an all-inert
+    # spec) compiles the EXACT unfaulted code path (static branch,
+    # like the C*R == 1 channel degeneracy).
+    faults: "faults.FaultSpec | None" = None
 
     def __post_init__(self):
         tr = self.traces
@@ -167,6 +175,23 @@ class SimSpec:
         if tdim == 3:
             assert self.timings.shape[-2] == self.n_banks, \
                 (self.timings.shape, self.n_banks)
+        if self.faults is not None:
+            assert isinstance(self.faults, faults.FaultSpec), \
+                type(self.faults)
+            if self.fault_on and self.thermal is None:
+                # the static faulted replay prices retries against ONE
+                # [6] JEDEC row (the last timing row, mirroring the
+                # adaptive tables' JEDEC-last convention) — the
+                # per-bank static stack has no such single row
+                assert self.timings.ndim == 2, \
+                    "fault axis + per-bank static timings unsupported"
+
+    @property
+    def fault_on(self) -> bool:
+        """True when the fault axis can actually perturb the replay —
+        an all-inert `FaultSpec` short-circuits to the unfaulted
+        compiled path (bit-identity by construction)."""
+        return self.faults is not None and not self.faults.is_none
 
     @classmethod
     def single(cls, trace: Trace, tp: T.TimingParams,
@@ -297,10 +322,17 @@ class SimResult:
     before reducing yourself.  The `temp_*`/`bin_*` diagnostics are
     populated only on the adaptive path.  On the device-stats fast
     path the raw `latencies`/`temps`/`bins` grids are None unless the
-    spec's `collect` asked for them."""
+    spec's `collect` asked for them.
+
+    A `SimSpec.faults` axis appends a trailing F (fault scenario) grid
+    axis to every array (before the request/bank axis on the raw
+    grids) and populates `fault_counters`: the on-device
+    [..., F, faults.N_COUNTERS] int32 accumulators, unpacked by the
+    `detected_errors` / `silent_errors` / `wd_trips` /
+    `degraded_requests` / `wd_probes` properties."""
 
     spec: SimSpec
-    mean_latency_ns: np.ndarray     # [T, P, S] | [T, P, K, C]
+    mean_latency_ns: np.ndarray     # [T, P, S] | [T, P, K, C] (+F)
     p99_latency_ns: np.ndarray      # same leading shape
     total_ns: np.ndarray            # same leading shape
     valid: np.ndarray               # [T, N]
@@ -311,6 +343,31 @@ class SimResult:
     temp_mean: np.ndarray | None = None     # [T, P, K, C]
     bin_switches: np.ndarray | None = None  # [T, P, K, C]
     bank_heat: np.ndarray | None = None     # [T, P, K, C, B] end C
+    fault_counters: np.ndarray | None = None  # [..., F, N_COUNTERS]
+
+    def _counter(self, i: int):
+        return (None if self.fault_counters is None
+                else self.fault_counters[..., i])
+
+    @property
+    def detected_errors(self):      # [..., F] int32
+        return self._counter(0)
+
+    @property
+    def silent_errors(self):        # [..., F] int32
+        return self._counter(1)
+
+    @property
+    def wd_trips(self):             # [..., F] int32
+        return self._counter(2)
+
+    @property
+    def degraded_requests(self):    # [..., F] int32
+        return self._counter(3)
+
+    @property
+    def wd_probes(self):            # [..., F] int32
+        return self._counter(4)
 
 
 def _eff_window(arrival: np.ndarray, valid: np.ndarray, window: int,
@@ -388,7 +445,7 @@ def _reorder_prepass(arrival, bank, row, is_write, valid, slacks, caps,
 def _merged_replay(arrival, bank, row, is_write, valid, timings, closed,
                    slacks, caps, reorder_plan: tuple, n_banks: int,
                    mlp_window: int, all_valid: bool,
-                   chan: tuple = (1, 1, 5.0), ileave=None):
+                   chan: tuple = (1, 1, 5.0), ileave=None, fault=None):
     """The `backend="merged"` replay core: [T, N] FCFS streams ->
     (lat [T, P, S, N], total [T, P, S]) with the FR-FCFS schedule
     FUSED into the replay scan itself (`dram_sim.replay_rows_frfcfs`)
@@ -398,7 +455,13 @@ def _merged_replay(arrival, bank, row, is_write, valid, timings, closed,
     lane-major scan.  Latencies land in ISSUE order, exactly like the
     prepass pipeline's permuted streams — the statistics reduce the
     same multiset in the same order, so the two fast paths are
-    bit-identical cell for cell."""
+    bit-identical cell for cell.
+
+    `fault` (optional) = (fault_rows [S, faults.F_COLS], jedec_row
+    [6], uniforms [T, N]) per-lane fault scenarios: the uniforms are
+    consumed positionally by ISSUE step in both cores, so the fused
+    and prepass pipelines stay bit-identical; the return gains the
+    [T, P, S, faults.N_COUNTERS] int32 counter grid."""
     t, n = arrival.shape
     p = closed.shape[0]
     s = timings.shape[0]
@@ -407,6 +470,9 @@ def _merged_replay(arrival, bank, row, is_write, valid, timings, closed,
           else jnp.asarray(ileave, jnp.int32))
     lat = jnp.zeros((t, p, s, n))
     total = jnp.zeros((t, p, s))
+    cnt = (None if fault is None
+           else jnp.zeros((t, p, s, faults.N_COUNTERS), jnp.int32))
+    u_tn = None if fault is None else fault[2]
     grouped: set[int] = set()
     for _, _, idx in reorder_plan:
         grouped.update(idx)
@@ -415,36 +481,47 @@ def _merged_replay(arrival, bank, row, is_write, valid, timings, closed,
     if ident:
         sel = np.asarray(ident, np.int32)
 
-        def plain(a, b, r, w, v, c, i_):
+        def plain(a, b, r, w, v, c, i_, uu=None):
+            fl = None if fault is None else (fault[0], fault[1], uu)
             return replay_rows(a, b, r, w, v, timings, c, n_banks,
                                mlp_window, n_channels=n_ch,
-                               n_ranks=n_rk, ileave=i_, t_burst=t_burst)
+                               n_ranks=n_rk, ileave=i_, t_burst=t_burst,
+                               fault=fl)
 
-        f_p = jax.vmap(plain, in_axes=(None,) * 5 + (0, 0))
-        f_tp = jax.vmap(f_p, in_axes=(0, 0, 0, 0, 0, None, None))
-        l_, t_ = f_tp(arrival, bank, row, is_write, valid, closed[sel],
-                      il[sel])
-        lat = lat.at[:, sel].set(l_)
-        total = total.at[:, sel].set(t_)
+        f_p = jax.vmap(plain, in_axes=(None,) * 5 + (0, 0, None))
+        f_tp = jax.vmap(f_p, in_axes=(0, 0, 0, 0, 0, None, None, 0))
+        out = f_tp(arrival, bank, row, is_write, valid, closed[sel],
+                   il[sel], u_tn)
+        lat = lat.at[:, sel].set(out[0])
+        total = total.at[:, sel].set(out[1])
+        if fault is not None:       # [T, Psel, NC, S] -> [T,Psel,S,NC]
+            cnt = cnt.at[:, sel].set(out[2].transpose(0, 1, 3, 2))
 
     for window, eff, idx in reorder_plan:
         sel = np.asarray(idx, np.int32)
 
-        def fused(a, b, r, w, v, c, s_, cp, i_, _w=window, _e=eff):
+        def fused(a, b, r, w, v, c, s_, cp, i_, uu=None, _w=window,
+                  _e=eff):
+            fl = None if fault is None else (fault[0], fault[1], uu)
             return replay_rows_frfcfs(a, b, r, w, v, timings, c, _w,
                                       s_, cp, min(_e, n), n_banks,
                                       mlp_window, all_valid=all_valid,
                                       n_channels=n_ch, n_ranks=n_rk,
-                                      ileave=i_, t_burst=t_burst)
+                                      ileave=i_, t_burst=t_burst,
+                                      fault=fl)
 
-        f_p = jax.vmap(fused, in_axes=(None,) * 5 + (0, 0, 0, 0))
+        f_p = jax.vmap(fused, in_axes=(None,) * 5 + (0, 0, 0, 0, None))
         f_tp = jax.vmap(f_p, in_axes=(0, 0, 0, 0, 0, None, None, None,
-                                      None))
-        l_, t_ = f_tp(arrival, bank, row, is_write, valid, closed[sel],
-                      slacks[sel], caps[sel], il[sel])
-        lat = lat.at[:, sel].set(l_)
-        total = total.at[:, sel].set(t_)
-    return lat, total
+                                      None, 0))
+        out = f_tp(arrival, bank, row, is_write, valid, closed[sel],
+                   slacks[sel], caps[sel], il[sel], u_tn)
+        lat = lat.at[:, sel].set(out[0])
+        total = total.at[:, sel].set(out[1])
+        if fault is not None:
+            cnt = cnt.at[:, sel].set(out[2].transpose(0, 1, 3, 2))
+    if fault is None:
+        return lat, total
+    return lat, total, cnt
 
 
 def _p99_k(valid: np.ndarray) -> int:
@@ -519,7 +596,7 @@ def _synth_streams(synth):
 def _static_body(n_banks, mlp_window, reorder_plan, backend, want,
                  p99_k, bs, arrival, bank, row, is_write, valid,
                  timings, closed, slacks, caps, all_valid=False,
-                 chan=(1, 1, 5.0), ileave=None):
+                 chan=(1, 1, 5.0), ileave=None, fault=None):
     """Shared static-timing replay body (traced under a jit wrapper):
     replay every (trace, policy, timing row) cell and reduce.
 
@@ -540,15 +617,30 @@ def _static_body(n_banks, mlp_window, reorder_plan, backend, want,
     scheduler-fused `dram_sim.replay_rows_frfcfs` scan,
     "pallas"/"pallas_interpret" the `repro.kernels.replay` kernel
     (lane-block size `bs`, None = kernel default).
+
+    `fault` (optional) = (fault_rows [S, faults.F_COLS], jedec_row
+    [6], threefry key): per-LANE fault scenarios — the engine expands
+    the (timing x fault) product onto the lane axis — whose error
+    uniforms are synthesized IN-dispatch (`faults.fault_uniforms`, so
+    every backend consumes identical bits); `out["cnt"]` then carries
+    the [T, P, S, faults.N_COUNTERS] int32 counter grid.
     """
     n_ch, n_rk, t_burst = chan
     il = (jnp.zeros((closed.shape[0],), jnp.int32) if ileave is None
           else jnp.asarray(ileave, jnp.int32))
+    cnt = None
+    if fault is not None:
+        f_rows, j_row, fkey = fault
+        u = faults.fault_uniforms(fkey, valid.shape[0], valid.shape[1])
+        fault = (f_rows, j_row, u)
     if backend == "merged" and arrival.ndim == 2:
-        lat, total = _merged_replay(
+        res = _merged_replay(
             arrival, bank, row, is_write, valid, timings, closed,
             slacks, caps, reorder_plan, n_banks, mlp_window, all_valid,
-            chan=chan, ileave=il)
+            chan=chan, ileave=il, fault=fault)
+        lat, total = res[:2]
+        if fault is not None:
+            cnt = res[2]
     else:
         if arrival.ndim == 2:
             a3, b3, r3, w3 = _reorder_prepass(
@@ -558,33 +650,44 @@ def _static_body(n_banks, mlp_window, reorder_plan, backend, want,
             a3, b3, r3, w3 = arrival, bank, row, is_write
 
         if backend in ("scan", "merged"):
-            def one(a, b, r, w, v, c, i_):
+            def one(a, b, r, w, v, c, i_, uu=None):
+                fl = None if fault is None else (f_rows, j_row, uu)
                 return replay_rows(a, b, r, w, v, timings, c, n_banks,
                                    mlp_window, n_channels=n_ch,
                                    n_ranks=n_rk, ileave=i_,
-                                   t_burst=t_burst)
+                                   t_burst=t_burst, fault=fl)
 
-            f_p = jax.vmap(one, in_axes=(0, 0, 0, 0, None, 0, 0))
-            f_tp = jax.vmap(f_p, in_axes=(0, 0, 0, 0, 0, None, None))
-            lat, total = f_tp(a3, b3, r3, w3, valid, closed, il)
+            f_p = jax.vmap(one, in_axes=(0, 0, 0, 0, None, 0, 0, None))
+            f_tp = jax.vmap(f_p, in_axes=(0, 0, 0, 0, 0, None, None, 0))
+            res = f_tp(a3, b3, r3, w3, valid, closed, il,
+                       None if fault is None else u)
+            lat, total = res[:2]
+            if fault is not None:   # [T, P, NC, S] -> [T, P, S, NC]
+                cnt = res[2].transpose(0, 1, 3, 2)
         else:
             from repro.kernels.replay import ops as replay_ops
-            lat, total = replay_ops.replay_grid(
+            res = replay_ops.replay_grid(
                 a3, b3, r3, w3, valid, timings, closed, n_banks,
-                mlp_window, impl=backend, bs=bs, chan=chan, ileave=il)
+                mlp_window, impl=backend, bs=bs, chan=chan, ileave=il,
+                fault=fault)
+            lat, total = res[:2]
+            if fault is not None:
+                cnt = res[2]
 
     out = {"total": total}
     if "stats" in want:
         out["mean"], out["p99"] = _device_stats(lat, valid, p99_k)
     if "lat" in want:
         out["lat"] = lat
+    if cnt is not None:
+        out["cnt"] = cnt
     return out
 
 
 def _adaptive_body(n_banks, mlp_window, reorder_plan, backend, want,
                    p99_k, bs, arrival, bank, row, is_write, valid,
                    tables, bins, scns, tcfg, closed, slacks, caps,
-                   chan=(1, 1, 5.0), ileave=None):
+                   chan=(1, 1, 5.0), ileave=None, fault=None):
     """Shared closed-loop replay body: every (trace, policy, table
     stack, thermal scenario) cell.
 
@@ -605,10 +708,20 @@ def _adaptive_body(n_banks, mlp_window, reorder_plan, backend, want,
     `dram_sim.replay_adaptive` scan (the scheduler-fused merged core
     is static-timing only, so "merged" degrades to the scan + prepass
     here).
+
+    `fault` (optional) = (fault_rows [F, faults.F_COLS], threefry
+    key): the fault axis rides INNERMOST (a trailing F grid axis on
+    every output, before N/banks) with the error uniforms synthesized
+    in-dispatch; `out["cnt"]` then carries the
+    [T, P, K, C, F, faults.N_COUNTERS] int32 counter grid.
     """
     n_ch, n_rk, t_burst = chan
     il = (jnp.zeros((closed.shape[0],), jnp.int32) if ileave is None
           else jnp.asarray(ileave, jnp.int32))
+    if fault is not None:
+        f_rows, fkey = fault
+        u = faults.fault_uniforms(fkey, valid.shape[0], valid.shape[1])
+        fault = (f_rows, u)
     if arrival.ndim == 2:
         a3, b3, r3, w3 = _reorder_prepass(
             arrival, bank, row, is_write, valid, slacks, caps,
@@ -621,14 +734,37 @@ def _adaptive_body(n_banks, mlp_window, reorder_plan, backend, want,
     if n_ch * n_rk > 1 and backend in ("pallas", "pallas_interpret"):
         backend = "scan"
     diag = None
+    cnt = None
     if backend in ("pallas", "pallas_interpret"):
         from repro.kernels.replay import ops as replay_ops
         emit_raw = ("temps" in want) or ("bins" in want)
-        lat, total, temps, bin_sel, bank_heat, diag = \
-            replay_ops.replay_grid_adaptive(
-                a3, b3, r3, w3, valid, tables, bins, scns, tcfg,
-                closed, n_banks, mlp_window, impl=backend, bs=bs,
-                emit_raw=emit_raw)
+        res = replay_ops.replay_grid_adaptive(
+            a3, b3, r3, w3, valid, tables, bins, scns, tcfg,
+            closed, n_banks, mlp_window, impl=backend, bs=bs,
+            emit_raw=emit_raw, fault=fault)
+        lat, total, temps, bin_sel, bank_heat, diag = res[:6]
+        if fault is not None:
+            cnt = res[6]
+    elif fault is not None:
+        def one_f(a, b, r, w, v, tbl, scn, c, i_, fr, uu):
+            return replay_adaptive(a, b, r, w, v, tbl, bins, scn,
+                                   tcfg, c, n_banks, mlp_window,
+                                   n_channels=n_ch, n_ranks=n_rk,
+                                   ileave=i_, t_burst=t_burst,
+                                   fault=(fr, uu))
+
+        f_f = jax.vmap(one_f, in_axes=(None,) * 9 + (0, None))
+        f_c = jax.vmap(f_f, in_axes=(None,) * 6 + (0,) + (None,) * 4)
+        f_kc = jax.vmap(f_c, in_axes=(None,) * 5 + (0,) + (None,) * 5)
+        f_pkc = jax.vmap(f_kc,
+                         in_axes=(0, 0, 0, 0, None, None, None, 0, 0,
+                                  None, None))
+        f_tpkc = jax.vmap(f_pkc,
+                          in_axes=(0, 0, 0, 0, 0, None, None, None,
+                                   None, None, 0))
+        lat, total, temps, bin_sel, bank_heat, cnt = f_tpkc(
+            a3, b3, r3, w3, valid, tables, scns, closed, il, f_rows, u)
+        cnt = cnt.astype(jnp.int32)
     else:
         def one(a, b, r, w, v, tbl, scn, c, i_):
             return replay_adaptive(a, b, r, w, v, tbl, bins, scn,
@@ -663,13 +799,16 @@ def _adaptive_body(n_banks, mlp_window, reorder_plan, backend, want,
         out["temps"] = temps
     if "bins" in want:
         out["bins"] = bin_sel
+    if cnt is not None:
+        out["cnt"] = cnt
     return out
 
 
 @functools.partial(jax.jit, static_argnums=(0, 1, 2, 3, 4, 5, 6, 7, 8))
 def _replay_grid(synth, n_banks, mlp_window, reorder_plan, backend,
                  want, p99_k, bs, chan, arrival, bank, row, is_write,
-                 valid, timings, closed, slacks, caps, ileave):
+                 valid, timings, closed, slacks, caps, ileave,
+                 fault=None):
     """ONE dispatch: (optional in-dispatch trace synthesis +) static
     replay grid — see `_static_body`.  `synth` (static) is None for
     materialized streams, or the campaign's `dram_sim.SynthSpec` /
@@ -678,31 +817,35 @@ def _replay_grid(synth, n_banks, mlp_window, reorder_plan, backend,
     dispatch (every synthetic trace is full-length, which also unlocks
     the merged core's rolling-ring `all_valid` form).  `chan` (static)
     is the `SimSpec.chan` channel geometry; `ileave` the per-policy
-    interleave-code column."""
+    interleave-code column; `fault` the optional (fault_rows,
+    jedec_row, key) lane expansion of `_static_body`."""
     all_valid = synth is not None
     if all_valid:
         arrival, bank, row, is_write, valid = _synth_streams(synth)
     return _static_body(n_banks, mlp_window, reorder_plan, backend,
                         want, p99_k, bs, arrival, bank, row, is_write,
                         valid, timings, closed, slacks, caps,
-                        all_valid=all_valid, chan=chan, ileave=ileave)
+                        all_valid=all_valid, chan=chan, ileave=ileave,
+                        fault=fault)
 
 
 @functools.partial(jax.jit, static_argnums=(0, 1, 2, 3, 4, 5, 6, 7, 8))
 def _replay_grid_adaptive(synth, n_banks, mlp_window, reorder_plan,
                           backend, want, p99_k, bs, chan, arrival,
                           bank, row, is_write, valid, tables, bins,
-                          scns, tcfg, closed, slacks, caps, ileave):
+                          scns, tcfg, closed, slacks, caps, ileave,
+                          fault=None):
     """ONE dispatch: (optional in-dispatch trace synthesis +)
     closed-loop adaptive replay grid — see `_adaptive_body` and
-    `_replay_grid`'s `synth` contract."""
+    `_replay_grid`'s `synth` contract; `fault` the optional
+    (fault_rows, key) fault axis of `_adaptive_body`."""
     if synth is not None:
         arrival, bank, row, is_write, valid = _synth_streams(synth)
     return _adaptive_body(n_banks, mlp_window, reorder_plan, backend,
                           want, p99_k, bs, arrival, bank, row,
                           is_write, valid, tables, bins, scns, tcfg,
                           closed, slacks, caps, chan=chan,
-                          ileave=ileave)
+                          ileave=ileave, fault=fault)
 
 
 @functools.partial(jax.jit, static_argnums=(0, 1, 2, 3, 4, 5, 6, 7, 8))
@@ -884,6 +1027,15 @@ def _masked_stats(lat: np.ndarray, valid: np.ndarray):
     return mean, vlo + (vhi - vlo) * frac
 
 
+def _expand_fault_axis(x, nf: int, axis: int):
+    """Broadcast an UNFAULTED result grid across an all-inert fault
+    axis: every inert scenario replays bit-identically to the
+    fault-free path, so the F rows are copies by construction — the
+    engine never pays the faulted compile for a `FaultSpec.none()`."""
+    return (None if x is None
+            else np.repeat(np.expand_dims(x, axis), nf, axis))
+
+
 def _plan_entries(windows: np.ndarray, policies, arrival, valid,
                   n: int) -> tuple:
     """Static reorder plan: `(window, eff, policy idx)` per window
@@ -1056,7 +1208,7 @@ class SimEngine:
                 jnp.asarray(caps), plan)
 
     def _dispatch(self, kind, spec, synth, plan, backend, want, p99_k,
-                  bs, streams, extras, n_real=0):
+                  bs, streams, extras, n_real=0, fault=None):
         """Route one campaign launch: the plain jitted grid, or — when
         a `mesh` is attached — the `shard_map` path (trace axis
         partitioned across the "campaign" devices, per-stream inputs
@@ -1068,14 +1220,17 @@ class SimEngine:
                 return _replay_grid(synth, spec.n_banks,
                                     spec.mlp_window, plan, backend,
                                     want, p99_k, bs, chan, *streams,
-                                    *extras)
+                                    *extras, fault=fault)
             if kind == "adaptive":
                 return _replay_grid_adaptive(
                     synth, spec.n_banks, spec.mlp_window, plan,
-                    backend, want, p99_k, bs, chan, *streams, *extras)
+                    backend, want, p99_k, bs, chan, *streams, *extras,
+                    fault=fault)
             return _bracket_grid(synth, spec.n_banks, spec.mlp_window,
                                  plan, backend, p99_k, n_real, bs,
                                  chan, *streams, *extras)
+        assert fault is None, \
+            "fault campaigns are single-device (no mesh sharding yet)"
         assert self.stats == "device" and self.reorder == "device", \
             "sharded campaigns need device stats + device reorder"
         n_dev = self.mesh.shape["campaign"]
@@ -1133,8 +1288,24 @@ class SimEngine:
         (synth, arrival, bank, row, is_write, valid_d, valid, closed,
          slacks, caps, plan) = self._streams(spec, fuse)
         self.dispatch_count += 1
+        fa = spec.faults
+        f_on = spec.fault_on
+        nf = 0 if fa is None else len(fa)
 
         if spec.thermal is None:
+            s_rows = spec.timings.shape[0]
+            timings, fault = spec.timings, None
+            if f_on:
+                # (timing x fault) product expanded onto the lane
+                # axis — lane l = s * F + f replays timing row s under
+                # scenario f; the LAST timing row doubles as the JEDEC
+                # fallback (retry re-issue + watchdog degradation
+                # target), mirroring the adaptive tables' JEDEC-last
+                # convention
+                timings = np.repeat(spec.timings, nf, axis=0)
+                fault = (jnp.asarray(np.tile(fa.pack(), (s_rows, 1))),
+                         jnp.asarray(spec.timings[-1]),
+                         jax.random.PRNGKey(fa.seed))
             want = (("stats",) + (("lat",)
                                   if "latencies" in spec.collect else ())
                     if self.stats == "device" else ("lat",))
@@ -1142,20 +1313,40 @@ class SimEngine:
                 "static", spec, synth, plan, backend, want,
                 _p99_k(valid), bs,
                 (arrival, bank, row, is_write, valid_d),
-                (jnp.asarray(spec.timings), closed, slacks, caps,
-                 jnp.asarray(spec.ileave_codes)))
+                (jnp.asarray(timings), closed, slacks, caps,
+                 jnp.asarray(spec.ileave_codes)), fault=fault)
             if self.stats == "host":
                 lat = np.asarray(out["lat"])
                 mean, p99 = _masked_stats(lat, valid)
             else:
                 mean, p99 = np.asarray(out["mean"]), np.asarray(out["p99"])
                 lat = (np.asarray(out["lat"]) if "lat" in out else None)
+            total = np.asarray(out["total"])
+            cnt = None
+            if f_on:
+                # unflatten the (timing x fault) lane axis: [T, P,
+                # S*F, ...] -> [T, P, S, F, ...]
+                def uf(x):
+                    return (None if x is None else
+                            x.reshape(x.shape[:2] + (s_rows, nf)
+                                      + x.shape[3:]))
+
+                mean, p99, total, lat = map(uf, (mean, p99, total, lat))
+                cnt = uf(np.asarray(out["cnt"]))
+            elif fa is not None:      # inert spec: F copies + zeros
+                mean, p99, total, lat = (
+                    _expand_fault_axis(x, nf, 3)
+                    for x in (mean, p99, total, lat))
+                cnt = np.zeros(total.shape + (faults.N_COUNTERS,),
+                               np.int32)
             return SimResult(spec=spec, mean_latency_ns=mean,
-                             p99_latency_ns=p99,
-                             total_ns=np.asarray(out["total"]),
-                             latencies=lat, valid=valid)
+                             p99_latency_ns=p99, total_ns=total,
+                             latencies=lat, valid=valid,
+                             fault_counters=cnt)
 
         scns, bins, tcfg = spec.thermal.pack()
+        fault = (None if not f_on else
+                 (jnp.asarray(fa.pack()), jax.random.PRNGKey(fa.seed)))
         if self.stats == "device":
             want = ("stats",)
             want += ("lat",) if "latencies" in spec.collect else ()
@@ -1168,7 +1359,7 @@ class SimEngine:
             _p99_k(valid), bs, (arrival, bank, row, is_write, valid_d),
             (jnp.asarray(spec.timings), jnp.asarray(bins),
              jnp.asarray(scns), jnp.asarray(tcfg), closed, slacks,
-             caps, jnp.asarray(spec.ileave_codes)))
+             caps, jnp.asarray(spec.ileave_codes)), fault=fault)
 
         if self.stats == "host":
             lat, temps, bin_sel = (np.asarray(out["lat"]),
@@ -1193,13 +1384,25 @@ class SimEngine:
             lat = np.asarray(out["lat"]) if "lat" in out else None
             temps = np.asarray(out["temps"]) if "temps" in out else None
             bin_sel = np.asarray(out["bins"]) if "bins" in out else None
+        total = np.asarray(out["total"])
+        heat = np.asarray(out["bank_heat"])
+        cnt = np.asarray(out["cnt"]) if f_on else None
+        if fa is not None and not f_on:
+            # inert spec: the unfaulted [T, P, K, C] grid broadcast
+            # across the F copies (axis 4, before N/banks) + zeros
+            mean, p99, total, tmax, tmean, switches, lat, temps, \
+                bin_sel, heat = (
+                    _expand_fault_axis(x, nf, 4)
+                    for x in (mean, p99, total, tmax, tmean, switches,
+                              lat, temps, bin_sel, heat))
+            cnt = np.zeros(total.shape + (faults.N_COUNTERS,),
+                           np.int32)
         return SimResult(spec=spec, mean_latency_ns=mean,
-                         p99_latency_ns=p99,
-                         total_ns=np.asarray(out["total"]),
+                         p99_latency_ns=p99, total_ns=total,
                          latencies=lat, valid=valid, temps=temps,
                          bins=bin_sel, temp_max=tmax, temp_mean=tmean,
-                         bin_switches=switches,
-                         bank_heat=np.asarray(out["bank_heat"]))
+                         bin_switches=switches, bank_heat=heat,
+                         fault_counters=cnt)
 
     def run_bracket(self, spec: SimSpec, base_row,
                     n_real: int | None = None,
@@ -1222,6 +1425,8 @@ class SimEngine:
         timing rows."""
         assert spec.thermal is not None and spec.timings.shape[0] == 1, \
             "run_bracket needs an adaptive spec with ONE table stack"
+        assert not spec.fault_on, \
+            "run_bracket carries no fault axis — run() the faulted spec"
         backend, fuse, bs = self._resolve(spec, config)
         (synth, arrival, bank, row, is_write, valid_d, valid, closed,
          slacks, caps, plan) = self._streams(spec, fuse)

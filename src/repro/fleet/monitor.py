@@ -81,6 +81,12 @@ def ecc_events(fail_counts: np.ndarray, cfg: ECCConfig = ECCConfig(),
     """
     f = np.asarray(fail_counts)
     assert np.issubdtype(f.dtype, np.integer), f.dtype
+    if (f < 0).any():
+        raise ValueError(
+            f"fail_counts must be non-negative, got min {f.min()} — a "
+            "negative failing-cell count is always an upstream "
+            "accounting bug, and the Bernoulli-coverage closed form "
+            "would silently price it as a negative event rate")
     if accesses is None:
         accesses = cfg.accesses_per_epoch
     a = np.broadcast_to(np.asarray(accesses, np.float64), f.shape)
@@ -98,7 +104,23 @@ def event_penalty_ns(corr: np.ndarray, unc: np.ndarray,
                      accesses: np.ndarray | float | None = None
                      ) -> np.ndarray:
     """Per-access latency penalty (ns) of the given event counts —
-    the ECC term of the fleet's effective-latency frontier."""
+    the ECC term of the fleet's effective-latency frontier.
+
+    UNITS CONTRACT: `corr` and `unc` are absolute EVENT COUNTS over
+    one accounting period of `accesses` served accesses — the same
+    denominator `ecc_events` priced them from (pass the same
+    `accesses` here, or leave both to the config default).  The
+    config penalties are ns PER EVENT, so the result is ns PER
+    ACCESS:
+
+        penalty = (corr * corr_penalty_ns + unc * unc_penalty_ns)
+                  / accesses      [ns/access]
+
+    i.e. the number that adds directly onto a mean request latency.
+    Passing per-access RATES for `corr`/`unc` (already divided by
+    accesses) double-divides and understates the penalty by the
+    access count — the regression test pins the counts-in /
+    ns-per-access-out convention."""
     if accesses is None:
         accesses = cfg.accesses_per_epoch
     a = np.asarray(accesses, np.float64)

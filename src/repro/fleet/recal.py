@@ -38,6 +38,19 @@ one serving EPOCH at a time:
      event expectation (`monitor.ecc_events`) is charged against the
      rows that actually served.
 
+With a `FleetSpec.faults` axis (`repro.core.faults.FaultSpec`) the
+serve dispatch itself carries in-scan fault injection: each module's
+traffic replays under its envelope row with margin-conditioned
+transient read errors — detected errors re-issue at the JEDEC row and
+their retry price lands DIRECTLY in the served latency — and the
+per-module detected-error counters become live telemetry that feeds
+the error-driven policy exactly like scrub failures (a module whose
+served traffic detected errors last epoch is implicated for
+tightening this epoch, and any in-scan detection resets the
+relaxation clean streak).  Undetected errors accumulate in the
+`served_silent` counter — the corruption the closed loop exists to
+bound.
+
 The headline artifact is the errors-avoided vs latency-given-back
 frontier across the three policies (`frontier`, plotted by
 `benchmarks.fleet_bench`): static-forever keeps all of the profiled
@@ -59,6 +72,7 @@ import dataclasses
 
 import numpy as np
 
+from repro.core import faults as fault_mod
 from repro.core import guardband
 from repro.core import timing as T
 from repro.core.aldram import DEFAULT_TEMP_BINS, ALDRAMController, TimingTable
@@ -104,9 +118,20 @@ class FleetSpec:
     # fault injection
     module_failures: tuple[tuple[int, int], ...] = ()   # (epoch, module)
     heartbeat_budget: float = 2.5            # missed beats before dead
+    # in-scan fault axis on the SERVE dispatch (sensor faults are
+    # adaptive-only; here the transient-error/watchdog columns apply):
+    # detected-error telemetry feeds the error policy next epoch
+    faults: "fault_mod.FaultSpec | None" = None
 
     def __post_init__(self):
         assert self.policy in POLICIES, self.policy
+        if self.faults is not None:
+            assert isinstance(self.faults, fault_mod.FaultSpec), \
+                type(self.faults)
+
+    @property
+    def fault_on(self) -> bool:
+        return self.faults is not None and not self.faults.is_none
 
 
 @dataclasses.dataclass
@@ -121,6 +146,9 @@ class FleetResult:
     corr_events: np.ndarray        # served correctable events
     unc_events: np.ndarray         # served uncorrectable events
     scrub_corr: np.ndarray         # scrub-detected (and corrected) cells
+    served_detected: np.ndarray    # in-scan detected (retried) errors
+    served_silent: np.ndarray      # in-scan SILENT corruptions
+    served_wd_trips: np.ndarray    # in-scan watchdog trips
     tighten_steps: np.ndarray
     version: np.ndarray            # deployed TimingTable.version
     dead_modules: np.ndarray       # detected-dead count
@@ -145,6 +173,9 @@ class FleetResult:
             "total_corr": float(self.corr_events.sum()),
             "total_unc": float(self.unc_events.sum()),
             "total_scrub_corr": float(self.scrub_corr.sum()),
+            "total_served_detected": float(self.served_detected.sum()),
+            "total_served_silent": float(self.served_silent.sum()),
+            "total_served_wd_trips": float(self.served_wd_trips.sum()),
             "total_events": total_events,
             "final_version": int(self.version[-1]),
             "n_recals": len(self.recal_epochs),
@@ -329,7 +360,8 @@ class FleetEngine:
         e_ = spec.n_epochs
         rec = {k: np.zeros(e_) for k in
                ("temp_c", "lat_jedec_ns", "lat_fleet_ns", "eff_lat_ns",
-                "corr_events", "unc_events", "scrub_corr")}
+                "corr_events", "unc_events", "scrub_corr",
+                "served_detected", "served_silent", "served_wd_trips")}
         rec_i = {k: np.zeros(e_, np.int64) for k in
                  ("tighten_steps", "version", "dead_modules",
                   "straggler_fallbacks", "jedec_fallbacks")}
@@ -337,6 +369,10 @@ class FleetEngine:
         relax_epochs: list[int] = []
         relax_rejected: list[int] = []
         clean_streak = 0
+        f_on = spec.fault_on
+        # per-module detected-error counts from LAST epoch's serve —
+        # the in-scan telemetry the error policy consumes this epoch
+        det_prev = np.zeros(m, np.int64)
         d0 = self.sim.dispatch_count
         m0 = self.monitor.engine.dispatch_count
 
@@ -383,6 +419,13 @@ class FleetEngine:
                 probe = self.monitor.probe(dpop, rows_e, temp)
             elif spec.policy == "error" and not over:
                 fail = probe.fail_mask() & alive[:, None]
+                if f_on and (det_prev > 0).any():
+                    # in-scan telemetry: modules whose SERVED traffic
+                    # detected errors last epoch are implicated for
+                    # (at least) one tighten step — subsequent loop
+                    # iterations re-check with fresh scrub evidence
+                    fail = fail | ((det_prev > 0)[:, None]
+                                   & alive[:, None])
                 if fail.any():
                     clean_streak = 0
                     while fail.any() and tighten < spec.max_tighten_steps:
@@ -438,15 +481,44 @@ class FleetEngine:
                             relax_rejected.append(e)
 
             # -------- serve: ONE replay dispatch (JEDEC + per-module
-            # rows share the per-bank timing axis)
-            timings = np.empty((1 + m, banks, 6), np.float32)
-            timings[0] = self._jrow
-            timings[1:] = rows_e
-            res = self.sim.run(SimSpec(traces=traces, timings=timings,
-                                       n_banks=banks))
-            lat = res.mean_latency_ns            # [T, 1, 1 + m]
-            lat_j = float(lat[:, 0, 0].mean())
-            lat_f = float(lat[:, 0, 1:][:, alive].mean())
+            # rows share the timing axis).  With a fault axis the
+            # per-module rows collapse to their conservative bank
+            # ENVELOPE (the static faulted replay prices retries
+            # against one [6] JEDEC row, which rides LAST per the
+            # engine convention) and the counters come back per lane.
+            if f_on:
+                timings = np.empty((m + 1, 6), np.float32)
+                env = rows_e.max(axis=1)
+                env[:, 4] = rows_e[:, :, 4].min(axis=1)
+                timings[:m] = env
+                timings[m] = self._jrow          # JEDEC fallback LAST
+                res = self.sim.run(SimSpec(traces=traces,
+                                           timings=timings,
+                                           n_banks=banks,
+                                           faults=spec.faults))
+                lat = res.mean_latency_ns        # [T, 1, m + 1, F]
+                lat_j = float(lat[:, 0, m].mean())
+                lat_f = float(lat[:, 0, :m][:, alive].mean())
+                det_m = np.asarray(
+                    res.detected_errors)[:, 0, :m].sum(axis=(0, 2))
+                sil_m = np.asarray(
+                    res.silent_errors)[:, 0, :m].sum(axis=(0, 2))
+                trp_m = np.asarray(
+                    res.wd_trips)[:, 0, :m].sum(axis=(0, 2))
+                det_prev = np.where(alive, det_m, 0).astype(np.int64)
+                rec["served_detected"][e] = float(det_m[alive].sum())
+                rec["served_silent"][e] = float(sil_m[alive].sum())
+                rec["served_wd_trips"][e] = float(trp_m[alive].sum())
+            else:
+                timings = np.empty((1 + m, banks, 6), np.float32)
+                timings[0] = self._jrow
+                timings[1:] = rows_e
+                res = self.sim.run(SimSpec(traces=traces,
+                                           timings=timings,
+                                           n_banks=banks))
+                lat = res.mean_latency_ns        # [T, 1, 1 + m]
+                lat_j = float(lat[:, 0, 0].mean())
+                lat_f = float(lat[:, 0, 1:][:, alive].mean())
 
             # -------- ECC events of the served traffic, charged
             # against the rows that actually served

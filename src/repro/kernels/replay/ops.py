@@ -40,7 +40,7 @@ def _pad_rows(timings_t: jnp.ndarray, bs: int) -> jnp.ndarray:
 def replay_grid(arrival, bank, row, is_write, valid, timings, closed,
                 n_banks: int = 8, mlp_window: int = 8,
                 impl: str = "auto", bs: int | None = None,
-                chan=(1, 1, 5.0), ileave=None):
+                chan=(1, 1, 5.0), ileave=None, fault=None):
     """arrival/bank/row/is_write: [T, P, N]; valid: [T, N]; timings:
     [S, 6] or per-bank [S, banks, 6]; closed: [P] bool; `chan`
     (static) = (n_channels, n_ranks, t_burst_ns) channel geometry and
@@ -48,6 +48,11 @@ def replay_grid(arrival, bank, row, is_write, valid, timings, closed,
     the single-channel default) -> (latency [T, P, S, N], total
     [T, P, S]) — same contract as the lax.scan path
     (`ref.replay_grid`).
+
+    `fault` (optional) = (fault_rows [S, faults.F_COLS], jedec_row
+    [6], uniforms [T, N]) — per-LANE fault scenarios, same contract as
+    `ref.replay_grid`; the returns then gain a [T, P, S,
+    faults.N_COUNTERS] int32 counter grid.
     """
     check_prefix_valid(valid, "replay_grid")
     if impl == "auto":
@@ -55,7 +60,8 @@ def replay_grid(arrival, bank, row, is_write, valid, timings, closed,
     if impl == "ref":
         return ref.replay_grid(arrival, bank, row, is_write, valid,
                                timings, closed, n_banks, mlp_window,
-                               chan=tuple(chan), ileave=ileave)
+                               chan=tuple(chan), ileave=ileave,
+                               fault=fault)
 
     bs = bs or replay.BLOCK_ROWS
     t, p, n = arrival.shape
@@ -80,15 +86,33 @@ def replay_grid(arrival, bank, row, is_write, valid, timings, closed,
     # [S, 6] -> [6, S]; per-bank [S, B, 6] -> [B, 6, S]
     tim_t = _pad_rows(tim.T if tim.ndim == 2
                       else tim.transpose(1, 2, 0), bs)
+    k_fault = None
+    if fault is not None:
+        f_rows, j_row, u = fault
+        # lane-tiled fault rows [F_COLS, S_pad] (pad lanes replicate
+        # lane 0, outputs sliced off) + the JEDEC fallback column +
+        # per-cell uniforms (shared across the policy axis)
+        flt_t = _pad_rows(jnp.asarray(f_rows, jnp.float32).T, bs)
+        jed_col = jnp.asarray(j_row, jnp.float32)[:, None]
+        u_g = jnp.broadcast_to(
+            jnp.asarray(u, jnp.float32)[:, None, :],
+            (t, p, n)).reshape(g, n)
+        k_fault = (flt_t, jed_col, u_g)
 
-    lat, total = replay.replay_blocks(
+    out = replay.replay_blocks(
         closed_col, il_col, arrival_g, bank_g, row_g, wr_g, val_g,
         tim_t, n_banks=n_banks, mlp_window=mlp_window,
         interpret=(impl == "pallas_interpret"), bs=bs,
-        chan=tuple(chan))
+        chan=tuple(chan), fault=k_fault)
+    lat, total = out[:2]
     # [G, N, S_pad] -> [T, P, S, N]
     lat = lat[:, :, :s].reshape(t, p, n, s).transpose(0, 1, 3, 2)
-    return lat, total[:, :s].reshape(t, p, s)
+    total = total[:, :s].reshape(t, p, s)
+    if fault is None:
+        return lat, total
+    cnt = jnp.stack([c[:, :s].reshape(t, p, s) for c in out[2:]],
+                    axis=-1)                    # [T, P, S, NC]
+    return lat, total, cnt
 
 
 def _adaptive_bs(length: int, bs: int | None) -> int:
@@ -105,7 +129,8 @@ def _adaptive_bs(length: int, bs: int | None) -> int:
 def replay_grid_adaptive(arrival, bank, row, is_write, valid, tables,
                          bins, scns, tcfg, closed, n_banks: int = 8,
                          mlp_window: int = 8, impl: str = "auto",
-                         bs: int | None = None, emit_raw: bool = False):
+                         bs: int | None = None, emit_raw: bool = False,
+                         fault=None):
     """Adaptive-campaign counterpart of `replay_grid`: arrival/bank/
     row/is_write: [T, P, N]; valid: [T, N]; tables: [K, S+1, 6] or
     per-bank [K, S+1, banks, 6] (JEDEC fallback row last); bins: [S];
@@ -125,22 +150,32 @@ def replay_grid_adaptive(arrival, bank, row, is_write, valid, tables,
         (the O(grid * N) raw traces never leave VMEM otherwise).
       * ref path — temps/bin_sel always populated (the scan emits
         them anyway), diag = None (the engine reduces downstream).
+
+    `fault` (optional) = (fault_rows [F, faults.F_COLS], uniforms
+    [T, N]) rides the lane axis INNERMOST, l = (k*C + c)*F + f: every
+    grid output gains a trailing F axis (before N/banks) and the
+    return gains a 7th element, the [T, P, K, C, F, faults.N_COUNTERS]
+    int32 counter grid.
     """
     check_prefix_valid(valid, "replay_grid_adaptive")
     if impl == "auto":
         impl = "pallas" if jax.default_backend() == "tpu" else "ref"
     if impl == "ref":
-        lat, total, temps, bin_sel, bank_heat = ref.replay_grid_adaptive(
+        out = ref.replay_grid_adaptive(
             arrival, bank, row, is_write, valid, tables, bins, scns,
-            tcfg, closed, n_banks, mlp_window)
-        return lat, total, temps, bin_sel, bank_heat, None
+            tcfg, closed, n_banks, mlp_window, fault=fault)
+        lat, total, temps, bin_sel, bank_heat = out[:5]
+        if fault is None:
+            return lat, total, temps, bin_sel, bank_heat, None
+        return lat, total, temps, bin_sel, bank_heat, None, out[5]
 
     t, p, n = arrival.shape
     tab = jnp.asarray(tables, jnp.float32)
     banked = tab.ndim == 4
     k = tab.shape[0]
     c = scns.shape[0]
-    length = k * c
+    nf = 1 if fault is None else fault[0].shape[0]
+    length = k * c * nf
     bs = _adaptive_bs(length, bs)
     g = t * p
 
@@ -156,13 +191,25 @@ def replay_grid_adaptive(arrival, bank, row, is_write, valid, tables,
     closed_col = jnp.broadcast_to(
         jnp.asarray(closed).astype(jnp.float32)[None, :],
         (t, p)).reshape(g, 1)
-    # [K, S+1(, B), 6] -> [(B,) S+1, 6, K] -> repeat C: lane k*C+c
+    # [K, S+1(, B), 6] -> [(B,) S+1, 6, K] -> repeat C*F: lane
+    # l = (k*C + c)*F + f
     tab_t = (tab.transpose(2, 1, 3, 0) if banked else
              tab.transpose(1, 2, 0))
-    tab_t = _pad_rows(jnp.repeat(tab_t, c, axis=-1), bs)
-    # [C, SCN_COLS] -> [SCN_COLS, C] tiled K times: lane k*C+c
-    scn_t = _pad_rows(jnp.tile(jnp.asarray(scns, jnp.float32).T,
-                               (1, k)), bs)
+    tab_t = _pad_rows(jnp.repeat(tab_t, c * nf, axis=-1), bs)
+    # [C, SCN_COLS] -> [SCN_COLS, C] repeat F, tiled K times
+    scn_t = _pad_rows(jnp.tile(
+        jnp.repeat(jnp.asarray(scns, jnp.float32).T, nf, axis=-1),
+        (1, k)), bs)
+    k_fault = None
+    if fault is not None:
+        f_rows, u = fault
+        # [F, F_COLS] -> [F_COLS, F] tiled K*C times: lane (k*C+c)*F+f
+        flt_t = _pad_rows(jnp.tile(
+            jnp.asarray(f_rows, jnp.float32).T, (1, k * c)), bs)
+        u_g = jnp.broadcast_to(
+            jnp.asarray(u, jnp.float32)[:, None, :],
+            (t, p, n)).reshape(g, n)
+        k_fault = (flt_t, u_g)
     b_arr = jnp.asarray(bins, jnp.float32)
     if b_arr.shape[0] == 0:
         # empty bin-edge set (JEDEC-only table): a +inf row keeps the
@@ -176,22 +223,39 @@ def replay_grid_adaptive(arrival, bank, row, is_write, valid, tables,
         closed_col, arrival_g, bank_g, row_g, wr_g, val_g, tab_t,
         scn_t, bins_t, tcfg_col, n_banks=n_banks,
         mlp_window=mlp_window, interpret=(impl == "pallas_interpret"),
-        bs=bs, emit_raw=emit_raw)
+        bs=bs, emit_raw=emit_raw, fault=k_fault)
     lat, total, tmax, tmean, switches, bank_heat = out[:6]
 
-    def grid4(x):                       # [G, L_pad] -> [T, P, K, C]
-        return x[:, :length].reshape(t, p, k, c)
+    if fault is None:
+        def grid4(x):                   # [G, L_pad] -> [T, P, K, C]
+            return x[:, :length].reshape(t, p, k, c)
 
-    def grid5(x):                       # [G, N, L_pad] -> [T,P,K,C,N]
-        return (x[:, :, :length].reshape(t, p, n, k, c)
+        def grid5(x):                   # [G, N, L_pad] -> [T,P,K,C,N]
+            return (x[:, :, :length].reshape(t, p, n, k, c)
+                    .transpose(0, 1, 3, 4, 2))
+
+        heat = (bank_heat[:, :, :length].reshape(t, p, n_banks, k, c)
                 .transpose(0, 1, 3, 4, 2))
+    else:
+        def grid4(x):                   # [G, L_pad] -> [T,P,K,C,F]
+            return x[:, :length].reshape(t, p, k, c, nf)
+
+        def grid5(x):                   # [G,N,L_pad] -> [T,P,K,C,F,N]
+            return (x[:, :, :length].reshape(t, p, n, k, c, nf)
+                    .transpose(0, 1, 3, 4, 5, 2))
+
+        heat = (bank_heat[:, :, :length]
+                .reshape(t, p, n_banks, k, c, nf)
+                .transpose(0, 1, 3, 4, 5, 2))
 
     diag = (grid4(tmax), grid4(tmean), grid4(switches))
-    heat = (bank_heat[:, :, :length].reshape(t, p, n_banks, k, c)
-            .transpose(0, 1, 3, 4, 2))
     temps = grid5(out[6]) if emit_raw else None
     bin_sel = grid5(out[7]) if emit_raw else None
-    return grid5(lat), grid4(total), temps, bin_sel, heat, diag
+    if fault is None:
+        return grid5(lat), grid4(total), temps, bin_sel, heat, diag
+    cnt = jnp.stack([grid4(x) for x in out[-5:]], axis=-1)
+    return (grid5(lat), grid4(total), temps, bin_sel, heat, diag,
+            cnt)
 
 
 __all__ = ["replay_grid", "replay_grid_adaptive"]

@@ -17,16 +17,41 @@ from repro.core.dram_sim import replay_adaptive, replay_one
                    static_argnames=("n_banks", "mlp_window", "chan"))
 def replay_grid(arrival, bank, row, is_write, valid, timings, closed,
                 n_banks: int = 8, mlp_window: int = 8,
-                chan=(1, 1, 5.0), ileave=None):
+                chan=(1, 1, 5.0), ileave=None, fault=None):
     """arrival/bank/row/is_write: [T, P, N]; valid: [T, N]; timings:
     [S, 6] or per-bank [S, banks, 6] (vmapping the timing axis hands
     `replay_one` a [banks, 6] row set per lane); closed: [P] bool;
     `chan` (static) = (n_channels, n_ranks, t_burst_ns) channel
     geometry, `ileave` the per-policy interleave-code column ->
-    (latency [T, P, S, N], total [T, P, S])."""
+    (latency [T, P, S, N], total [T, P, S]).
+
+    `fault` (optional, STATIC branch) = (fault_rows [S,
+    faults.F_COLS], jedec_row [6], uniforms [T, N]): each timing lane
+    carries its own fault scenario (the engine expands the (timing x
+    fault) product onto the lane axis) and the returns gain a
+    [T, P, S, faults.N_COUNTERS] int32 counter grid."""
     n_ch, n_rk, t_burst = chan
     il = (jnp.zeros((arrival.shape[1],), jnp.int32) if ileave is None
           else jnp.asarray(ileave, jnp.int32))
+
+    if fault is not None:
+        f_rows, j_row, u = fault
+
+        def one_f(a, b, r, w, v, tp, c, i_, fr, uu):
+            return replay_one(a, b, r, w, v, tp, c, n_banks,
+                              mlp_window, n_channels=n_ch,
+                              n_ranks=n_rk, ileave=i_,
+                              t_burst=t_burst, fault=(fr, j_row, uu))
+
+        f_s = jax.vmap(one_f, in_axes=(None, None, None, None, None,
+                                       0, None, None, 0, None))
+        f_ps = jax.vmap(f_s, in_axes=(0, 0, 0, 0, None, None, 0, 0,
+                                      None, None))
+        f_tps = jax.vmap(f_ps, in_axes=(0, 0, 0, 0, 0, None, None,
+                                        None, None, 0))
+        return f_tps(arrival, bank, row, is_write,
+                     jnp.asarray(valid, bool), timings, closed, il,
+                     f_rows, u)
 
     def one(a, b, r, w, v, tp, c, i_):
         return replay_one(a, b, r, w, v, tp, c, n_banks, mlp_window,
@@ -44,14 +69,40 @@ def replay_grid(arrival, bank, row, is_write, valid, timings, closed,
 @functools.partial(jax.jit, static_argnames=("n_banks", "mlp_window"))
 def replay_grid_adaptive(arrival, bank, row, is_write, valid, tables,
                          bins, scns, tcfg, closed, n_banks: int = 8,
-                         mlp_window: int = 8):
+                         mlp_window: int = 8, fault=None):
     """Adaptive oracle: `dram_sim.replay_adaptive` vmapped over the
     (trace, policy, table stack, scenario) axes.  arrival/bank/row/
     is_write: [T, P, N]; valid: [T, N]; tables: [K, S+1, 6] or
     per-bank [K, S+1, banks, 6]; bins: [S]; scns: [C, SCN_COLS];
     tcfg: [6]; closed: [P] -> (latency [T, P, K, C, N], total
     [T, P, K, C], temps [T, P, K, C, N], bins [T, P, K, C, N] int32,
-    bank_heat [T, P, K, C, banks])."""
+    bank_heat [T, P, K, C, banks]).
+
+    `fault` (optional, STATIC branch) = (fault_rows [F,
+    faults.F_COLS], uniforms [T, N]) adds the fault axis INNERMOST
+    (outputs gain a trailing F grid axis before N/banks) plus a
+    [T, P, K, C, F, faults.N_COUNTERS] int32 counter grid."""
+    if fault is not None:
+        f_rows, u = fault
+
+        def one_f(a, b, r, w, v, tbl, scn, c, fr, uu):
+            return replay_adaptive(a, b, r, w, v, tbl, bins, scn,
+                                   tcfg, c, n_banks, mlp_window,
+                                   fault=(fr, uu))
+
+        f_f = jax.vmap(one_f, in_axes=(None,) * 8 + (0, None))
+        f_c = jax.vmap(f_f, in_axes=(None,) * 5
+                       + (None, 0, None, None, None))
+        f_kc = jax.vmap(f_c, in_axes=(None,) * 5
+                        + (0, None, None, None, None))
+        f_pkc = jax.vmap(f_kc, in_axes=(0, 0, 0, 0, None, None, None,
+                                        0, None, None))
+        f_tpkc = jax.vmap(f_pkc, in_axes=(0, 0, 0, 0, 0, None, None,
+                                          None, None, 0))
+        return f_tpkc(arrival, bank, row, is_write,
+                      jnp.asarray(valid, bool), tables, scns, closed,
+                      f_rows, u)
+
     def one(a, b, r, w, v, tbl, scn, c):
         return replay_adaptive(a, b, r, w, v, tbl, bins, scn, tcfg, c,
                                n_banks, mlp_window)

@@ -58,6 +58,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import faults
 from repro.core.dram_sim import chan_rank, service_math
 from repro.core.power import access_energy_from_terms
 from repro.core.thermal import ambient_at
@@ -67,10 +68,21 @@ BLOCK_ROWS = 128
 
 
 def _kernel(closed_ref, il_ref, arr_ref, bank_ref, row_ref, wr_ref,
-            val_ref, tim_ref, lat_ref, total_ref, open_s, act_s,
-            wrd_s, rdy_s, ring_s, cf_s, *, n_banks: int,
+            val_ref, tim_ref, *refs, n_banks: int,
             mlp_window: int, n_req: int, banked: bool = False,
-            chan=(1, 1, 5.0)):
+            chan=(1, 1, 5.0), faulted: bool = False):
+    if faulted:
+        # extra inputs: lane-tiled fault rows [F_COLS, bs], the JEDEC
+        # fallback column [6, 1], per-cell issue-order uniforms [1, N];
+        # extra outputs: the five fault counters as on-device
+        # accumulator tiles; extra scratch: the per-lane watchdog.
+        (flt_ref, jed_ref, u_ref, lat_ref, total_ref, det_ref,
+         sil_ref, trp_ref, deg_ref, prb_ref, open_s, act_s, wrd_s,
+         rdy_s, ring_s, cf_s, wde_s, wdb_s, wdc_s, wdp_s,
+         wdt_s) = refs
+    else:
+        (lat_ref, total_ref, open_s, act_s, wrd_s, rdy_s, ring_s,
+         cf_s) = refs
     bs = lat_ref.shape[-1]
     n_ch, n_rk, t_burst = chan
     multi = n_ch * n_rk > 1          # static: C*R == 1 keeps the
@@ -96,6 +108,16 @@ def _kernel(closed_ref, il_ref, arr_ref, bank_ref, row_ref, wr_ref,
     rdy_s[...] = jnp.zeros((nb_tot, bs), jnp.float32)
     ring_s[...] = jnp.zeros((mlp_window, bs), jnp.float32)
     cf_s[...] = jnp.zeros((n_ch, bs), jnp.float32)
+    if faulted:
+        flt = flt_ref[...]                    # [F_COLS, bs] lane rows
+        j6 = (jed_ref[0, 0], jed_ref[1, 0], jed_ref[2, 0],
+              jed_ref[3, 0], jed_ref[5, 0])
+        jsum = (jed_ref[0, 0] + jed_ref[1, 0] + jed_ref[2, 0]
+                + jed_ref[3, 0])
+        for r_ in (det_ref, sil_ref, trp_ref, deg_ref, prb_ref):
+            r_[...] = jnp.zeros((1, bs), jnp.int32)
+        for s_ in (wde_s, wdb_s, wdc_s, wdp_s, wdt_s):
+            s_[...] = jnp.zeros((1, bs), jnp.int32)
 
     def body(k, _):
         t = arr_ref[0, k]
@@ -132,6 +154,19 @@ def _kernel(closed_ref, il_ref, arr_ref, bank_ref, row_ref, wr_ref,
             tc = (tim_b[0], tim_b[1], tim_b[2], tim_b[3], tim_b[5])
         else:
             tc = (trcd, tras, twr, trp, tcl)
+        if faulted:
+            # watchdog gate -> serve the JEDEC column when degraded;
+            # mirrors dram_sim.replay_rows operation for operation
+            wd = (wde_s[0, :], wdb_s[0, :], wdc_s[0, :], wdp_s[0, :],
+                  wdt_s[0, :])
+            is_probe, use_agg = faults.wd_gate(flt, wd)
+            tc = tuple(jnp.where(use_agg, a, jb)
+                       for a, jb in zip(tc, j6))
+            red = jnp.maximum(
+                1.0 - (tc[0] + tc[1] + tc[2] + tc[3]) / jsum, 0.0)
+            p_e = faults.error_prob(flt, red, 0.0)
+            _e, det, sil = faults.error_draw(flt, u_ref[0, k], p_e)
+            sur = jnp.where(det, j6[4] + flt[faults.RETRY_NS], 0.0)
 
         # the per-request timing model itself is the SHARED elementwise
         # helper (repro.core.dram_sim.service_math) — only the one-hot
@@ -139,6 +174,14 @@ def _kernel(closed_ref, il_ref, arr_ref, bank_ref, row_ref, wr_ref,
         (row_latched, act_new, wrd_new, rdy_new, done, lat,
          _) = service_math(t, gate, open_b, act_b, wrd_b, rdy_b, rf, w,
                            tc[0], tc[1], tc[2], tc[3], tc[4], closed)
+        if faulted:
+            # detected-error retry: re-issue at the JEDEC row keeps
+            # the bank busy through the retry (same arithmetic as
+            # dram_sim._service(surcharge=...))
+            done = done + sur
+            lat = lat + sur
+            wrd_new = jnp.where(w, wrd_new + sur, wrd_new)
+            rdy_new = rdy_new + sur
 
         upd = bm & v
         open_s[...] = jnp.where(upd, row_latched, open_s[...])
@@ -150,6 +193,24 @@ def _kernel(closed_ref, il_ref, arr_ref, bank_ref, row_ref, wr_ref,
             # bus busy for t_burst ns from the burst start (done - tCL)
             busy = done - tc[4] + t_burst
             cf_s[...] = jnp.where(cm & v, busy, cf_s[...])
+        if faulted:
+            degraded = wd[4] > 0
+            wd2, new_trip = faults.wd_update(flt, wd, det, False,
+                                             is_probe)
+            wde_s[0, :] = jnp.where(v, wd2[0], wd[0])
+            wdb_s[0, :] = jnp.where(v, wd2[1], wd[1])
+            wdc_s[0, :] = jnp.where(v, wd2[2], wd[2])
+            wdp_s[0, :] = jnp.where(v, wd2[3], wd[3])
+            wdt_s[0, :] = jnp.where(v, wd2[4], wd[4])
+            vi = v.astype(jnp.int32)
+            det_ref[0, :] = det_ref[0, :] + det.astype(jnp.int32) * vi
+            sil_ref[0, :] = sil_ref[0, :] + sil.astype(jnp.int32) * vi
+            trp_ref[0, :] = (trp_ref[0, :]
+                             + new_trip.astype(jnp.int32) * vi)
+            deg_ref[0, :] = (deg_ref[0, :]
+                             + degraded.astype(jnp.int32) * vi)
+            prb_ref[0, :] = (prb_ref[0, :]
+                             + is_probe.astype(jnp.int32) * vi)
 
         lat_ref[0, k, :] = jnp.where(v, lat, 0.0)
         return 0
@@ -162,7 +223,8 @@ def _kernel(closed_ref, il_ref, arr_ref, bank_ref, row_ref, wr_ref,
 def _adaptive_kernel(closed_ref, arr_ref, bank_ref, row_ref, wr_ref,
                      val_ref, tim_ref, scn_ref, bins_ref, tcfg_ref,
                      *refs, n_banks: int, mlp_window: int, n_req: int,
-                     banked: bool, emit_raw: bool):
+                     banked: bool, emit_raw: bool,
+                     faulted: bool = False):
     """Closed-loop (adaptive) replay cell: the static kernel's layout
     plus the `dram_sim.AdaptiveState` carried in VMEM scratch — per-
     bank RC heat [n_banks, lanes], current bin + last arrival [1,
@@ -176,15 +238,33 @@ def _adaptive_kernel(closed_ref, arr_ref, bank_ref, row_ref, wr_ref,
     fallback row last in the stack.  The temp_max / temp_mean /
     bin_switches diagnostics accumulate directly in their output
     tiles, so the O(N * lanes) raw temperature/bin traces never leave
-    VMEM unless `emit_raw` asks for them."""
+    VMEM unless `emit_raw` asks for them.
+
+    `faulted` (static) adds the `repro.core.faults` loop: a lane-tiled
+    fault-row input [F_COLS, bs] + issue-order uniforms [1, N], the
+    sensor/watchdog state as extra scratch, and the five fault
+    counters as accumulator output tiles next to temp_max /
+    bin_switches — mirroring `dram_sim.replay_adaptive(fault=...)`
+    operation for operation."""
+    refs = list(refs)
+    if faulted:
+        flt_ref, u_ref = refs[:2]
+        del refs[:2]
+    (lat_ref, total_ref, tmax_ref, tmean_ref, sw_ref,
+     heat_ref) = refs[:6]
+    del refs[:6]
     if emit_raw:
-        (lat_ref, total_ref, tmax_ref, tmean_ref, sw_ref, heat_ref,
-         traw_ref, braw_ref, open_s, act_s, wrd_s, rdy_s, ring_s,
-         heat_s, bin_s, tprev_s) = refs
-    else:
-        (lat_ref, total_ref, tmax_ref, tmean_ref, sw_ref, heat_ref,
-         open_s, act_s, wrd_s, rdy_s, ring_s, heat_s, bin_s,
-         tprev_s) = refs
+        traw_ref, braw_ref = refs[:2]
+        del refs[:2]
+    if faulted:
+        det_ref, sil_ref, trp_ref, deg_ref, prb_ref = refs[:5]
+        del refs[:5]
+    (open_s, act_s, wrd_s, rdy_s, ring_s, heat_s, bin_s,
+     tprev_s) = refs[:8]
+    del refs[:8]
+    if faulted:
+        (lag_s, held_s, psen_s, pbin_s, wde_s, wdb_s, wdc_s, wdp_s,
+         wdt_s) = refs
     bs = lat_ref.shape[-1]
     n_bins = tim_ref.shape[-3]                 # S+1 (JEDEC row last)
     closed = closed_ref[0, 0] > 0.5
@@ -210,6 +290,22 @@ def _adaptive_kernel(closed_ref, arr_ref, bank_ref, row_ref, wr_ref,
     tmax_ref[...] = jnp.full((1, bs), -jnp.inf, jnp.float32)
     tmean_ref[...] = jnp.zeros((1, bs), jnp.float32)   # sum until /cnt
     sw_ref[...] = jnp.zeros((1, bs), jnp.int32)
+    if faulted:
+        flt = flt_ref[...]                  # [F_COLS, bs] lane rows
+        # the JEDEC fallback row is a STATIC index (last in the stack)
+        jed_full = None if banked else tim_ref[n_bins - 1]  # [6, bs]
+        jall = tim_ref[:, n_bins - 1] if banked else None   # [B,6,bs]
+        s_pad = bins_t.shape[0]
+        edge_iota = jax.lax.broadcasted_iota(jnp.int32, (s_pad, bs), 0)
+        no_r = jnp.full((1, bs), faults.NO_READING, jnp.float32)
+        lag_s[...] = no_r
+        held_s[...] = no_r
+        psen_s[...] = no_r
+        pbin_s[...] = jnp.zeros((1, bs), jnp.int32)
+        for r_ in (det_ref, sil_ref, trp_ref, deg_ref, prb_ref):
+            r_[...] = jnp.zeros((1, bs), jnp.int32)
+        for s_ in (wde_s, wdb_s, wdc_s, wdp_s, wdt_s):
+            s_[...] = jnp.zeros((1, bs), jnp.int32)
 
     def body(k, _):
         t = arr_ref[0, k]
@@ -226,16 +322,33 @@ def _adaptive_kernel(closed_ref, arr_ref, bank_ref, row_ref, wr_ref,
         dt = jnp.maximum(t - tprev, 0.0)
         heat = heat_s[...] * jnp.exp(-dt / tau)[None, :]
         sensed = ambient_at(scn, t) + jnp.sum(heat, axis=0)
+        if faulted:
+            # the controller reads the FAULTED sensor register
+            lag_p, held_p, psen_p = (lag_s[0, :], held_s[0, :],
+                                     psen_s[0, :])
+            reading, lag2, held2 = faults.fault_sensor(
+                flt, t, dt, sensed, lag_p, held_p, k)
+        else:
+            reading = sensed
         cur = bin_s[0, :]
-        up = jnp.sum((bins_t < sensed[None, :]).astype(jnp.int32),
+        up = jnp.sum((bins_t < reading[None, :]).astype(jnp.int32),
                      axis=0)
-        down = jnp.sum((bins_t < (sensed + hyst)[None, :])
+        down = jnp.sum((bins_t < (reading + hyst)[None, :])
                        .astype(jnp.int32), axis=0)
         new_bin = jnp.maximum(up, jnp.minimum(cur, down))
+        if faulted:
+            # watchdog gate: serve the JEDEC fallback row (index
+            # n_bins-1) while tripped, except on probe requests
+            wd = (wde_s[0, :], wdb_s[0, :], wdc_s[0, :], wdp_s[0, :],
+                  wdt_s[0, :])
+            is_probe, use_agg = faults.wd_gate(flt, wd)
+            use_bin = jnp.where(use_agg, new_bin, n_bins - 1)
+        else:
+            use_bin = new_bin
 
         # timing row select: one-hot bin sublane mask (x bank mask on
         # per-bank tiles), same masked-reduce idiom as the bank state
-        sel = bin_iota == new_bin[None, :]               # [S+1, bs]
+        sel = bin_iota == use_bin[None, :]               # [S+1, bs]
         if banked:
             m = bm[:, None, :] & sel[None, :, :]         # [B, S+1, bs]
             tim_b = jnp.sum(jnp.where(m[:, :, None, :], tim_ref[...],
@@ -244,6 +357,22 @@ def _adaptive_kernel(closed_ref, arr_ref, bank_ref, row_ref, wr_ref,
             tim_b = jnp.sum(jnp.where(sel[:, None, :], tim_ref[...],
                                       0.0), axis=0)         # [6, bs]
         tc = (tim_b[0], tim_b[1], tim_b[2], tim_b[3], tim_b[5])
+        if faulted:
+            # margin-conditioned error draw: reduction of the SERVED
+            # row vs JEDEC + the TRUE temperature's excess over the
+            # served bin's edge (dram_sim.replay_adaptive's bins_ext)
+            jed = (jnp.sum(jnp.where(bm[:, None, :], jall, 0.0),
+                           axis=0) if banked else jed_full)  # [6, bs]
+            jsum = jed[0] + jed[1] + jed[2] + jed[3]
+            red = jnp.maximum(
+                1.0 - (tc[0] + tc[1] + tc[2] + tc[3]) / jsum, 0.0)
+            edge = jnp.sum(jnp.where(edge_iota == use_bin[None, :],
+                                     bins_t, 0.0), axis=0)
+            edge = jnp.where(use_bin >= n_bins - 1, jnp.inf, edge)
+            excess = jnp.maximum(sensed - edge, 0.0)
+            p_e = faults.error_prob(flt, red, excess)
+            _e, det, sil = faults.error_draw(flt, u_ref[0, k], p_e)
+            sur = jnp.where(det, jed[5] + flt[faults.RETRY_NS], 0.0)
 
         open_b = jnp.sum(jnp.where(bm, open_s[...], 0.0), axis=0)
         act_b = jnp.sum(jnp.where(bm, act_s[...], 0.0), axis=0)
@@ -255,6 +384,12 @@ def _adaptive_kernel(closed_ref, arr_ref, bank_ref, row_ref, wr_ref,
          is_hit) = service_math(t, gate, open_b, act_b, wrd_b, rdy_b,
                                 rf, w, tc[0], tc[1], tc[2], tc[3],
                                 tc[4], closed)
+        if faulted:
+            # detected-error retry priced into the request + bank state
+            done = done + sur
+            lat = lat + sur
+            wrd_new = jnp.where(w, wrd_new + sur, wrd_new)
+            rdy_new = rdy_new + sur
 
         # closed loop: deposit the access energy of the timings we
         # just SELECTED as heat on the accessed bank (shared formula)
@@ -272,17 +407,53 @@ def _adaptive_kernel(closed_ref, arr_ref, bank_ref, row_ref, wr_ref,
             v, heat + jnp.where(bm, c_heat * energy, 0.0), heat_s[...])
         bin_s[0, :] = jnp.where(v, new_bin, cur)
         tprev_s[0, :] = jnp.where(v, t, tprev)
+        if faulted:
+            # implausibility (reading jump beyond the rate-of-change
+            # bound), watchdog transition, counters + sensor state
+            implaus = ((flt[faults.WD_JUMP_C] > 0.0)
+                       & (psen_p > 0.5 * faults.NO_READING)
+                       & (jnp.abs(reading - psen_p)
+                          > flt[faults.WD_JUMP_C]))
+            degraded = wd[4] > 0
+            wd2, new_trip = faults.wd_update(flt, wd, det, implaus,
+                                             is_probe)
+            lag_s[0, :] = jnp.where(v, lag2, lag_p)
+            held_s[0, :] = jnp.where(v, held2, held_p)
+            psen_s[0, :] = jnp.where(v, reading, psen_p)
+            wde_s[0, :] = jnp.where(v, wd2[0], wd[0])
+            wdb_s[0, :] = jnp.where(v, wd2[1], wd[1])
+            wdc_s[0, :] = jnp.where(v, wd2[2], wd[2])
+            wdp_s[0, :] = jnp.where(v, wd2[3], wd[3])
+            wdt_s[0, :] = jnp.where(v, wd2[4], wd[4])
+            vi = v.astype(jnp.int32)
+            det_ref[0, :] = det_ref[0, :] + det.astype(jnp.int32) * vi
+            sil_ref[0, :] = sil_ref[0, :] + sil.astype(jnp.int32) * vi
+            trp_ref[0, :] = (trp_ref[0, :]
+                             + new_trip.astype(jnp.int32) * vi)
+            deg_ref[0, :] = (deg_ref[0, :]
+                             + degraded.astype(jnp.int32) * vi)
+            prb_ref[0, :] = (prb_ref[0, :]
+                             + is_probe.astype(jnp.int32) * vi)
 
-        # diagnostics accumulate in their own output tiles
+        # diagnostics accumulate in their own output tiles; the temp
+        # stats and raw traces report the CONTROLLER's view (the
+        # faulted reading, the bin actually served) — exactly what the
+        # scan path emits
         tmax_ref[0, :] = jnp.maximum(tmax_ref[0, :],
-                                     jnp.where(v, sensed, -jnp.inf))
-        tmean_ref[0, :] = tmean_ref[0, :] + jnp.where(v, sensed, 0.0)
-        sw_ref[0, :] = sw_ref[0, :] + (
-            (new_bin != cur) & v & (k > 0)).astype(jnp.int32)
+                                     jnp.where(v, reading, -jnp.inf))
+        tmean_ref[0, :] = tmean_ref[0, :] + jnp.where(v, reading, 0.0)
+        if faulted:
+            pb = pbin_s[0, :]
+            sw_ref[0, :] = sw_ref[0, :] + (
+                (use_bin != pb) & v & (k > 0)).astype(jnp.int32)
+            pbin_s[0, :] = jnp.where(v, use_bin, pb)
+        else:
+            sw_ref[0, :] = sw_ref[0, :] + (
+                (new_bin != cur) & v & (k > 0)).astype(jnp.int32)
         lat_ref[0, k, :] = jnp.where(v, lat, 0.0)
         if emit_raw:
-            traw_ref[0, k, :] = jnp.where(v, sensed, 0.0)
-            braw_ref[0, k, :] = jnp.where(v, new_bin, -1)
+            traw_ref[0, k, :] = jnp.where(v, reading, 0.0)
+            braw_ref[0, k, :] = jnp.where(v, use_bin, -1)
         return 0
 
     jax.lax.fori_loop(0, n_req, body, 0)
@@ -300,7 +471,7 @@ def adaptive_blocks(closed_col, arrival, bank, row, is_write, valid,
                     tables_t, scn_t, bins_t, tcfg_col,
                     n_banks: int = 8, mlp_window: int = 8,
                     interpret: bool = False, bs: int = BLOCK_ROWS,
-                    emit_raw: bool = False):
+                    emit_raw: bool = False, fault=None):
     """Adaptive-campaign kernel launch.  closed_col: [G, 1] float32;
     arrival: [G, N] float32; bank/row/is_write/valid: [G, N] int32;
     tables_t: [S+1, 6, L] (or PER-BANK [n_banks, S+1, 6, L]) — lane l
@@ -309,9 +480,13 @@ def adaptive_blocks(closed_col, arrival, bank, row, is_write, valid,
     L]; tcfg_col: [6, 1] `ThermalConfig.as_row`.  L % bs == 0.
     Returns (lat [G, N, L], total [G, L], tmax [G, L], tmean [G, L],
     switches [G, L] int32, bank_heat [G, n_banks, L]) plus, when
-    `emit_raw`, the raw (temps [G, N, L], bins [G, N, L] int32)."""
+    `emit_raw`, the raw (temps [G, N, L], bins [G, N, L] int32), plus,
+    when `fault` = (fault tile [F_COLS, L], uniforms [G, N]) is given,
+    the five [G, L] int32 fault counters (detected, silent, trips,
+    degraded, probes)."""
     g, n = arrival.shape
     banked = tables_t.ndim == 4
+    faulted = fault is not None
     length = tables_t.shape[-1]
     n_bins = tables_t.shape[-3]
     assert tables_t.shape[-2] == 6 and length % bs == 0, \
@@ -321,12 +496,27 @@ def adaptive_blocks(closed_col, arrival, bank, row, is_write, valid,
     grid = (g, length // bs)
     kernel = functools.partial(_adaptive_kernel, n_banks=n_banks,
                                mlp_window=mlp_window, n_req=n,
-                               banked=banked, emit_raw=emit_raw)
+                               banked=banked, emit_raw=emit_raw,
+                               faulted=faulted)
     tab_spec = (pl.BlockSpec((n_banks, n_bins, 6, bs),
                              lambda i, j: (0, 0, 0, j))
                 if banked else
                 pl.BlockSpec((n_bins, 6, bs), lambda i, j: (0, 0, j)))
     s_bins = bins_t.shape[0]
+    in_specs = [
+        pl.BlockSpec((1, 1), lambda i, j: (i, 0)),      # closed
+        pl.BlockSpec((1, n), lambda i, j: (i, 0)),      # arrival
+        pl.BlockSpec((1, n), lambda i, j: (i, 0)),      # bank
+        pl.BlockSpec((1, n), lambda i, j: (i, 0)),      # row
+        pl.BlockSpec((1, n), lambda i, j: (i, 0)),      # is_write
+        pl.BlockSpec((1, n), lambda i, j: (i, 0)),      # valid
+        tab_spec,                                       # table tile
+        pl.BlockSpec((scn_t.shape[0], bs), lambda i, j: (0, j)),
+        pl.BlockSpec((s_bins, bs), lambda i, j: (0, j)),  # bins
+        pl.BlockSpec((6, 1), lambda i, j: (0, 0)),      # tcfg
+    ]
+    inputs = [closed_col, arrival, bank, row, is_write, valid,
+              tables_t, scn_t, bins_t, tcfg_col]
     out_specs = [
         pl.BlockSpec((1, n, bs), lambda i, j: (i, 0, j)),   # lat
         pl.BlockSpec((1, bs), lambda i, j: (i, j)),         # total
@@ -343,41 +533,42 @@ def adaptive_blocks(closed_col, arrival, bank, row, is_write, valid,
         jax.ShapeDtypeStruct((g, length), jnp.int32),
         jax.ShapeDtypeStruct((g, n_banks, length), jnp.float32),
     ]
+    scratch = [
+        pltpu.VMEM((n_banks, bs), jnp.float32),   # open_row
+        pltpu.VMEM((n_banks, bs), jnp.float32),   # act_time
+        pltpu.VMEM((n_banks, bs), jnp.float32),   # wr_done
+        pltpu.VMEM((n_banks, bs), jnp.float32),   # ready
+        pltpu.VMEM((mlp_window, bs), jnp.float32),  # done_ring
+        pltpu.VMEM((n_banks, bs), jnp.float32),   # RC bank heat
+        pltpu.VMEM((1, bs), jnp.int32),           # current bin
+        pltpu.VMEM((1, bs), jnp.float32),         # last arrival
+    ]
     if emit_raw:
         out_specs += [pl.BlockSpec((1, n, bs), lambda i, j: (i, 0, j)),
                       pl.BlockSpec((1, n, bs), lambda i, j: (i, 0, j))]
         out_shape += [jax.ShapeDtypeStruct((g, n, length), jnp.float32),
                       jax.ShapeDtypeStruct((g, n, length), jnp.int32)]
+    if faulted:
+        flt_t, u = fault
+        in_specs += [
+            pl.BlockSpec((flt_t.shape[0], bs), lambda i, j: (0, j)),
+            pl.BlockSpec((1, n), lambda i, j: (i, 0)),   # uniforms
+        ]
+        inputs += [flt_t, u]
+        out_specs += [pl.BlockSpec((1, bs),
+                                   lambda i, j: (i, j))] * 5
+        out_shape += [jax.ShapeDtypeStruct((g, length), jnp.int32)] * 5
+        scratch += ([pltpu.VMEM((1, bs), jnp.float32)] * 3   # lag/held
+                    + [pltpu.VMEM((1, bs), jnp.int32)] * 6)  # pbin+wd
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),      # closed
-            pl.BlockSpec((1, n), lambda i, j: (i, 0)),      # arrival
-            pl.BlockSpec((1, n), lambda i, j: (i, 0)),      # bank
-            pl.BlockSpec((1, n), lambda i, j: (i, 0)),      # row
-            pl.BlockSpec((1, n), lambda i, j: (i, 0)),      # is_write
-            pl.BlockSpec((1, n), lambda i, j: (i, 0)),      # valid
-            tab_spec,                                       # table tile
-            pl.BlockSpec((scn_t.shape[0], bs), lambda i, j: (0, j)),
-            pl.BlockSpec((s_bins, bs), lambda i, j: (0, j)),  # bins
-            pl.BlockSpec((6, 1), lambda i, j: (0, 0)),      # tcfg
-        ],
+        in_specs=in_specs,
         out_specs=out_specs,
         out_shape=out_shape,
-        scratch_shapes=[
-            pltpu.VMEM((n_banks, bs), jnp.float32),   # open_row
-            pltpu.VMEM((n_banks, bs), jnp.float32),   # act_time
-            pltpu.VMEM((n_banks, bs), jnp.float32),   # wr_done
-            pltpu.VMEM((n_banks, bs), jnp.float32),   # ready
-            pltpu.VMEM((mlp_window, bs), jnp.float32),  # done_ring
-            pltpu.VMEM((n_banks, bs), jnp.float32),   # RC bank heat
-            pltpu.VMEM((1, bs), jnp.int32),           # current bin
-            pltpu.VMEM((1, bs), jnp.float32),         # last arrival
-        ],
+        scratch_shapes=scratch,
         interpret=interpret,
-    )(closed_col, arrival, bank, row, is_write, valid, tables_t,
-      scn_t, bins_t, tcfg_col)
+    )(*inputs)
 
 
 @functools.partial(jax.jit,
@@ -386,7 +577,7 @@ def adaptive_blocks(closed_col, arrival, bank, row, is_write, valid,
 def replay_blocks(closed_col, ileave_col, arrival, bank, row, is_write,
                   valid, timings_t, n_banks: int = 8,
                   mlp_window: int = 8, interpret: bool = False,
-                  bs: int = BLOCK_ROWS, chan=(1, 1, 5.0)):
+                  bs: int = BLOCK_ROWS, chan=(1, 1, 5.0), fault=None):
     """closed_col: [G, 1] float32 (1.0 = closed page); ileave_col:
     [G, 1] int32 per-cell interleave code (`dram_sim.ILEAVE_CODES`,
     inert on a single-channel launch); arrival: [G, N] float32;
@@ -398,9 +589,12 @@ def replay_blocks(closed_col, ileave_col, arrival, bank, row, is_write,
     C*R > 1 sizes the controller-state scratch [C*R*n_banks, bs] and
     adds the per-channel bus-free scratch [C, bs] (see `_kernel`).
     G = flattened (trace x policy) cells.  Returns (latency [G, N, S],
-    total runtime [G, S])."""
+    total runtime [G, S]); with `fault` = (fault tile [F_COLS, S],
+    JEDEC column [6, 1], uniforms [G, N]) also the five [G, S] int32
+    fault counters (detected, silent, trips, degraded, probes)."""
     g, n = arrival.shape
     banked = timings_t.ndim == 3
+    faulted = fault is not None
     s = timings_t.shape[-1]
     nb_tot = chan[0] * chan[1] * n_banks
     assert timings_t.shape[-2] == 6 and s % bs == 0, (timings_t.shape, bs)
@@ -409,39 +603,57 @@ def replay_blocks(closed_col, ileave_col, arrival, bank, row, is_write,
     grid = (g, s // bs)
     kernel = functools.partial(_kernel, n_banks=n_banks,
                                mlp_window=mlp_window, n_req=n,
-                               banked=banked, chan=chan)
+                               banked=banked, chan=chan,
+                               faulted=faulted)
     tim_spec = (pl.BlockSpec((n_banks, 6, bs), lambda i, j: (0, 0, j))
                 if banked else
                 pl.BlockSpec((6, bs), lambda i, j: (0, j)))
+    in_specs = [
+        pl.BlockSpec((1, 1), lambda i, j: (i, 0)),      # closed
+        pl.BlockSpec((1, 1), lambda i, j: (i, 0)),      # ileave
+        pl.BlockSpec((1, n), lambda i, j: (i, 0)),      # arrival
+        pl.BlockSpec((1, n), lambda i, j: (i, 0)),      # bank
+        pl.BlockSpec((1, n), lambda i, j: (i, 0)),      # row
+        pl.BlockSpec((1, n), lambda i, j: (i, 0)),      # is_write
+        pl.BlockSpec((1, n), lambda i, j: (i, 0)),      # valid
+        tim_spec,                                       # timing tile
+    ]
+    inputs = [closed_col, ileave_col, arrival, bank, row, is_write,
+              valid, timings_t]
+    out_specs = [
+        pl.BlockSpec((1, n, bs), lambda i, j: (i, 0, j)),
+        pl.BlockSpec((1, bs), lambda i, j: (i, j)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((g, n, s), jnp.float32),
+        jax.ShapeDtypeStruct((g, s), jnp.float32),
+    ]
+    scratch = [
+        pltpu.VMEM((nb_tot, bs), jnp.float32),    # open_row
+        pltpu.VMEM((nb_tot, bs), jnp.float32),    # act_time
+        pltpu.VMEM((nb_tot, bs), jnp.float32),    # wr_done
+        pltpu.VMEM((nb_tot, bs), jnp.float32),    # ready
+        pltpu.VMEM((mlp_window, bs), jnp.float32),  # done_ring
+        pltpu.VMEM((chan[0], bs), jnp.float32),   # chan bus-free
+    ]
+    if faulted:
+        flt_t, jed_col, u = fault
+        in_specs += [
+            pl.BlockSpec((flt_t.shape[0], bs), lambda i, j: (0, j)),
+            pl.BlockSpec((6, 1), lambda i, j: (0, 0)),   # JEDEC row
+            pl.BlockSpec((1, n), lambda i, j: (i, 0)),   # uniforms
+        ]
+        inputs += [flt_t, jed_col, u]
+        out_specs += [pl.BlockSpec((1, bs),
+                                   lambda i, j: (i, j))] * 5
+        out_shape += [jax.ShapeDtypeStruct((g, s), jnp.int32)] * 5
+        scratch += [pltpu.VMEM((1, bs), jnp.int32)] * 5   # watchdog
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),      # closed
-            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),      # ileave
-            pl.BlockSpec((1, n), lambda i, j: (i, 0)),      # arrival
-            pl.BlockSpec((1, n), lambda i, j: (i, 0)),      # bank
-            pl.BlockSpec((1, n), lambda i, j: (i, 0)),      # row
-            pl.BlockSpec((1, n), lambda i, j: (i, 0)),      # is_write
-            pl.BlockSpec((1, n), lambda i, j: (i, 0)),      # valid
-            tim_spec,                                       # timing tile
-        ],
-        out_specs=[
-            pl.BlockSpec((1, n, bs), lambda i, j: (i, 0, j)),
-            pl.BlockSpec((1, bs), lambda i, j: (i, j)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((g, n, s), jnp.float32),
-            jax.ShapeDtypeStruct((g, s), jnp.float32),
-        ],
-        scratch_shapes=[
-            pltpu.VMEM((nb_tot, bs), jnp.float32),    # open_row
-            pltpu.VMEM((nb_tot, bs), jnp.float32),    # act_time
-            pltpu.VMEM((nb_tot, bs), jnp.float32),    # wr_done
-            pltpu.VMEM((nb_tot, bs), jnp.float32),    # ready
-            pltpu.VMEM((mlp_window, bs), jnp.float32),  # done_ring
-            pltpu.VMEM((chan[0], bs), jnp.float32),   # chan bus-free
-        ],
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=scratch,
         interpret=interpret,
-    )(closed_col, ileave_col, arrival, bank, row, is_write, valid,
-      timings_t)
+    )(*inputs)

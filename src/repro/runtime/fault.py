@@ -42,9 +42,13 @@ class HeartbeatMonitor:
     def observe_gap(self, node: int, gap_beats: float):
         self.tables[node].observe(node, 1.0, gap_beats)
 
-    def fit(self):
+    def fit(self, min_samples: int = 16):
+        """Fit every node table; degenerate sample counts (0/1 gap
+        observations, or a `min_samples` of 0/1) are a no-op —
+        `AdaptiveTable.fit` clamps to >= 2 and skips short bins, so
+        `dead` keeps judging against the static miss budget."""
         for t in self.tables:
-            t.fit(min_samples=16)
+            t.fit(min_samples=min_samples)
 
     def dead(self, node: int, now_ms: float) -> bool:
         if np.isnan(self.last_beat[node]):      # never beaten: exempt

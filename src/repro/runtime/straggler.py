@@ -58,9 +58,13 @@ class StragglerDetector:
     def observe(self, node: int, load: float, latency_ms: float):
         self.tables[node].observe(node, load, latency_ms)
 
-    def fit(self):
+    def fit(self, min_samples: int = 24):
+        """Fit every node table; degenerate sample counts (0/1
+        observations per bin, or a `min_samples` of 0/1) are a no-op —
+        `AdaptiveTable.fit` clamps to >= 2 and skips short bins, so
+        `threshold` keeps answering the static worst-case timeout."""
         for t in self.tables:
-            t.fit(min_samples=24)
+            t.fit(min_samples=min_samples)
 
     def threshold(self, node: int, load: float) -> float:
         return self.tables[node].select(node, load)

@@ -53,3 +53,22 @@ class TestBaselineCompare:
         out = _compare_baseline({"a": 3.0, "ok": 1.1}, str(tmp_path),
                                 2.0)
         assert out == ["a"]
+
+    def test_baseline_only_bench_warns_and_skips(self, tmp_path, capsys):
+        # a committed baseline for a bench that did not run this time
+        # (renamed, removed, or filtered by --only) must never gate
+        _write(tmp_path / "BENCH_gone.json",
+               {"wall_s": 1.0, "fast": False})
+        _write(tmp_path / "BENCH_a.json",
+               {"wall_s": 1.0, "fast": False})
+        out = _compare_baseline({"a": 1.1}, str(tmp_path), 2.0)
+        assert out == []
+        err = capsys.readouterr().err
+        assert "gone" in err and "did not run" in err
+
+    def test_baseline_only_bench_does_not_mask_regression(self, tmp_path):
+        _write(tmp_path / "BENCH_gone.json",
+               {"wall_s": 1.0, "fast": False})
+        _write(tmp_path / "BENCH_a.json",
+               {"wall_s": 1.0, "fast": False})
+        assert _compare_baseline({"a": 5.0}, str(tmp_path), 2.0) == ["a"]

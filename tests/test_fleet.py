@@ -99,6 +99,25 @@ class TestECC:
         with pytest.raises(AssertionError):
             ecc_events(np.array([1.0, 2.0]))
 
+    def test_rejects_negative_counts(self):
+        with pytest.raises(ValueError, match="non-negative"):
+            ecc_events(np.array([1, -1, 2]))
+
+    def test_event_penalty_units_contract(self):
+        """`event_penalty_ns` takes EVENT COUNTS over one period of
+        `accesses` served accesses and returns ns PER ACCESS — the
+        number that adds directly onto a mean request latency."""
+        from repro.fleet.monitor import event_penalty_ns
+        cfg = ECCConfig(corr_penalty_ns=2.0e3, unc_penalty_ns=5.0e6,
+                        accesses_per_epoch=1.0e5)
+        pen = event_penalty_ns(np.array([10.0]), np.array([2.0]), cfg)
+        # (10 * 2e3 + 2 * 5e6) ns over 1e5 accesses
+        assert pen[0] == pytest.approx((10 * 2e3 + 2 * 5e6) / 1e5)
+        # explicit accesses override scales the denominator, nothing else
+        pen2 = event_penalty_ns(np.array([10.0]), np.array([2.0]), cfg,
+                                accesses=2.0e5)
+        assert pen2[0] == pytest.approx(pen[0] / 2.0)
+
     def test_monitor_probe_clean_on_undrifted_population(self):
         """The deployed table was profiled on this population, so the
         scrub of the UNDRIFTED cells under the deployed rows must be

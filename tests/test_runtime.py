@@ -64,6 +64,42 @@ class TestStraggler:
         assert res["adaptive"]["fp"] <= 0.02 * 24 * 150
 
 
+class TestDegenerateFit:
+    """0/1 observations (or min_samples 0/1) must be a NO-OP fit that
+    keeps the static worst-case fallback — never a guardband built
+    from a single sample (whose sigma is degenerately zero)."""
+
+    def test_adaptive_table_clamps_min_samples(self):
+        from repro.core.autotune import AdaptiveTable
+        t = AdaptiveTable((0.5, 1.0), static_worst_case=100.0)
+        t.observe(0, 0.4, 10.0)                  # one lone observation
+        t.fit(min_samples=0)
+        assert t._table == {}                    # clamped to >= 2: skip
+        assert t.select(0, 0.4) == 100.0
+        t.observe(0, 0.4, 12.0)
+        t.fit(min_samples=1)                     # clamped to 2: now fits
+        assert (0, 0) in t._table
+
+    def test_straggler_fit_empty_is_noop(self):
+        from repro.runtime.straggler import StragglerDetector
+        det = StragglerDetector(4, static_timeout_ms=500.0)
+        det.fit()                                # zero observations
+        assert det.threshold(2, 0.3) == 500.0
+        det.observe(2, 0.3, 120.0)
+        det.fit(min_samples=0)                   # one observation
+        assert det.threshold(2, 0.3) == 500.0
+
+    def test_heartbeat_fit_empty_is_noop(self):
+        from repro.runtime.fault import HeartbeatMonitor
+        mon = HeartbeatMonitor(n_nodes=3, static_miss_budget=10.0)
+        mon.fit()                                # zero observations
+        mon.beat(1, 0.0)
+        mon.fit(min_samples=1)                   # still zero gap samples
+        # static budget intact: 5 missed beats < 10 -> alive
+        assert not mon.dead(1, 5 * mon.interval_ms)
+        assert mon.dead(1, 11 * mon.interval_ms)
+
+
 class TestCompression:
     @given(st.integers(0, 5))
     @settings(max_examples=5, deadline=None)
