@@ -31,6 +31,32 @@ def profiler(fast: bool = False) -> Profiler:
                     grid_step=2.5 if fast else 1.25)
 
 
+def spatial_campaign(fast: bool, evaluate, regions: int = 1):
+    """The ONE spatial-table campaign assembly `fig_bank` and
+    `fig_region` share: profile the shared population with a per-bank
+    (optionally subarray-region) controller, run one system evaluation
+    through a fresh `SimEngine`, and count EVERY traced dispatch the
+    comparison cost (replay + fused synthesis).
+
+    `evaluate(ctrl, pop, engine, n)` runs the whole comparison through
+    `engine` with `n` requests per workload.  Returns
+    (controller, result, dispatches, wall_us)."""
+    from repro.core import perf_model
+    from repro.core.aldram import ALDRAMController
+    from repro.core.sim_engine import SimEngine
+
+    pop = population(fast)
+    ctrl = ALDRAMController(profiler(fast), regions=regions)
+    engine = SimEngine()
+    s0 = perf_model.synth_dispatch_count
+    with timed() as t:
+        ctrl.profile(pop)
+        res = evaluate(ctrl, pop, engine, 1024 if fast else 4096)
+    dispatches = engine.dispatch_count + (perf_model.synth_dispatch_count
+                                          - s0)
+    return ctrl, res, dispatches, t.us
+
+
 class timed:
     def __enter__(self):
         self.t0 = time.monotonic()

@@ -28,24 +28,13 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import emit, population, profiler, timed
+from benchmarks.common import emit, spatial_campaign
 
 
 def run(fast: bool = False) -> dict:
-    from repro.core import perf_model
-    from repro.core.aldram import ALDRAMController
-    from repro.core.sim_engine import SimEngine
-
-    pop = population(fast)
-    ctrl = ALDRAMController(profiler(fast))
-    engine = SimEngine()
-    s0 = perf_model.synth_dispatch_count
-    with timed() as t:
-        ctrl.profile(pop)
-        res = ctrl.evaluate_bank_system(pop, n=1024 if fast else 4096,
-                                        engine=engine)
-    dispatches = engine.dispatch_count + (perf_model.synth_dispatch_count
-                                          - s0)
+    ctrl, res, dispatches, us = spatial_campaign(
+        fast, lambda c, pop, engine, n:
+            c.evaluate_bank_system(pop, n=n, engine=engine))
 
     # acceptance: per-bank mean timing reductions >= per-module, both
     # tests (structural: the bank envelope contains the module envelope)
@@ -61,7 +50,7 @@ def run(fast: bool = False) -> dict:
     pt = res["per_temp"]
     mean_delta = float(np.mean([d["bank_minus_module"]
                                 for d in pt.values()]))
-    emit("fig_bank_tables", t.us,
+    emit("fig_bank_tables", us,
          "read_red=bank {:.1%}/module {:.1%}|write_red=bank {:.1%}/"
          "module {:.1%}|all35@{:.0f}C=bank {:.1%}/module {:.1%}|"
          "all35@{:.0f}C=bank {:.1%}/module {:.1%}|"

@@ -1,0 +1,88 @@
+"""Subarray-region timing hierarchy: price every spatial resolution
+level of the profile->table->replay stack in ONE compressed campaign.
+
+The per-bank table (`fig_bank`) is the coarsest spatial refinement the
+design-induced-variation follow-up (Lee et al.) motivates: within a
+bank, cells near the sense amplifiers / wordline drivers are faster
+than the far end, so a finer-than-bank (subarray-region) table
+recovers margin the bank envelope still gives away.  This bench
+closes that loop at FULL depth: profile the population at 8 regions
+per bank (the region axis rides the SAME fused campaign dispatch),
+derive the 2- and 4-region tables bit-exactly from the stored
+campaign, and replay the workload pool under module / bank / region-2
+/ region-4 / region-8 rows simultaneously — the whole resolution
+sweep is a [rows, U, 6] MASK-COMPRESSED unique-row stack plus one
+[banks * regions] index map gathered in-scan, so it still costs
+exactly one synthesis + one replay dispatch (``dispatches=2`` in the
+derived CSV column, asserted by CI).
+
+Asserted acceptance: the table-level mean timing reductions are
+MONOTONE in resolution for both tests (structural — every finer
+envelope contains its coarser group's; the system-side gmean speedups
+are reported but NOT asserted monotone, the per-op argmin-latency
+choice does not guarantee it), and the 8-region store compresses
+below 0.5 of the dense (banks x regions) layout."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, spatial_campaign
+
+LEVELS = (2, 4, 8)
+REGIONS = 8
+
+
+def run(fast: bool = False) -> dict:
+    ctrl, res, dispatches, us = spatial_campaign(
+        fast, lambda c, pop, engine, n:
+            c.evaluate_region_system(pop, n=n, engine=engine,
+                                     levels=LEVELS),
+        regions=REGIONS)
+
+    # acceptance 1: monotone recovery per resolution level, asserted
+    # on the select-metric latency-sum reductions (structural)
+    red = res["reductions"]
+    for op, d in red.items():
+        seq = [d["module"], d["bank"]] + [d[f"region{lv}"]
+                                          for lv in LEVELS]
+        for a, b in zip(seq, seq[1:]):
+            assert b >= a - 1e-9, (op, seq)
+    # acceptance 2: the finest store stays deployable — well under
+    # half the dense (banks x regions) rows
+    ratios = res["compression_ratio"]
+    assert ratios[REGIONS] < 0.5, ratios
+    # acceptance 3: the whole resolution sweep rode ONE synthesis +
+    # ONE replay dispatch
+    assert dispatches == 2, dispatches
+
+    hot = res["temps"][-1]
+    pt = res["per_temp"][hot]
+    mean_gain = float(np.mean(
+        [res["per_temp"][tc][f"region{REGIONS}_all_gmean"]
+         - res["per_temp"][tc]["bank_all_gmean"]
+         for tc in res["temps"]]))
+    emit("fig_region_hierarchy", us,
+         "read_red=mod {:.1%}/bank {:.1%}/r2 {:.1%}/r4 {:.1%}/r8 "
+         "{:.1%}|write_red=bank {:.1%}/r8 {:.1%}|ratio8={:.3f}|"
+         "ratio4={:.3f}|U={}|all35@{:.0f}C=bank {:.1%}/r8 {:.1%}|"
+         "mean_r8_delta={:+.2%}|dispatches={}".format(
+             red["read"]["module"], red["read"]["bank"],
+             red["read"]["region2"], red["read"]["region4"],
+             red["read"]["region8"], red["write"]["bank"],
+             red["write"]["region8"], ratios[REGIONS], ratios[4],
+             ctrl.table.n_unique, hot, pt["bank_all_gmean"],
+             pt[f"region{REGIONS}_all_gmean"], mean_gain, dispatches))
+    res["dispatches"] = {"total": dispatches}
+    res["mean_region_delta"] = mean_gain
+    res["compression_ratio"] = {str(k): v for k, v in ratios.items()}
+    return res
+
+
+if __name__ == "__main__":
+    import json
+    r = run(fast=True)
+    print(json.dumps({"reductions": r["reductions"],
+                      "compression_ratio": r["compression_ratio"],
+                      "mean_region_delta": r["mean_region_delta"]},
+                     indent=1))

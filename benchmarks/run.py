@@ -108,9 +108,10 @@ def main() -> None:
 
     from benchmarks import (fault_bench, fig2_refresh, fig2_timing,
                             fig3_population, fig4_system, fig_bank,
-                            fleet_bench, framework, multi_timing,
-                            power_bench, repeatability, roofline,
-                            sim_bench, thermal_bench, traffic_bench)
+                            fig_region, fleet_bench, framework,
+                            multi_timing, power_bench, repeatability,
+                            roofline, sim_bench, thermal_bench,
+                            traffic_bench)
 
     benches = {
         "fig2_refresh": fig2_refresh.run,
@@ -119,6 +120,7 @@ def main() -> None:
         "fig4_system": fig4_system.run,
         "fig4_profiled": fig4_system.run_profiled,
         "fig_bank": fig_bank.run,
+        "fig_region": fig_region.run,
         "sim_bench": sim_bench.run,
         "thermal_bench": thermal_bench.run,
         "power": power_bench.run,

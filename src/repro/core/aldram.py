@@ -89,12 +89,23 @@ class TimingTable:
     """
 
     temp_bins: tuple[float, ...]
-    # [modules, bins, 4] | [modules, bins, banks, 4]
+    # [modules, bins, 4] | [modules, bins, banks, 4] |
+    # [modules, bins, U, 4] unique-row store (when `region_index` set)
     params: np.ndarray
     safe_trefi_read: np.ndarray     # [modules] ms
     safe_trefi_write: np.ndarray    # [modules] ms
     # module-envelope table riding a per-bank `params` (None otherwise)
     params_module: np.ndarray | None = None
+    # ---- subarray-region spatial level (mask-compressed) ----
+    # int32 [modules, bins, banks, regions] -> unique-row axis of
+    # `params`: the index map of the compressed region table.  When
+    # set, `params` is the [modules, bins, U, 4] unique-row store and
+    # `params_bank` carries the per-bank table (selected on the bank
+    # envelope of the SAME campaign — NOT derivable from the region
+    # rows, for the same reason the module envelope is not the max of
+    # the bank rows), so every bank-level answer stays bit-stable.
+    region_index: np.ndarray | None = None
+    params_bank: np.ndarray | None = None   # [modules, bins, banks, 4]
     # online-update lineage (repro.fleet.recal): every `patch` bumps
     # the version and keeps the previous table for `rollback`
     version: int = 0
@@ -103,6 +114,20 @@ class TimingTable:
 
     def __post_init__(self):
         assert self.params.ndim in (3, 4), self.params.shape
+        if self.per_region:
+            assert self.params.ndim == 4 \
+                and self.region_index.ndim == 4 \
+                and self.params_bank is not None \
+                and self.params_bank.ndim == 4, \
+                "a per-region table = unique store + index map + the " \
+                "per-bank table of the same campaign"
+            assert self.region_index.shape[:2] == self.params.shape[:2] \
+                and self.params_bank.shape[:3] \
+                == self.region_index.shape[:3], \
+                (self.params.shape, self.region_index.shape,
+                 self.params_bank.shape)
+            assert int(self.region_index.max()) < self.params.shape[2], \
+                "region_index out of range of the unique-row store"
         if self.per_bank:
             assert self.params_module is not None \
                 and self.params_module.ndim == 3, \
@@ -113,8 +138,32 @@ class TimingTable:
         return self.params.ndim == 4
 
     @property
+    def per_region(self) -> bool:
+        return self.region_index is not None
+
+    @property
+    def regions(self) -> int:
+        return self.region_index.shape[3] if self.per_region else 1
+
+    @property
+    def n_unique(self) -> int | None:
+        """Unique-row count U of the compressed region store."""
+        return self.params.shape[2] if self.per_region else None
+
+    @property
     def n_banks(self) -> int | None:
+        if self.per_region:
+            return self.region_index.shape[2]
         return self.params.shape[2] if self.per_bank else None
+
+    @property
+    def bank_params(self) -> np.ndarray | None:
+        """The per-bank [modules, bins, banks, 4] view (the table
+        itself for a plain per-bank table, the carried bank table for
+        a region-compressed one)."""
+        if self.per_region:
+            return self.params_bank
+        return self.params if self.per_bank else None
 
     @property
     def module_params(self) -> np.ndarray:
@@ -130,22 +179,98 @@ class TimingTable:
         return TimingTable(self.temp_bins, self.module_params,
                            self.safe_trefi_read, self.safe_trefi_write)
 
+    def reduce_regions(self) -> "TimingTable":
+        """Collapse a region-compressed table to the per-bank table of
+        the same campaign: exactly the table a per-bank-only profile
+        builds (the carried `params_bank` was selected on the bank
+        envelope of the SAME fused dispatch)."""
+        if not self.per_region:
+            return self
+        return TimingTable(self.temp_bins, self.params_bank,
+                           self.safe_trefi_read, self.safe_trefi_write,
+                           params_module=self.params_module)
+
+    def expand_regions(self) -> np.ndarray:
+        """Decompress the region store to the dense
+        [modules, bins, banks, regions, 4] table (bit-exact: the store
+        is a lossless layout, `runtime.compression.compress_rows`)."""
+        assert self.per_region
+        from repro.runtime.compression import decompress_rows
+        m, nb, banks, regions = self.region_index.shape
+        dense = decompress_rows(
+            self.params, self.region_index.reshape(m, nb, -1))
+        return dense.reshape(m, nb, banks, regions, 4)
+
+    def compression_ratio(self) -> float:
+        """Stored unique rows / dense (banks x regions) rows — the
+        deployability metric of the region table (< 1.0 means the
+        store beats materializing every region row)."""
+        assert self.per_region
+        return float(self.n_unique) / float(self.n_banks * self.regions)
+
     # ---------------------------------------------------- online lineage
+    def _check_patch(self, name: str, new) -> None:
+        """Shape/rank compatibility of one patched field vs THIS
+        version (the parent of the patch): a patch that silently
+        changes the table's rank or spatial shape mid-lineage would
+        desynchronize every consumer holding the lineage — raise
+        `ValueError` instead.  The unique-row axis of a region store
+        is the one axis allowed to resize (re-compression after drift
+        legitimately changes U), provided the index map stays in
+        range (checked cross-field after the replace)."""
+        cur = getattr(self, name)
+        if cur is None:
+            raise ValueError(
+                f"patch cannot introduce '{name}': version "
+                f"{self.version} does not carry it (rank change "
+                "mid-lineage)")
+        new = np.asarray(new)
+        if new.ndim != cur.ndim:
+            raise ValueError(
+                f"patch '{name}': rank {new.ndim} incompatible with "
+                f"parent version {self.version} rank {cur.ndim} "
+                f"({new.shape} vs {cur.shape})")
+        if name == "params" and self.per_region:
+            ok = (new.shape[:2] == cur.shape[:2]
+                  and new.shape[3:] == cur.shape[3:])
+        else:
+            ok = new.shape == cur.shape
+        if not ok:
+            raise ValueError(
+                f"patch '{name}': shape {new.shape} incompatible with "
+                f"parent version {self.version} shape {cur.shape}")
+
     def patch(self, **updates) -> "TimingTable":
         """A new table VERSION with the given field updates (`params`,
-        `params_module`, `safe_trefi_read`, `safe_trefi_write`) —
-        the deployment move of the fleet recalibration service
-        (`repro.fleet.recal`): online guardband tightening, clean-
-        streak relaxation, and re-profiling all install their new rows
-        through here, so every deployed table knows its lineage.  The
-        patched table's `version` is bumped and its `parent` is THIS
-        table; the caller must have verified (margin probe or full
-        `verify()`) that the patched rows restore the zero-error
-        invariant for the population being served before deploying.
-        """
-        allowed = {"params", "params_module", "safe_trefi_read",
-                   "safe_trefi_write"}
+        `params_module`, `params_bank`, `region_index`,
+        `safe_trefi_read`, `safe_trefi_write`) — the deployment move
+        of the fleet recalibration service (`repro.fleet.recal`):
+        online guardband tightening, clean-streak relaxation, and
+        re-profiling all install their new rows through here, so every
+        deployed table knows its lineage.  The patched table's
+        `version` is bumped and its `parent` is THIS table; the caller
+        must have verified (margin probe or full `verify()`) that the
+        patched rows restore the zero-error invariant for the
+        population being served before deploying.
+
+        Every update is validated against the parent version's shape
+        and rank (`ValueError` on mismatch, see `_check_patch`) — a
+        rank- or shape-changing deployment is a new PROFILE, not a
+        patch."""
+        allowed = {"params", "params_module", "params_bank",
+                   "region_index", "safe_trefi_read", "safe_trefi_write"}
         assert set(updates) <= allowed, set(updates) - allowed
+        for name, new in updates.items():
+            self._check_patch(name, new)
+        if self.per_region:
+            nxt_params = np.asarray(updates.get("params", self.params))
+            nxt_index = np.asarray(
+                updates.get("region_index", self.region_index))
+            if int(nxt_index.max()) >= nxt_params.shape[2]:
+                raise ValueError(
+                    "patch: region_index indexes past the unique-row "
+                    f"store (max {int(nxt_index.max())} >= "
+                    f"U={nxt_params.shape[2]})")
         return dataclasses.replace(self, version=self.version + 1,
                                    parent=self, **updates)
 
@@ -209,7 +334,27 @@ class TimingTable:
             np.atleast_1d(np.asarray(banks, np.int64)),
             np.atleast_1d(np.asarray(temps_c, np.float64)))
         return self._lookup_rows(
-            temps_c, lambda bi: self.params[modules, bi, banks])
+            temps_c, lambda bi: self.bank_params[modules, bi, banks])
+
+    def lookup_many_regions(self, modules: np.ndarray, banks: np.ndarray,
+                            regions: np.ndarray,
+                            temps_c: np.ndarray) -> np.ndarray:
+        """Per-(bank, subarray region) variant of `lookup_many`:
+        pairwise (module, bank, region, temperature) queries -> [K, 6]
+        stacked timing rows through the same `_lookup_rows` selection
+        core, gathered through the compressed store's index map."""
+        assert self.per_region, "not a region-compressed table"
+        modules, banks, regions, temps_c = np.broadcast_arrays(
+            np.atleast_1d(np.asarray(modules, np.int64)),
+            np.atleast_1d(np.asarray(banks, np.int64)),
+            np.atleast_1d(np.asarray(regions, np.int64)),
+            np.atleast_1d(np.asarray(temps_c, np.float64)))
+
+        def gather(bi):
+            u = self.region_index[modules, bi, banks, regions]
+            return self.params[modules, bi, u]
+
+        return self._lookup_rows(temps_c, gather)
 
     def safe_stack(self) -> tuple[np.ndarray, np.ndarray]:
         """The table stack the ADAPTIVE replay selects over in-scan:
@@ -258,6 +403,38 @@ class TimingTable:
 
         return self._stack_rows(bin_rows)
 
+    def safe_stack_regions(self) -> tuple[np.ndarray, np.ndarray,
+                                          np.ndarray]:
+        """Per-region variant of `safe_stack`, in DEPLOYED compressed
+        form: ([bins + 1, U', 6] unique rows, [bins] edges,
+        [banks, regions] int32 region map).
+
+        The dense all-module-safe per-(bin, bank, region) stack (same
+        running-max bin-monotone construction, JEDEC fallback row last)
+        is RE-compressed with one index map shared across bins — the
+        in-scan replay gathers row (selected bin, map[bank, region])
+        and the map must not vary with the bin — so U' here is the
+        unique count over whole (bank, region) timing COLUMNS, not the
+        per-bin count the table stores."""
+        assert self.per_region
+        banks, regions = self.n_banks, self.regions
+        from repro.runtime.compression import compress_stack
+
+        def bin_rows(mods, tc):
+            m = mods.shape[0]
+            out = np.empty((banks, regions, 6), np.float32)
+            for b in range(banks):
+                for r in range(regions):
+                    out[b, r] = self.lookup_many_regions(
+                        mods, np.full(m, b), np.full(m, r),
+                        np.full(m, tc)).max(axis=0)
+            return out
+
+        dense, edges = self._stack_rows(bin_rows)
+        rows, idx = compress_stack(
+            dense.reshape(dense.shape[0], banks * regions, 6))
+        return rows, edges, idx.reshape(banks, regions)
+
     def _stack_rows(self, bin_rows) -> tuple[np.ndarray, np.ndarray]:
         """The ONE stack-construction core both granularities share:
         `bin_rows(modules, bin_temp)` -> the all-module-safe row(s) of
@@ -286,11 +463,14 @@ class ALDRAMController:
 
     def __init__(self, profiler: Profiler | None = None,
                  temp_bins: tuple[float, ...] = DEFAULT_TEMP_BINS,
-                 per_bank: bool = True):
+                 per_bank: bool = True, regions: int = 1):
         self.profiler = profiler or Profiler()
         self.engine = self.profiler.engine
         self.temp_bins = temp_bins
         self.per_bank = per_bank
+        assert regions >= 1 and (regions == 1 or per_bank), \
+            "subarray regions refine the per-bank table"
+        self.regions = regions
         self.table: TimingTable | None = None
         self.sweep_result = None
 
@@ -302,7 +482,8 @@ class ALDRAMController:
         prof = self.profiler
         rp_read, rp_write = prof.refresh_campaign(pop, 85.0)
         res = self.engine.sweep(
-            pop, prof.campaign_spec(self.temp_bins, rp_read, rp_write))
+            pop, prof.campaign_spec(self.temp_bins, rp_read, rp_write),
+            regions=self.regions)
         # keep the selection views for reporting (evaluate_bank_system's
         # reduction statistics, tests) but drop the O(cells x combos)
         # raw margin grids — at calibrated scale they are gigabytes the
@@ -321,7 +502,27 @@ class ALDRAMController:
             return p
 
         params_module = combine(res.chosen[kr], res.chosen[kw])
-        if self.per_bank:
+        if self.regions > 1:
+            # [modules, banks, bins, 4] -> [modules, bins, banks, 4]
+            params_bank = combine(res.chosen_bank[kr],
+                                  res.chosen_bank[kw]).transpose(0, 2, 1, 3)
+            # [modules, banks, regions, bins, 4]
+            # -> [modules, bins, banks * regions, 4], mask-compressed
+            # per (module, bin) into the unique-row store + index map
+            from repro.runtime.compression import compress_rows
+            m = params_module.shape[0]
+            dense = combine(res.chosen_region[kr], res.chosen_region[kw]
+                            ).transpose(0, 3, 1, 2, 4)
+            nb, banks, regions = dense.shape[1:4]
+            store, idx = compress_rows(
+                dense.reshape(m, nb, banks * regions, 4))
+            self.table = TimingTable(
+                self.temp_bins, store.astype(np.float32),
+                rp_read.safe, rp_write.safe,
+                params_module=params_module,
+                region_index=idx.reshape(m, nb, banks, regions),
+                params_bank=params_bank)
+        elif self.per_bank:
             # [modules, banks, bins, 4] -> [modules, bins, banks, 4]
             params_bank = combine(res.chosen_bank[kr],
                                   res.chosen_bank[kw]).transpose(0, 2, 1, 3)
@@ -332,6 +533,59 @@ class ALDRAMController:
             self.table = TimingTable(self.temp_bins, params_module,
                                      rp_read.safe, rp_write.safe)
         return self.table
+
+    # ----------------------------------------------- resolution levels
+    def region_table(self, level: int) -> TimingTable:
+        """The table profiled at a COARSER region resolution, derived
+        from the stored campaign views without a new dispatch: the
+        level-`level` envelope of a (bank, coarse-region) group is the
+        intersection of its fine regions' envelopes (`ok.all` over the
+        grouped axis — exact booleans), so re-running `select_combos`
+        on the grouped envelope reproduces what a `regions=level`
+        profile would have chosen, bit-identically.  `level` must
+        divide the profiled region count; `level == 1` returns the
+        per-bank table (`reduce_regions`), `level == regions` the
+        table itself."""
+        assert self.table is not None and self.table.per_region
+        res = self.sweep_result
+        R = self.regions
+        assert 1 <= level <= R and R % level == 0, (level, R)
+        if level == R:
+            return self.table
+        if level == 1:
+            return self.table.reduce_regions()
+        from repro.core.sweep import select_combos
+        from repro.runtime.compression import compress_rows
+        m = self.table.module_params.shape[0]
+        chosen = {}
+        for op in Op:
+            k = res.index(op)
+            okl = res.ok_region[k].reshape(
+                res.ok_region[k].shape[:2] + (level, R // level)
+                + res.ok_region[k].shape[3:]).all(3)
+            chosen[op], _ = select_combos(
+                res.spec.tests[k].combos, okl, op,
+                res.spec.op_trefi(op, m), self.profiler.std)
+
+        def combine(cr, cw):
+            p = np.empty(cr.shape[:-1] + (4,), np.float32)
+            p[..., 0] = np.maximum(cr[..., 0], cw[..., 0])
+            p[..., 1] = cr[..., 1]
+            p[..., 2] = cw[..., 2]
+            p[..., 3] = np.maximum(cr[..., 3], cw[..., 3])
+            return p
+
+        dense = combine(chosen[Op.READ], chosen[Op.WRITE]
+                        ).transpose(0, 3, 1, 2, 4)
+        nb, banks = dense.shape[1:3]
+        store, idx = compress_rows(
+            dense.reshape(m, nb, banks * level, 4))
+        return TimingTable(
+            self.temp_bins, store.astype(np.float32),
+            self.table.safe_trefi_read, self.table.safe_trefi_write,
+            params_module=self.table.params_module,
+            region_index=idx.reshape(m, nb, banks, level),
+            params_bank=self.table.params_bank)
 
     # ------------------------------------------------------------- select
     def select(self, module: int, temp_c: float) -> T.TimingParams:
@@ -371,18 +625,29 @@ class ALDRAMController:
         banks = tbl.n_banks if tbl.per_bank else 0
         if banks:
             assert banks == bk, (banks, bk)
-        cols = b * (1 + banks)                       # combos per module
+        rg = tbl.regions if tbl.per_region else 0
+        if rg:
+            assert kc % rg == 0, (kc, rg)
+        # combos per module: b envelope rows, [b, banks] bank rows,
+        # and for a region table the [b, banks, regions] region rows
+        cols = b * (1 + banks + banks * rg)
         g = max(1, min(m, int((max_grid_elems / (cpm * cols)) ** 0.5)))
 
         cells = np.asarray(pop.flat_cells()).reshape(m, cpm, -1)
         trefi_r = tbl.safe_trefi_read.astype(np.float32)
         trefi_w = tbl.safe_trefi_write.astype(np.float32)
         temps_bins = np.asarray(tbl.temp_bins, np.float32)
-        # per-module column layout: b envelope rows, then the [b, banks]
-        # bank rows — bin temperatures tile accordingly
-        temps_mod = (np.concatenate([temps_bins,
-                                     np.repeat(temps_bins, banks)])
-                     if banks else temps_bins)
+        # per-module column layout: b envelope rows, the [b, banks]
+        # bank rows, then the [b, banks * regions] region rows — bin
+        # temperatures tile accordingly
+        temps_mod = temps_bins
+        if banks:
+            temps_mod = np.concatenate([temps_mod,
+                                        np.repeat(temps_bins, banks)])
+        if rg:
+            temps_mod = np.concatenate(
+                [temps_mod, np.repeat(temps_bins, banks * rg)])
+        dense_r = tbl.expand_regions() if rg else None
 
         for lo in range(0, m, g):
             sl = slice(lo, min(lo + g, m))
@@ -390,9 +655,12 @@ class ALDRAMController:
             combos = np.empty((n * cols, 5), np.float32)
             rows_m = tbl.module_params[sl].reshape(n, b, 4)
             if banks:
-                rows_b = tbl.params[sl].reshape(n, b * banks, 4)
+                rows_b = tbl.bank_params[sl].reshape(n, b * banks, 4)
+                parts = [rows_m, rows_b]
+                if rg:
+                    parts.append(dense_r[sl].reshape(n, b * banks * rg, 4))
                 combos[:, :4] = np.concatenate(
-                    [rows_m, rows_b], axis=1).reshape(n * cols, 4)
+                    parts, axis=1).reshape(n * cols, 4)
             else:
                 combos[:, :4] = rows_m.reshape(n * cols, 4)
             combos[:, 4] = T.STANDARD_TREFI_MS       # overridden per cell
@@ -410,11 +678,23 @@ class ALDRAMController:
                 if banks:
                     # bank block: module-diagonal, then pair each cell's
                     # bank with its combo's bank
-                    gb = grid[:, :, :, b:].reshape(n, ch, bk, kc,
-                                                   n, b, banks)
+                    gb = grid[:, :, :, b:b * (1 + banks)].reshape(
+                        n, ch, bk, kc, n, b, banks)
                     gb = gb[mi, :, :, :, mi]     # [mods, ch, bk, kc, b, banks]
                     bj = np.arange(banks)
                     if gb[:, :, bj, :, :, bj].min() < 0.0:
+                        return False
+                if rg:
+                    # region block: module-diagonal, then pair each
+                    # cell's (bank, row-position group) with its
+                    # combo's (bank, region)
+                    gr = grid[:, :, :, b * (1 + banks):].reshape(
+                        n, ch, bk, rg, kc // rg, n, b, banks, rg)
+                    gr = gr[mi, :, :, :, :, mi]
+                    # [mods, ch, bk, rg_cell, kc/rg, b, banks, rg_combo]
+                    bj = np.arange(banks)[:, None]
+                    rj = np.arange(rg)[None, :]
+                    if gr[:, :, bj, rj, :, :, bj, rj].min() < 0.0:
                         return False
         return True
 
@@ -562,6 +842,133 @@ class ALDRAMController:
                 "workloads": em["workloads"], "per_temp": per_temp,
                 "reductions": red, "policies": policies,
                 "source": "profiled-bank-table"}
+
+    # ------------------------------------------------- per-region closure
+    def region_reductions(self, levels: tuple[int, ...] = ()
+                          ) -> dict[str, dict[str, float]]:
+        """Table-level mean timing reductions (the Sec. 5.2 statistic)
+        at every spatial resolution level: module envelope, per-bank,
+        and per-(bank, region) at each requested `levels` entry (all
+        derived from the ONE stored campaign, no new dispatch).  The
+        sequence is structurally monotone — every finer envelope
+        contains its coarser group's, so each finer level's mean
+        chosen latency sum is <= the coarser one's."""
+        from repro.core.sweep import select_combos
+        res = self.sweep_result
+        assert res is not None, "profile() first"
+        R = self.regions
+        m = self.table.module_params.shape[0]
+        std = self.profiler.std
+        out: dict[str, dict[str, float]] = {}
+        for op in Op:
+            k = res.index(op)
+            base = std.read_sum() if op is Op.READ else std.write_sum()
+            d = {"module": float(
+                     1 - (res.latency_sum[k] / base).mean()),
+                 "bank": float(
+                     1 - (res.latency_sum_bank[k] / base).mean())}
+            for lv in levels:
+                assert 1 <= lv <= R and R % lv == 0, (lv, R)
+                if lv == R:
+                    sums = res.latency_sum_region[k]
+                else:
+                    okl = res.ok_region[k].reshape(
+                        res.ok_region[k].shape[:2] + (lv, R // lv)
+                        + res.ok_region[k].shape[3:]).all(3)
+                    _, sums = select_combos(
+                        res.spec.tests[k].combos, okl, op,
+                        res.spec.op_trefi(op, m), std)
+                d[f"region{lv}"] = float(1 - (sums / base).mean())
+            out[op.value] = d
+        return out
+
+    def evaluate_region_system(self, pop: Population,
+                               levels: tuple[int, ...] | None = None,
+                               temps: tuple[float, ...] | None = None,
+                               n: int = 4096, seed: int = 0,
+                               policies=None, engine=None) -> dict:
+        """The subarray-region headline, priced on the system side:
+        replay the workload pool under the all-module-safe rows of
+        EVERY spatial resolution level — module envelope, per-bank,
+        and per-(bank, region) at each `levels` entry — in ONE batched
+        campaign.
+
+        The timing axis rides the dispatch MASK-COMPRESSED: the dense
+        [rows, banks, regions, 6] stack (JEDEC baseline + module rows
+        + bank rows + one block of region rows per level, coarser
+        levels broadcast into the finest layout — exact, since a
+        level-l region is a contiguous group of fine regions) is
+        collapsed by `compress_stack` to a [rows, U, 6] unique-row
+        stack plus ONE [banks * regions] index map, and the replay
+        gathers each request's row through the map in-scan.  Still one
+        synthesis + one replay dispatch for the whole resolution
+        sweep.
+
+        Also reports `region_reductions` (structurally monotone per
+        level) and the store's compression ratio per level."""
+        from repro.core import dram_sim, perf_model
+        from repro.runtime.compression import compress_stack
+        if self.table is None:
+            self.profile(pop)
+        tbl = self.table
+        assert tbl.per_region, "profile() a regions>1 controller first"
+        R = tbl.regions
+        if levels is None:
+            levels = tuple(lv for lv in (2, 4, 8)
+                           if lv <= R and R % lv == 0)
+        temps = tuple(temps if temps is not None else tbl.temp_bins)
+        policies = policies or (dram_sim.OPEN_FCFS,)
+        m, banks = tbl.module_params.shape[0], tbl.n_banks
+        assert banks == pop.n_banks, (banks, pop.n_banks)
+        tables = {lv: self.region_table(lv) for lv in levels}
+        nt = len(temps)
+        nl = len(levels)
+        s_rows = 1 + (2 + nl) * nt
+        dense = np.empty((s_rows, banks, R, 6), np.float32)
+        dense[0] = T.DDR3_1600.as_row()[None, None, :]
+        mods = np.arange(m)
+        for si, tc in enumerate(temps):
+            dense[1 + si] = tbl.lookup_many(
+                mods, np.full(m, tc)).max(axis=0)[None, None, :]
+            for bb in range(banks):
+                dense[1 + nt + si, bb] = tbl.lookup_many_banks(
+                    mods, np.full(m, bb), np.full(m, tc)).max(axis=0)
+        for li, lv in enumerate(levels):
+            t_lv = tables[lv]
+            off = 1 + (2 + li) * nt
+            for si, tc in enumerate(temps):
+                for bb in range(banks):
+                    seg = dense[off + si, bb].reshape(lv, R // lv, 6)
+                    for j in range(lv):
+                        seg[j] = t_lv.lookup_many_regions(
+                            mods, np.full(m, bb), np.full(m, j),
+                            np.full(m, tc)).max(axis=0)[None, :]
+        rows_u, region_map = compress_stack(
+            dense.reshape(s_rows, banks * R, 6))
+
+        em = perf_model.evaluate_many(rows_u, n=n, seed=seed,
+                                      engine=engine, policies=policies,
+                                      n_banks=banks,
+                                      region_map=region_map)
+        sp = perf_model.cpi_speedups(em["mean_latency_ns"])
+        per_temp = {}
+        for si, tc in enumerate(temps):
+            d = {"module_all_gmean": perf_model.gmean_speedup(
+                     sp[1, :, 0, 1 + si]),
+                 "bank_all_gmean": perf_model.gmean_speedup(
+                     sp[1, :, 0, 1 + nt + si])}
+            for li, lv in enumerate(levels):
+                d[f"region{lv}_all_gmean"] = perf_model.gmean_speedup(
+                    sp[1, :, 0, 1 + (2 + li) * nt + si])
+            per_temp[float(tc)] = d
+        red = self.region_reductions(levels)
+        ratios = {lv: tables[lv].compression_ratio() for lv in levels}
+        return {"temps": temps, "levels": levels, "rows": rows_u,
+                "region_map": region_map, "speedups": sp,
+                "mean_latency_ns": em["mean_latency_ns"],
+                "workloads": em["workloads"], "per_temp": per_temp,
+                "reductions": red, "compression_ratio": ratios,
+                "policies": policies, "source": "profiled-region-table"}
 
     # ----------------------------------------------------- dynamic closure
     def evaluate_dynamic(self, pop: Population, scenarios=None,

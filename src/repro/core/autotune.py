@@ -143,15 +143,18 @@ class ReplayConfig:
 
 
 def replay_unit(adaptive: bool, banked: bool,
-                channels: bool = False) -> int:
+                channels: bool = False, regioned: bool = False) -> int:
     """Campaign-kind unit of the tuner table: the replay shapes
-    (static/adaptive x per-module/per-bank x single/multi-channel)
-    tune independently.  Units 0-3 are the historical single-channel
-    kinds (stored tables stay valid); a multi-channel campaign
-    (`SimSpec.n_channels * n_ranks > 1` — different state footprint
-    and gather pattern) offsets by 4."""
-    return ((4 if channels else 0) + (2 if adaptive else 0)
-            + (1 if banked else 0))
+    (static/adaptive x per-module/per-bank x single/multi-channel x
+    dense/region-compressed) tune independently.  Units 0-3 are the
+    historical single-channel kinds (stored tables stay valid); a
+    multi-channel campaign (`SimSpec.n_channels * n_ranks > 1` —
+    different state footprint and gather pattern) offsets by 4; a
+    region-compressed campaign (`SimSpec.region_map` — the extra
+    in-scan index-map gather changes the dispatch cost profile)
+    offsets by 8."""
+    return ((8 if regioned else 0) + (4 if channels else 0)
+            + (2 if adaptive else 0) + (1 if banked else 0))
 
 
 # log2(request count) bin edges: campaigns within a bin share a tuned

@@ -302,6 +302,29 @@ def combo_margins(cell_stack: jnp.ndarray, combos: jnp.ndarray,
                         trefi_cells, trefi_cells)
 
 
+def row_positions(n_cells: int) -> jnp.ndarray:
+    """[n_cells] normalized row position of each sampled tail cell
+    within its bank: 0 = adjacent to the sense amplifiers / wordline
+    drivers, 1 = the far end of the subarray.  The spatial hierarchy
+    partitions this axis into contiguous subarray regions (cell k ->
+    region k * regions // n_cells), so position and region index are
+    consistent by construction."""
+    return (jnp.arange(n_cells, dtype=jnp.float32) + 0.5) / n_cells
+
+
+def region_gradient(positions: jnp.ndarray, k_region: float,
+                    weak_signs) -> jnp.ndarray:
+    """[n_cells, 5] multiplicative within-bank margin gradient
+    (design-induced variation, Lee et al.): cells far from the sense
+    amps / wordline drivers see longer bitlines and weaker drive, so
+    every field shifts toward its weak direction proportionally to the
+    centered row position.  `k_region` is the ln-scale gradient over
+    the full bank (0.0 = off, the exact pre-hierarchy population);
+    `weak_signs` is `variation.FIELD_WEAK_SIGNS`."""
+    signs = jnp.asarray(weak_signs, jnp.float32)
+    return jnp.exp(k_region * (positions[:, None] - 0.5) * signs[None, :])
+
+
 def refresh_margin(cell_stack: jnp.ndarray, trefi_ms: jnp.ndarray,
                    std_combo: jnp.ndarray, temp_c: float, op: str,
                    c: ChargeConstants = DEFAULT_CONSTANTS) -> jnp.ndarray:

@@ -609,6 +609,26 @@ def frfcfs_perm(arrival, bank, row, valid, window, slack_ns, cap,
     return perm
 
 
+# Rows per subarray (DDR3 512x512 mats): consecutive row addresses sit
+# at consecutive physical positions within a subarray, so the region of
+# a row is its position stripe — the SAME contiguous position->region
+# mapping `MarginEngine.sweep` reduces tail cells under, which is what
+# makes the profiled region rows valid for the replayed address stream.
+SUBARRAY_ROWS = 512
+
+
+def region_of(row, regions: int):
+    """Subarray region id of a row address: which of `regions` equal
+    position stripes the row's within-subarray offset falls in.  Exact
+    contiguous nesting across resolution levels (l | R implies
+    `region_of(r, l) == region_of(r, R) // (R // l)`), so one R-region
+    table answers every coarser level by integer division.  `row` may
+    be int or float32 (exact below 2**24 — the packed-stream form of
+    the merged scheduler core); `regions` is static."""
+    r_i = row.astype(jnp.int32) if row.dtype != jnp.int32 else row
+    return (r_i % SUBARRAY_ROWS) * regions // SUBARRAY_ROWS
+
+
 class BankState(NamedTuple):
     """Controller state shared by the static and adaptive scans."""
 
@@ -709,7 +729,7 @@ def _service(s: BankState, t, b, r, w, trcd, tras, twr, trp, tcl,
 def replay_one(arrival, bank, row, is_write, valid, tp_row, closed,
                n_banks: int = 8, mlp_window: int = 8,
                n_channels: int = 1, n_ranks: int = 1, ileave=None,
-               t_burst: float = 5.0, fault=None):
+               t_burst: float = 5.0, fault=None, region_map=None):
     """Replay one trace under one stacked timing row and page policy.
 
     arrival/bank/row/is_write: [N] request stream; `valid`: [N] mask
@@ -748,10 +768,24 @@ def replay_one(arrival, bank, row, is_write, valid, tp_row, closed,
     the JEDEC row on a tripped detected-error budget (see
     `repro.core.faults`).  Returns then gain a third element: the
     [faults.N_COUNTERS] int32 counter vector (detected, silent,
-    trips, degraded, probes)."""
+    trips, degraded, probes).
+
+    `region_map` (optional, int32 [banks * regions]) switches `tp_row`
+    to the MASK-COMPRESSED finer-than-bank layout
+    (`aldram.TimingTable`): tp_row is then the [U, 6] unique-row store
+    and each request gathers row `region_map[bank * regions +
+    region_of(row, regions)]` in-scan — the request's subarray region
+    resolves to a unique store row through the index map.  `regions`
+    is derived from the map length; `regions == 1` with the identity
+    map and U == banks feeds the exact per-bank gather arithmetic."""
     banked = tp_row.ndim == 2
     multi = n_channels * n_ranks > 1
     faulted = fault is not None
+    regioned = region_map is not None
+    if regioned:
+        assert banked, "region_map requires a [U, 6] unique-row store"
+        n_regions = region_map.shape[0] // n_banks
+        assert region_map.shape[0] == n_banks * n_regions
     if not banked:
         trcd, tras, twr, trp, tcl = (tp_row[0], tp_row[1], tp_row[2],
                                      tp_row[3], tp_row[5])
@@ -775,7 +809,11 @@ def replay_one(arrival, bank, row, is_write, valid, tp_row, closed,
             eg = cf[ch]
         else:
             gb, eg = b, None
-        if banked:
+        if regioned:
+            g = b * n_regions + region_of(r, n_regions)
+            tb = tp_row[region_map[g]]
+            tc6 = (tb[0], tb[1], tb[2], tb[3], tb[5])
+        elif banked:
             tb = tp_row[b]
             tc6 = (tb[0], tb[1], tb[2], tb[3], tb[5])
         else:
@@ -839,7 +877,7 @@ def replay_one(arrival, bank, row, is_write, valid, tp_row, closed,
 def replay_rows(arrival, bank, row, is_write, valid, timings, closed,
                 n_banks: int = 8, mlp_window: int = 8,
                 n_channels: int = 1, n_ranks: int = 1, ileave=None,
-                t_burst: float = 5.0, fault=None):
+                t_burst: float = 5.0, fault=None, region_map=None):
     """Replay one trace under a whole [S, 6] STACK of timing rows in
     one `lax.scan` — the timing-row axis rides the minor (lane) axis
     of the carried bank state ([B, 4, S] packed as open-row/act/
@@ -874,10 +912,31 @@ def replay_rows(arrival, bank, row, is_write, valid, timings, closed,
     against the common issue-order uniform stream — each lane carries
     its own watchdog and counters, so the (timing x fault) product
     rides the lane axis of one scan.  Returns then gain a third
-    element: [faults.N_COUNTERS, S] int32 counters."""
+    element: [faults.N_COUNTERS, S] int32 counters.
+
+    `region_map` (optional int32) switches `timings` to the
+    mask-compressed region layout [S, U, 6] (S unique-row stores
+    stacked on the lane axis): each request gathers unique row
+    `region_map[..., bank * regions + region_of(row, regions)]`
+    in-scan.  A [G] map (G = banks * regions) is shared by every lane
+    (one module's store under S timing variants); an [S, G] map gives
+    every LANE its own index map — the fleet-serve layout where the
+    lane axis is the module axis and each module compresses
+    differently.  Constant-region input replays bit-identical to the
+    per-bank [S, banks, 6] path."""
     banked = timings.ndim == 3
     multi = n_channels * n_ranks > 1
     faulted = fault is not None
+    regioned = region_map is not None
+    if regioned:
+        assert banked, "region_map requires [S, U, 6] unique stores"
+        n_regions = region_map.shape[-1] // n_banks
+        assert region_map.shape[-1] == n_banks * n_regions
+        per_lane_map = region_map.ndim == 2
+        if per_lane_map:
+            assert region_map.shape[0] == timings.shape[0], \
+                (region_map.shape, timings.shape)
+            lane_i = jnp.arange(timings.shape[0])
     if not banked:
         trcd, tras, twr, trp, tcl = (timings[:, 0], timings[:, 1],
                                      timings[:, 2], timings[:, 3],
@@ -910,7 +969,14 @@ def replay_rows(arrival, bank, row, is_write, valid, timings, closed,
         gate0 = ring[idx % mlp_window]  # [S]
         gate = (jnp.maximum(gate0, cf[ch]) if multi else gate0)
         rf = r.astype(jnp.float32)
-        if banked:
+        if regioned:
+            g = b * n_regions + region_of(r, n_regions)
+            if per_lane_map:
+                tb = timings[lane_i, region_map[:, g]]  # [S, 6]
+            else:
+                tb = timings[:, region_map[g], :]
+            tc_ = (tb[:, 0], tb[:, 1], tb[:, 2], tb[:, 3], tb[:, 5])
+        elif banked:
             tb = timings[:, b, :]       # [S, 6] this bank's columns
             tc_ = (tb[:, 0], tb[:, 1], tb[:, 2], tb[:, 3], tb[:, 5])
         else:
@@ -982,7 +1048,8 @@ def replay_rows_frfcfs(arrival, bank, row, is_write, valid, timings,
                        n_banks: int = 8, mlp_window: int = 8,
                        all_valid: bool = False, n_channels: int = 1,
                        n_ranks: int = 1, ileave=None,
-                       t_burst: float = 5.0, fault=None):
+                       t_burst: float = 5.0, fault=None,
+                       region_map=None):
     """MERGED FR-FCFS-lite + replay: one `lax.scan` that both picks the
     next request to issue (the `frfcfs_perm` pending-buffer scheduler)
     and services it against the `replay_rows` lane-major bank state —
@@ -1022,13 +1089,29 @@ def replay_rows_frfcfs(arrival, bank, row, is_write, valid, timings,
     uniform stream consumed positionally by ISSUE step — exactly the
     order the prepass pipeline consumes it, so the merged core stays
     bit-identical to prepass + faulted `replay_rows`.  Returns then
-    gain [faults.N_COUNTERS, S] int32 counters."""
+    gain [faults.N_COUNTERS, S] int32 counters.
+
+    `region_map` (optional int32 [G] or [S, G]) matches `replay_rows`:
+    `timings` is then the [S, U, 6] unique-row stack and the SERVICE
+    half gathers each request's region row through the map in-scan
+    (the scheduler half stays address-keyed and is untouched, so
+    merged stays bit-identical to prepass + regioned replay)."""
     n = arrival.shape[0]
     w = max_window
     assert 1 <= w <= n, (w, n)
     banked = timings.ndim == 3
     multi = n_channels * n_ranks > 1
     faulted = fault is not None
+    regioned = region_map is not None
+    if regioned:
+        assert banked, "region_map requires [S, U, 6] unique stores"
+        n_regions = region_map.shape[-1] // n_banks
+        assert region_map.shape[-1] == n_banks * n_regions
+        per_lane_map = region_map.ndim == 2
+        if per_lane_map:
+            assert region_map.shape[0] == timings.shape[0], \
+                (region_map.shape, timings.shape)
+            lane_i = jnp.arange(timings.shape[0])
     if faulted:
         f_rows, j_row, u_arr = fault
         fpT = f_rows.T                  # [F_COLS, S] lane columns
@@ -1103,7 +1186,14 @@ def replay_rows_frfcfs(arrival, bank, row, is_write, valid, timings,
         else:
             gate0 = ring[idx % mlp_window]     # [S]
         gate = jnp.maximum(gate0, cf[ch]) if multi else gate0
-        if banked:
+        if regioned:
+            g_id = b * n_regions + region_of(rf, n_regions)
+            if per_lane_map:
+                tb = timings[lane_i, region_map[:, g_id]]
+            else:
+                tb = timings[:, region_map[g_id], :]
+            tc_ = (tb[:, 0], tb[:, 1], tb[:, 2], tb[:, 3], tb[:, 5])
+        elif banked:
             tb = timings[:, b, :]              # [S, 6]
             tc_ = (tb[:, 0], tb[:, 1], tb[:, 2], tb[:, 3], tb[:, 5])
         else:
@@ -1184,7 +1274,7 @@ def replay_adaptive(arrival, bank, row, is_write, valid, table, bins,
                     scn_row, tcfg_row, closed,
                     n_banks: int = 8, mlp_window: int = 8,
                     n_channels: int = 1, n_ranks: int = 1, ileave=None,
-                    t_burst: float = 5.0, fault=None):
+                    t_burst: float = 5.0, fault=None, region_map=None):
     """Closed-loop replay: per-request in-scan timing-bin selection.
 
     `table`: [S+1, 6] stacked timing rows — one per temperature bin
@@ -1238,13 +1328,29 @@ def replay_adaptive(arrival, bank, row, is_write, valid, table, bins,
     recovery.  The emitted temperature/bin streams then report the
     CONTROLLER's view: the faulted reading and the bin actually served
     (including watchdog degradation).  Returns gain a sixth element:
-    the [faults.N_COUNTERS] int32 counter vector."""
+    the [faults.N_COUNTERS] int32 counter vector.
+
+    `region_map` (optional int32 [banks * regions] or [banks,
+    regions], `aldram.TimingTable.safe_stack_regions`) switches
+    `table` to the mask-compressed [S+1, U, 6] unique-column stack:
+    the scan then gathers row (selected bin, map[bank * regions +
+    region_of(row, regions)]) — the in-scan bin choice and the
+    request's subarray region compose in one gather, and the JEDEC
+    fallback row rides the last stack position of every unique column
+    (structurally identical across columns, so degradation semantics
+    match the per-bank stack exactly)."""
     from repro.core.power import access_energy_from_terms
     from repro.core.thermal import ambient_at
     tau, c_heat, hyst_c = tcfg_row[0], tcfg_row[1], tcfg_row[2]
     e_burst, e_act_pre, p_as = tcfg_row[3], tcfg_row[4], tcfg_row[5]
     hyst = hyst_c * scn_row[8]                   # per-scenario scale
     banked = table.ndim == 3
+    regioned = region_map is not None
+    if regioned:
+        assert banked, "region_map requires an [S+1, U, 6] stack"
+        region_map = region_map.reshape(-1)
+        n_regions = region_map.shape[0] // n_banks
+        assert region_map.shape[0] == n_banks * n_regions
     multi = n_channels * n_ranks > 1
     faulted = fault is not None
     nb_tot = n_channels * n_ranks * n_banks
@@ -1286,10 +1392,17 @@ def replay_adaptive(arrival, bank, row, is_write, valid, table, bins,
             use_bin = jnp.where(use_agg, new_bin, n_rows_t - 1)
         else:
             use_bin = new_bin
-        tp = table[use_bin, b] if banked else table[use_bin]
+        if regioned:
+            u_col = region_map[b * n_regions + region_of(r, n_regions)]
+            tp = table[use_bin, u_col]
+        else:
+            tp = table[use_bin, b] if banked else table[use_bin]
         if faulted:
-            jed = table[n_rows_t - 1, b] if banked \
-                else table[n_rows_t - 1]
+            if regioned:
+                jed = table[n_rows_t - 1, u_col]
+            else:
+                jed = table[n_rows_t - 1, b] if banked \
+                    else table[n_rows_t - 1]
             jsum = jed[0] + jed[1] + jed[2] + jed[3]
             red = jnp.maximum(
                 1.0 - (tp[0] + tp[1] + tp[2] + tp[3]) / jsum, 0.0)

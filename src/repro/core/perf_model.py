@@ -267,12 +267,16 @@ def tenant_spec(n: int = 8192, n_streams: int = 8, seed: int = 0,
 def evaluate_many(timings, n: int = 8192, seed: int = 0,
                   engine: SimEngine | None = None,
                   policies: tuple[dram_sim.Policy, ...] = (dram_sim.OPEN_FCFS,),
-                  n_banks: int = 8) -> dict:
+                  n_banks: int = 8, region_map=None) -> dict:
     """Replay the full workload pool under arbitrarily many stacked
     timing rows (and policies): ONE synthesis dispatch + ONE batched
     replay dispatch, however many scenario cells the campaign spans.
     `timings` may be [S, 6] rows or a per-bank [S, banks, 6] stack
-    (FLY-DRAM spatial tables — see `aldram.evaluate_bank_system`).
+    (FLY-DRAM spatial tables — see `aldram.evaluate_bank_system`), or
+    — with `region_map` (the `SimSpec.region_map` contract) — the
+    mask-compressed [S, U, 6] unique-row stack whose requests gather
+    their (bank, subarray-region) row through the map in-scan
+    (`aldram.evaluate_region_system`).
 
     Returns mean latencies as [modes(2), workloads(35), P, S] plus the
     raw `SimResult` (trace axis = mode-major flattening).
@@ -280,7 +284,7 @@ def evaluate_many(timings, n: int = 8192, seed: int = 0,
     engine = engine or SimEngine()
     res = engine.run(SimSpec(traces=trace_batch(n, seed, n_banks),
                              timings=timings, policies=policies,
-                             n_banks=n_banks))
+                             n_banks=n_banks, region_map=region_map))
     nw = len(WORKLOADS)
     grid = res.mean_latency_ns.reshape((len(MODES), nw) +
                                        res.mean_latency_ns.shape[1:])

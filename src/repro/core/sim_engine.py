@@ -150,6 +150,16 @@ class SimSpec:
     # spec) compiles the EXACT unfaulted code path (static branch,
     # like the C*R == 1 channel degeneracy).
     faults: "faults.FaultSpec | None" = None
+    # optional subarray-region spatial hierarchy (mask-compressed
+    # finer-than-bank timing maps): an int32 index map
+    # [banks*regions] (shared) or [S, banks*regions] / [K,
+    # banks*regions] (per-lane / per-stack) into the timing axis's
+    # UNIQUE rows — `timings` is then the compressed [S, U, 6]
+    # (static) / [K, S+1, U, 6] (adaptive) unique-row store and each
+    # request gathers its (bank, region-of-row) slot's row through
+    # the map in-scan.  None compiles the EXACT dense per-bank (or
+    # per-module) path — a static branch, like `faults=None`.
+    region_map: np.ndarray | None = None
 
     def __post_init__(self):
         tr = self.traces
@@ -170,9 +180,24 @@ class SimSpec:
         object.__setattr__(self, "collect", tuple(self.collect))
         assert self.traces and self.policies, "empty campaign"
         assert all(c in COLLECTABLE for c in self.collect), self.collect
-        # per-bank timing axes must match the simulated bank count
+        # per-bank timing axes must match the simulated bank count;
+        # with a region map the [.., U, 6] axis is the UNIQUE-row
+        # store instead, checked against the map's index range
         tdim = self.timings.ndim - (0 if self.thermal is None else 1)
-        if tdim == 3:
+        if self.region_map is not None:
+            rm = np.asarray(self.region_map, np.int32)
+            object.__setattr__(self, "region_map", rm)
+            assert tdim == 3, \
+                "region_map needs a [.., U, 6] unique-row timing axis"
+            assert rm.ndim in (1, 2) \
+                and rm.shape[-1] % self.n_banks == 0, \
+                (rm.shape, self.n_banks)
+            if rm.ndim == 2:
+                assert rm.shape[0] == self.timings.shape[0], \
+                    (rm.shape, self.timings.shape)
+            assert int(rm.max()) < self.timings.shape[-2], \
+                (int(rm.max()), self.timings.shape)
+        elif tdim == 3:
             assert self.timings.shape[-2] == self.n_banks, \
                 (self.timings.shape, self.n_banks)
         if self.faults is not None:
@@ -182,9 +207,12 @@ class SimSpec:
                 # the static faulted replay prices retries against ONE
                 # [6] JEDEC row (the last timing row, mirroring the
                 # adaptive tables' JEDEC-last convention) — the
-                # per-bank static stack has no such single row
+                # per-bank/per-region static stacks have no such
+                # single row (route faulted spatial campaigns through
+                # the adaptive path, whose tables carry JEDEC rows)
                 assert self.timings.ndim == 2, \
-                    "fault axis + per-bank static timings unsupported"
+                    "fault axis + spatial (per-bank/per-region) " \
+                    "static timings unsupported"
 
     @property
     def fault_on(self) -> bool:
@@ -445,7 +473,8 @@ def _reorder_prepass(arrival, bank, row, is_write, valid, slacks, caps,
 def _merged_replay(arrival, bank, row, is_write, valid, timings, closed,
                    slacks, caps, reorder_plan: tuple, n_banks: int,
                    mlp_window: int, all_valid: bool,
-                   chan: tuple = (1, 1, 5.0), ileave=None, fault=None):
+                   chan: tuple = (1, 1, 5.0), ileave=None, fault=None,
+                   region_map=None):
     """The `backend="merged"` replay core: [T, N] FCFS streams ->
     (lat [T, P, S, N], total [T, P, S]) with the FR-FCFS schedule
     FUSED into the replay scan itself (`dram_sim.replay_rows_frfcfs`)
@@ -486,7 +515,7 @@ def _merged_replay(arrival, bank, row, is_write, valid, timings, closed,
             return replay_rows(a, b, r, w, v, timings, c, n_banks,
                                mlp_window, n_channels=n_ch,
                                n_ranks=n_rk, ileave=i_, t_burst=t_burst,
-                               fault=fl)
+                               fault=fl, region_map=region_map)
 
         f_p = jax.vmap(plain, in_axes=(None,) * 5 + (0, 0, None))
         f_tp = jax.vmap(f_p, in_axes=(0, 0, 0, 0, 0, None, None, 0))
@@ -508,7 +537,7 @@ def _merged_replay(arrival, bank, row, is_write, valid, timings, closed,
                                       mlp_window, all_valid=all_valid,
                                       n_channels=n_ch, n_ranks=n_rk,
                                       ileave=i_, t_burst=t_burst,
-                                      fault=fl)
+                                      fault=fl, region_map=region_map)
 
         f_p = jax.vmap(fused, in_axes=(None,) * 5 + (0, 0, 0, 0, None))
         f_tp = jax.vmap(f_p, in_axes=(0, 0, 0, 0, 0, None, None, None,
@@ -596,7 +625,8 @@ def _synth_streams(synth):
 def _static_body(n_banks, mlp_window, reorder_plan, backend, want,
                  p99_k, bs, arrival, bank, row, is_write, valid,
                  timings, closed, slacks, caps, all_valid=False,
-                 chan=(1, 1, 5.0), ileave=None, fault=None):
+                 chan=(1, 1, 5.0), ileave=None, fault=None,
+                 region_map=None):
     """Shared static-timing replay body (traced under a jit wrapper):
     replay every (trace, policy, timing row) cell and reduce.
 
@@ -624,6 +654,12 @@ def _static_body(n_banks, mlp_window, reorder_plan, backend, want,
     uniforms are synthesized IN-dispatch (`faults.fault_uniforms`, so
     every backend consumes identical bits); `out["cnt"]` then carries
     the [T, P, S, faults.N_COUNTERS] int32 counter grid.
+
+    `region_map` (optional int32, `dram_sim.replay_rows`'s contract)
+    switches `timings` to the mask-compressed [S, U, 6] unique-row
+    stacks — a [G] map shared across lanes or an [S, G] per-lane map
+    (G = banks * regions); every backend gathers each request's
+    (bank, region) row through the map in-scan.
     """
     n_ch, n_rk, t_burst = chan
     il = (jnp.zeros((closed.shape[0],), jnp.int32) if ileave is None
@@ -637,7 +673,7 @@ def _static_body(n_banks, mlp_window, reorder_plan, backend, want,
         res = _merged_replay(
             arrival, bank, row, is_write, valid, timings, closed,
             slacks, caps, reorder_plan, n_banks, mlp_window, all_valid,
-            chan=chan, ileave=il, fault=fault)
+            chan=chan, ileave=il, fault=fault, region_map=region_map)
         lat, total = res[:2]
         if fault is not None:
             cnt = res[2]
@@ -655,7 +691,8 @@ def _static_body(n_banks, mlp_window, reorder_plan, backend, want,
                 return replay_rows(a, b, r, w, v, timings, c, n_banks,
                                    mlp_window, n_channels=n_ch,
                                    n_ranks=n_rk, ileave=i_,
-                                   t_burst=t_burst, fault=fl)
+                                   t_burst=t_burst, fault=fl,
+                                   region_map=region_map)
 
             f_p = jax.vmap(one, in_axes=(0, 0, 0, 0, None, 0, 0, None))
             f_tp = jax.vmap(f_p, in_axes=(0, 0, 0, 0, 0, None, None, 0))
@@ -669,7 +706,7 @@ def _static_body(n_banks, mlp_window, reorder_plan, backend, want,
             res = replay_ops.replay_grid(
                 a3, b3, r3, w3, valid, timings, closed, n_banks,
                 mlp_window, impl=backend, bs=bs, chan=chan, ileave=il,
-                fault=fault)
+                fault=fault, region_map=region_map)
             lat, total = res[:2]
             if fault is not None:
                 cnt = res[2]
@@ -687,7 +724,8 @@ def _static_body(n_banks, mlp_window, reorder_plan, backend, want,
 def _adaptive_body(n_banks, mlp_window, reorder_plan, backend, want,
                    p99_k, bs, arrival, bank, row, is_write, valid,
                    tables, bins, scns, tcfg, closed, slacks, caps,
-                   chan=(1, 1, 5.0), ileave=None, fault=None):
+                   chan=(1, 1, 5.0), ileave=None, fault=None,
+                   region_map=None):
     """Shared closed-loop replay body: every (trace, policy, table
     stack, thermal scenario) cell.
 
@@ -714,7 +752,14 @@ def _adaptive_body(n_banks, mlp_window, reorder_plan, backend, want,
     every output, before N/banks) with the error uniforms synthesized
     in-dispatch; `out["cnt"]` then carries the
     [T, P, K, C, F, faults.N_COUNTERS] int32 counter grid.
+
+    `region_map` (optional int32, `dram_sim.replay_adaptive`'s
+    contract) switches `tables` to the mask-compressed [K, S+1, U, 6]
+    unique-column stacks — a [G] map shared by every stack or a
+    [K, G] per-stack map riding the table axis.
     """
+    rm_ax = (0 if region_map is not None and region_map.ndim == 2
+             else None)
     n_ch, n_rk, t_burst = chan
     il = (jnp.zeros((closed.shape[0],), jnp.int32) if ileave is None
           else jnp.asarray(ileave, jnp.int32))
@@ -741,48 +786,55 @@ def _adaptive_body(n_banks, mlp_window, reorder_plan, backend, want,
         res = replay_ops.replay_grid_adaptive(
             a3, b3, r3, w3, valid, tables, bins, scns, tcfg,
             closed, n_banks, mlp_window, impl=backend, bs=bs,
-            emit_raw=emit_raw, fault=fault)
+            emit_raw=emit_raw, fault=fault, region_map=region_map)
         lat, total, temps, bin_sel, bank_heat, diag = res[:6]
         if fault is not None:
             cnt = res[6]
     elif fault is not None:
-        def one_f(a, b, r, w, v, tbl, scn, c, i_, fr, uu):
+        def one_f(a, b, r, w, v, tbl, scn, c, i_, fr, uu, rm):
             return replay_adaptive(a, b, r, w, v, tbl, bins, scn,
                                    tcfg, c, n_banks, mlp_window,
                                    n_channels=n_ch, n_ranks=n_rk,
                                    ileave=i_, t_burst=t_burst,
-                                   fault=(fr, uu))
+                                   fault=(fr, uu), region_map=rm)
 
-        f_f = jax.vmap(one_f, in_axes=(None,) * 9 + (0, None))
-        f_c = jax.vmap(f_f, in_axes=(None,) * 6 + (0,) + (None,) * 4)
-        f_kc = jax.vmap(f_c, in_axes=(None,) * 5 + (0,) + (None,) * 5)
+        f_f = jax.vmap(one_f, in_axes=(None,) * 9 + (0, None, None))
+        f_c = jax.vmap(f_f, in_axes=(None,) * 6 + (0,) + (None,) * 5)
+        f_kc = jax.vmap(f_c, in_axes=(None,) * 5 + (0,) + (None,) * 5
+                        + (rm_ax,))
         f_pkc = jax.vmap(f_kc,
                          in_axes=(0, 0, 0, 0, None, None, None, 0, 0,
-                                  None, None))
+                                  None, None, None))
         f_tpkc = jax.vmap(f_pkc,
                           in_axes=(0, 0, 0, 0, 0, None, None, None,
-                                   None, None, 0))
+                                   None, None, 0, None))
         lat, total, temps, bin_sel, bank_heat, cnt = f_tpkc(
-            a3, b3, r3, w3, valid, tables, scns, closed, il, f_rows, u)
+            a3, b3, r3, w3, valid, tables, scns, closed, il, f_rows, u,
+            region_map)
         cnt = cnt.astype(jnp.int32)
     else:
-        def one(a, b, r, w, v, tbl, scn, c, i_):
+        def one(a, b, r, w, v, tbl, scn, c, i_, rm):
             return replay_adaptive(a, b, r, w, v, tbl, bins, scn,
                                    tcfg, c, n_banks, mlp_window,
                                    n_channels=n_ch, n_ranks=n_rk,
-                                   ileave=i_, t_burst=t_burst)
+                                   ileave=i_, t_burst=t_burst,
+                                   region_map=rm)
 
         f_c = jax.vmap(one,
-                       in_axes=(None,) * 5 + (None, 0, None, None))
+                       in_axes=(None,) * 5 + (None, 0, None, None,
+                                              None))
         f_kc = jax.vmap(f_c,
-                        in_axes=(None,) * 5 + (0, None, None, None))
+                        in_axes=(None,) * 5 + (0, None, None, None,
+                                               rm_ax))
         f_pkc = jax.vmap(f_kc,
-                         in_axes=(0, 0, 0, 0, None, None, None, 0, 0))
+                         in_axes=(0, 0, 0, 0, None, None, None, 0, 0,
+                                  None))
         f_tpkc = jax.vmap(f_pkc,
                           in_axes=(0, 0, 0, 0, 0, None, None, None,
-                                   None))
+                                   None, None))
         lat, total, temps, bin_sel, bank_heat = f_tpkc(
-            a3, b3, r3, w3, valid, tables, scns, closed, il)
+            a3, b3, r3, w3, valid, tables, scns, closed, il,
+            region_map)
 
     out = {"total": total, "bank_heat": bank_heat}
     if "stats" in want:
@@ -808,7 +860,7 @@ def _adaptive_body(n_banks, mlp_window, reorder_plan, backend, want,
 def _replay_grid(synth, n_banks, mlp_window, reorder_plan, backend,
                  want, p99_k, bs, chan, arrival, bank, row, is_write,
                  valid, timings, closed, slacks, caps, ileave,
-                 fault=None):
+                 region_map=None, fault=None):
     """ONE dispatch: (optional in-dispatch trace synthesis +) static
     replay grid — see `_static_body`.  `synth` (static) is None for
     materialized streams, or the campaign's `dram_sim.SynthSpec` /
@@ -826,7 +878,7 @@ def _replay_grid(synth, n_banks, mlp_window, reorder_plan, backend,
                         want, p99_k, bs, arrival, bank, row, is_write,
                         valid, timings, closed, slacks, caps,
                         all_valid=all_valid, chan=chan, ileave=ileave,
-                        fault=fault)
+                        fault=fault, region_map=region_map)
 
 
 @functools.partial(jax.jit, static_argnums=(0, 1, 2, 3, 4, 5, 6, 7, 8))
@@ -834,7 +886,7 @@ def _replay_grid_adaptive(synth, n_banks, mlp_window, reorder_plan,
                           backend, want, p99_k, bs, chan, arrival,
                           bank, row, is_write, valid, tables, bins,
                           scns, tcfg, closed, slacks, caps, ileave,
-                          fault=None):
+                          region_map=None, fault=None):
     """ONE dispatch: (optional in-dispatch trace synthesis +)
     closed-loop adaptive replay grid — see `_adaptive_body` and
     `_replay_grid`'s `synth` contract; `fault` the optional
@@ -845,7 +897,8 @@ def _replay_grid_adaptive(synth, n_banks, mlp_window, reorder_plan,
                           want, p99_k, bs, arrival, bank, row,
                           is_write, valid, tables, bins, scns, tcfg,
                           closed, slacks, caps, chan=chan,
-                          ileave=ileave, fault=fault)
+                          ileave=ileave, fault=fault,
+                          region_map=region_map)
 
 
 @functools.partial(jax.jit, static_argnums=(0, 1, 2, 3, 4, 5, 6, 7, 8))
@@ -950,20 +1003,20 @@ def _sharded_grid(mesh, kind, statics, per_stream, extras):
         else:
             arrival, bank, row, is_write, valid = per_stream
         if kind == "static":
-            timings, closed, slacks, caps, ileave = extras
+            timings, closed, slacks, caps, ileave, region_map = extras
             return _static_body(
                 n_banks, mlp_window, plan, backend, want, p99_k, bs,
                 arrival, bank, row, is_write, valid, timings, closed,
                 slacks, caps, all_valid=synth is not None, chan=chan,
-                ileave=ileave)
+                ileave=ileave, region_map=region_map)
         if kind == "adaptive":
-            tables, bins, scns, tcfg, closed, slacks, caps, ileave = \
-                extras
+            (tables, bins, scns, tcfg, closed, slacks, caps, ileave,
+             region_map) = extras
             return _adaptive_body(
                 n_banks, mlp_window, plan, backend, want, p99_k, bs,
                 arrival, bank, row, is_write, valid, tables, bins,
                 scns, tcfg, closed, slacks, caps, chan=chan,
-                ileave=ileave)
+                ileave=ileave, region_map=region_map)
         (tables, bins, scns, tcfg, closed, slacks, caps, base_row,
          ileave) = extras
         out_a = _adaptive_body(
@@ -1118,15 +1171,22 @@ class SimEngine:
                 "campaign mesh needs a 'campaign' axis"
 
     def _tuner_key(self, spec: SimSpec):
-        """(campaign-kind unit, request count) — the tuner table key."""
+        """(campaign-kind unit, request count) — the tuner table key.
+        Region-compressed campaigns tune under the `replay_unit`
+        region offset, with the region count folded into the size
+        condition (the in-scan map gather scales with regions the way
+        dispatch cost scales with N)."""
         n = (spec.traces.n if spec.synth is not None else
              max(int(np.asarray(t.arrival).shape[0])
                  for t in spec.traces))
         adaptive = spec.thermal is not None
         banked = (spec.timings.ndim - (1 if adaptive else 0)) == 3
+        regioned = spec.region_map is not None
+        if regioned:
+            n *= spec.region_map.shape[-1] // spec.n_banks
         return replay_unit(adaptive, banked,
-                           channels=spec.n_channels * spec.n_ranks > 1
-                           ), n
+                           channels=spec.n_channels * spec.n_ranks > 1,
+                           regioned=regioned), n
 
     def _resolve(self, spec: SimSpec,
                  config: "ReplayConfig | None" = None):
@@ -1309,12 +1369,14 @@ class SimEngine:
             want = (("stats",) + (("lat",)
                                   if "latencies" in spec.collect else ())
                     if self.stats == "device" else ("lat",))
+            rm = (None if spec.region_map is None
+                  else jnp.asarray(spec.region_map))
             out = self._dispatch(
                 "static", spec, synth, plan, backend, want,
                 _p99_k(valid), bs,
                 (arrival, bank, row, is_write, valid_d),
                 (jnp.asarray(timings), closed, slacks, caps,
-                 jnp.asarray(spec.ileave_codes)), fault=fault)
+                 jnp.asarray(spec.ileave_codes), rm), fault=fault)
             if self.stats == "host":
                 lat = np.asarray(out["lat"])
                 mean, p99 = _masked_stats(lat, valid)
@@ -1359,7 +1421,9 @@ class SimEngine:
             _p99_k(valid), bs, (arrival, bank, row, is_write, valid_d),
             (jnp.asarray(spec.timings), jnp.asarray(bins),
              jnp.asarray(scns), jnp.asarray(tcfg), closed, slacks,
-             caps, jnp.asarray(spec.ileave_codes)), fault=fault)
+             caps, jnp.asarray(spec.ileave_codes),
+             None if spec.region_map is None
+             else jnp.asarray(spec.region_map)), fault=fault)
 
         if self.stats == "host":
             lat, temps, bin_sel = (np.asarray(out["lat"]),
@@ -1427,6 +1491,8 @@ class SimEngine:
             "run_bracket needs an adaptive spec with ONE table stack"
         assert not spec.fault_on, \
             "run_bracket carries no fault axis — run() the faulted spec"
+        assert spec.region_map is None, \
+            "run_bracket carries no region axis — run() the spec"
         backend, fuse, bs = self._resolve(spec, config)
         (synth, arrival, bank, row, is_write, valid_d, valid, closed,
          slacks, caps, plan) = self._streams(spec, fuse)

@@ -148,6 +148,18 @@ class SweepResult:
     (`ok[k] == ok_bank[k].all(1)`, exactly), so every bank's chosen
     latency sum is <= its module's — per-bank registers can only
     recover latency the module-level envelope gives away.
+
+    Per-(bank, subarray region) views of the SAME dispatch when the
+    campaign asks for `regions` > 1 (design-induced variation: the
+    tail-cell axis is the row-position axis, partitioned into
+    `regions` contiguous subarray regions — see `charge.row_positions`):
+      ok_region[k]:          [modules, banks, regions, n_temps, n_combos_k]
+      chosen_region[k]:      [modules, banks, regions, n_temps, 5]
+      latency_sum_region[k]: [modules, banks, regions, n_temps]
+
+    The spatial hierarchy is exact at every level:
+    `ok_bank[k] == ok_region[k].all(2)` and
+    `ok[k] == ok_region[k].all(2).all(1)` — booleans, not tolerances.
     """
 
     spec: SweepSpec
@@ -159,6 +171,10 @@ class SweepResult:
     ok_bank: tuple[np.ndarray, ...] = ()
     chosen_bank: tuple[np.ndarray, ...] = ()
     latency_sum_bank: tuple[np.ndarray, ...] = ()
+    regions: int = 1
+    ok_region: tuple[np.ndarray, ...] = ()
+    chosen_region: tuple[np.ndarray, ...] = ()
+    latency_sum_region: tuple[np.ndarray, ...] = ()
 
     @property
     def temps(self) -> tuple[float, ...]:
@@ -278,7 +294,8 @@ class MarginEngine:
         return np.asarray(read_m), np.asarray(write_m)
 
     # ------------------------------------------------------------ campaign
-    def sweep(self, pop: Population, spec: SweepSpec) -> SweepResult:
+    def sweep(self, pop: Population, spec: SweepSpec,
+              regions: int = 1) -> SweepResult:
         """Run a whole declarative campaign in ONE dispatch.
 
         Column layout of the fused grid: tests are concatenated, and
@@ -286,9 +303,19 @@ class MarginEngine:
         (temp-major), with the bin temperature in the per-combo
         temperature column.  Per-module safe refresh intervals are
         folded into the per-cell, per-op override columns.
+
+        `regions` > 1 additionally reduces the SAME margin grid per
+        (module, bank, subarray region): the tail-cell axis is the
+        row-position axis, split into `regions` contiguous groups
+        (cell k -> region k * regions // n_cells), so no extra margin
+        evaluation — still ONE dispatch — and the hierarchy is exact
+        (`ok == ok_region.all(regions).all(banks)`).
         """
         n_mod = pop.n_modules
         ch, bk, kc = pop.cells.shape[1:4]
+        assert regions >= 1 and kc % regions == 0, \
+            f"regions={regions} must divide the {kc} tail cells " \
+            f"(contiguous row-position groups)"
         cpm = ch * bk * kc                           # cells per module
         n_temps = len(spec.temps)
         temps_arr = np.asarray(spec.temps, np.float32)
@@ -313,6 +340,7 @@ class MarginEngine:
 
         margins, ok, chosen, sums = [], [], [], []
         ok_b, chosen_b, sums_b = [], [], []
+        ok_r, chosen_r, sums_r = [], [], []
         off = 0
         for test in spec.tests:
             c = test.combos.shape[0]
@@ -320,12 +348,15 @@ class MarginEngine:
             block = block[:, off:off + n_temps * c]
             off += n_temps * c
             m3 = block.reshape(-1, n_temps, c)        # [n_cells, T, C]
-            # per-bank envelope: reduce over chips and tail cells only
-            # ([modules, banks, T, C]); the module envelope is its
+            # per-(bank, region) envelope: reduce over chips and the
+            # cells WITHIN each region's row-position group
+            # ([modules, banks, regions, T, C]); the bank envelope is
+            # its intersection over regions and the module envelope the
             # intersection over banks — identical booleans to the old
-            # collapse over the whole cell hierarchy
-            okb_k = (m3.reshape(n_mod, ch, bk, kc, n_temps, c)
-                     >= 0.0).all(3).all(1)
+            # collapse over the whole cell hierarchy at every level
+            okr_k = (m3.reshape(n_mod, ch, bk, regions, kc // regions,
+                                n_temps, c) >= 0.0).all(4).all(1)
+            okb_k = okr_k.all(2)
             ok_k = okb_k.all(1)
             ch_k, s_k = select_combos(test.combos, ok_k, test.op,
                                       trefi_mod[test.op], self.std)
@@ -338,12 +369,21 @@ class MarginEngine:
             ok_b.append(okb_k)
             chosen_b.append(chb_k)
             sums_b.append(sb_k)
+            if regions > 1:
+                chr_k, sr_k = select_combos(test.combos, okr_k, test.op,
+                                            trefi_mod[test.op], self.std)
+                ok_r.append(okr_k)
+                chosen_r.append(chr_k)
+                sums_r.append(sr_k)
         return SweepResult(spec=spec, std=self.std,
                            margins=tuple(margins), ok=tuple(ok),
                            chosen=tuple(chosen), latency_sum=tuple(sums),
                            ok_bank=tuple(ok_b),
                            chosen_bank=tuple(chosen_b),
-                           latency_sum_bank=tuple(sums_b))
+                           latency_sum_bank=tuple(sums_b),
+                           regions=regions, ok_region=tuple(ok_r),
+                           chosen_region=tuple(chosen_r),
+                           latency_sum_region=tuple(sums_r))
 
 
 def _as_jnp(x: np.ndarray | None) -> jnp.ndarray | None:

@@ -76,6 +76,13 @@ class VariationConfig:
     # correlated-weakness: a slow cell also retains worse
     rc_ret_corr: float = 0.15
 
+    # within-bank row-position margin gradient (design-induced
+    # variation, Lee et al.): ln-scale weak-direction shift from the
+    # sense-amp end (cell position 0) to the far end of the subarray
+    # (position 1).  0.0 = off — the default population is bit-exactly
+    # the pre-hierarchy one; region-resolution campaigns opt in.
+    k_region: float = 0.0
+
     n_modules: int = N_MODULES
     n_chips: int = N_CHIPS
     n_banks: int = N_BANKS
@@ -103,6 +110,10 @@ class Population(NamedTuple):
     @property
     def n_banks(self) -> int:
         return self.cells.shape[2]
+
+    @property
+    def n_cells(self) -> int:
+        return self.cells.shape[3]
 
     def flat_cells(self) -> jnp.ndarray:
         return self.cells.reshape(-1, self.cells.shape[-1])
@@ -161,6 +172,15 @@ def sample_population(key: jax.Array,
     tau_w = _hier_field(k_w, cfg, cfg.mu_tau_w, +1.0, cfg.k_tau_w)
 
     cells = jnp.stack([tau_r, xfer, tau_ret, tau_p, tau_w], axis=-1)
+    if cfg.k_region != 0.0:
+        # within-bank row-position gradient: the tail-cell axis is the
+        # row-position axis (charge.row_positions), so cells far from
+        # the sense amps shift toward the weak side — the signal the
+        # subarray-region resolution levels recover
+        from repro.core.charge import region_gradient, row_positions
+        grad = region_gradient(row_positions(cfg.n_cells),
+                               cfg.k_region, FIELD_WEAK_SIGNS)
+        cells = cells * grad[None, None, None, :, :]
     return Population(cells=cells.astype(jnp.float32))
 
 

@@ -81,6 +81,15 @@ class DriftConfig:
     # thermal acceleration of aging (per 10C above ref)
     temp_accel_per_10c: float = 0.35
     ref_temp_c: float = 45.0
+    # within-bank row-position acceleration (design-induced variation,
+    # Lee et al.): cells far from the sense amps / wordline drivers age
+    # faster by (1 + region_accel * position), `position` the same
+    # normalized row-position axis `charge.row_positions` partitions
+    # into subarray regions — so under drift the regions of a bank
+    # DIVERGE and a region table's compression ratio degrades over the
+    # fleet-month.  0.0 = off: bit-exactly the pre-hierarchy
+    # trajectories.
+    region_accel: float = 0.0
 
     def rate_means(self) -> np.ndarray:
         return np.array([self.rate_tau_r, self.rate_xfer,
@@ -126,6 +135,12 @@ class DriftModel:
                                    self.base.shape))
         self.rates = (cfg.rate_means() * jitter
                       * (1.0 + cfg.tail_accel * score)[..., None])
+        if cfg.region_accel != 0.0:
+            from repro.core.charge import row_positions
+            pos = np.asarray(row_positions(self.base.shape[-2]),
+                             np.float64)
+            self.rates = self.rates * (
+                1.0 + cfg.region_accel * pos)[:, None]
         self._rng = rng
 
     def init_state(self) -> DriftState:

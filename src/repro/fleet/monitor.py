@@ -133,8 +133,8 @@ class ProbeResult:
     """One scrub pass: per-(module, rank-bank) failing-cell counts and
     worst margins under the deployed rows at the probe temperature."""
 
-    fail_counts: np.ndarray      # [modules, banks] int64
-    worst_margin: np.ndarray     # [modules, banks] float32
+    fail_counts: np.ndarray      # [modules, banks(, regions)] int64
+    worst_margin: np.ndarray     # [modules, banks(, regions)] float32
 
     @property
     def clean(self) -> bool:
@@ -163,49 +163,66 @@ class ErrorMonitor:
         rows: [modules, banks, 6] deployed timing rows — columns :4
               are the timing parameters, column 4 the per-(module,
               bank) refresh interval in ms (applied to BOTH the read
-              and the write test: the deployed tREFI is one register);
+              and the write test: the deployed tREFI is one register).
+              A [modules, banks, regions, 6] stack probes at subarray-
+              region granularity: each cell's (bank, row-position
+              group) pairs with its combo's (bank, region), exactly
+              the region diagonal `ALDRAMController.verify` extracts,
+              and the results gain the trailing region axis;
         temp_c: probe temperature (the epoch's operating temperature —
               margins are evaluated where the fleet actually serves).
 
         The dense margin grid pairs every cell with every row, so only
-        its module diagonal (then the bank pairing within it) is
-        useful; large fleets are chunked into module groups that keep
-        each dispatch under `max_grid_elems`, exactly like
+        its module diagonal (then the bank/region pairing within it)
+        is useful; large fleets are chunked into module groups that
+        keep each dispatch under `max_grid_elems`, exactly like
         `ALDRAMController.verify`.
         """
         rows = np.asarray(rows, np.float32)
         m, ch, bk, kc = pop.cells.shape[:4]
-        assert rows.shape == (m, bk, 6), (rows.shape, (m, bk, 6))
+        assert rows.ndim in (3, 4) and rows.shape[:2] == (m, bk) \
+            and rows.shape[-1] == 6, (rows.shape, (m, bk))
+        rg = rows.shape[2] if rows.ndim == 4 else 1
+        assert kc % rg == 0, (kc, rg)
+        kcr = kc // rg
+        cols = bk * rg
         cpm = ch * bk * kc
-        g = max(1, min(m, int((self.max_grid_elems / (cpm * bk)) ** 0.5)))
+        g = max(1, min(m, int((self.max_grid_elems
+                               / (cpm * cols)) ** 0.5)))
 
         cells = np.asarray(pop.flat_cells()).reshape(m, cpm, -1)
-        fail = np.empty((m, bk), np.int64)
-        worst = np.empty((m, bk), np.float32)
-        bj = np.arange(bk)
+        shape = (m, bk, rg) if rows.ndim == 4 else (m, bk)
+        fail = np.empty(shape, np.int64)
+        worst = np.empty(shape, np.float32)
+        bj = np.arange(bk)[:, None]
+        rj = np.arange(rg)[None, :]
         for lo in range(0, m, g):
             sl = slice(lo, min(lo + g, m))
             n = sl.stop - sl.start
-            combos = rows[sl, :, :5].reshape(n * bk, 5).copy()
-            # the deployed per-(module, bank) tREFI rides the per-cell
-            # override columns (cell layout is (ch, bk, kc)-major)
+            combos = rows[sl, ..., :5].reshape(n * cols, 5).copy()
+            # the deployed per-(module, bank[, region]) tREFI rides the
+            # per-cell override columns (cell layout is (ch, bk, kc)-
+            # major, the kc axis region-major: cell k -> group k // kcr)
             trefi = np.broadcast_to(
-                rows[sl, None, :, None, 4],
-                (n, ch, bk, kc)).reshape(-1).astype(np.float32)
+                rows[sl, ..., 4].reshape(n, 1, bk, rg, 1),
+                (n, ch, bk, rg, kcr)).reshape(-1).astype(np.float32)
             read_m, write_m = self.engine.margins(
                 cells[sl].reshape(n * cpm, -1), combos,
                 temp_c=float(temp_c),
                 trefi_read=trefi, trefi_write=trefi)
             mi = np.arange(n)
             mm = np.minimum(read_m, write_m).reshape(
-                n, ch, bk, kc, n, bk)
-            mm = mm[mi, :, :, :, mi]             # [n, ch, bk, kc, bk]
-            # pair each cell's rank-bank with its combo's bank; the
-            # advanced indices (axes 2 and 4) land in front — put the
-            # module axis back first
-            mb = mm[:, :, bj, :, bj].transpose(1, 0, 2, 3)
-            fail[sl] = (mb < 0.0).sum(axis=(2, 3))
-            worst[sl] = mb.min(axis=(2, 3))
+                n, ch, bk, rg, kcr, n, bk, rg)
+            mm = mm[mi, :, :, :, :, mi]  # [n, ch, bk, rg, kcr, bk, rg]
+            # pair each cell's (rank-bank, row-position group) with its
+            # combo's (bank, region); the advanced [bk, rg] index axes
+            # land in front — put the module axis back first
+            mb = mm[:, :, bj, rj, :, bj, rj].transpose(2, 0, 1, 3, 4)
+            # mb: [bk, rg, n, ch, kcr] -> [n, bk, rg, ch, kcr]
+            f = (mb < 0.0).sum(axis=(3, 4))
+            w = mb.min(axis=(3, 4))
+            fail[sl] = f if rows.ndim == 4 else f[..., 0]
+            worst[sl] = w if rows.ndim == 4 else w[..., 0]
         return ProbeResult(fail_counts=fail, worst_margin=worst)
 
 

@@ -99,6 +99,14 @@ class FleetSpec:
     n_epochs: int = 30                       # serving epochs (days)
     days_per_epoch: float = 1.0
     temp_bins: tuple[float, ...] = DEFAULT_TEMP_BINS
+    # subarray-region resolution of the deployed table (1 = per-bank,
+    # the PR 5 fleet).  regions > 1 deploys the mask-compressed
+    # [U, 6] unique-row store + [banks * regions] index map per
+    # module: scrubs probe per (bank, region), tighten/relax/patch
+    # operate on UNIQUE rows (one tighten heals every region sharing
+    # that row), and serving gathers through per-module index maps in
+    # the same single replay dispatch.
+    regions: int = 1
     # epoch ambient trajectory; None = constant `base_temp_c`.  The
     # scenario clock advances `ambient_step_ns` per epoch, so trace-
     # timescale scenarios (e.g. thermal.cooling_failure) compress onto
@@ -125,6 +133,7 @@ class FleetSpec:
 
     def __post_init__(self):
         assert self.policy in POLICIES, self.policy
+        assert self.regions >= 1, self.regions
         if self.faults is not None:
             assert isinstance(self.faults, fault_mod.FaultSpec), \
                 type(self.faults)
@@ -149,6 +158,7 @@ class FleetResult:
     served_detected: np.ndarray    # in-scan detected (retried) errors
     served_silent: np.ndarray      # in-scan SILENT corruptions
     served_wd_trips: np.ndarray    # in-scan watchdog trips
+    compression_ratio: np.ndarray  # served distinct rows / dense slots
     tighten_steps: np.ndarray
     version: np.ndarray            # deployed TimingTable.version
     dead_modules: np.ndarray       # detected-dead count
@@ -176,6 +186,8 @@ class FleetResult:
             "total_served_detected": float(self.served_detected.sum()),
             "total_served_silent": float(self.served_silent.sum()),
             "total_served_wd_trips": float(self.served_wd_trips.sum()),
+            "mean_compression_ratio": float(self.compression_ratio.mean()),
+            "final_compression_ratio": float(self.compression_ratio[-1]),
             "total_events": total_events,
             "final_version": int(self.version[-1]),
             "n_recals": len(self.recal_epochs),
@@ -212,29 +224,85 @@ class FleetEngine:
         self.ecc = ecc
         self.controller = ALDRAMController(profiler,
                                            temp_bins=spec.temp_bins,
-                                           per_bank=True)
+                                           per_bank=True,
+                                           regions=spec.regions)
         self.monitor = ErrorMonitor(engine=self.controller.engine)
         self.sim = sim or SimEngine()
         self.drift = DriftModel(pop, drift_cfg, var_cfg, seed=spec.seed)
         self._jrow = T.DDR3_1600.as_row()
 
     # ------------------------------------------------------------ deploy
-    def _rows_from_table(self, tbl: TimingTable) -> np.ndarray:
-        """[modules, bins, banks, 6] deployed row state from a profiled
-        per-bank table.  The refresh column carries min(read, write)
-        safe tREFI — one deployed register per module, and the shorter
-        interval only adds margin over the per-op profile — and the
-        stack is forced bin-monotone (the `safe_stack` convention:
-        moving rows toward JEDEC/standard only adds margin)."""
+    def _rows_from_table(self, tbl: TimingTable
+                         ) -> tuple[np.ndarray, np.ndarray | None]:
+        """Deployed row state from a profiled table: ([modules, bins,
+        banks, 6] dense rows, None) for a per-bank table, or the
+        mask-compressed ([modules, bins, U, 6] unique-row store,
+        [modules, banks, regions] int32 index map) for a region table.
+
+        The refresh column carries min(read, write) safe tREFI — one
+        deployed register per module, and the shorter interval only
+        adds margin over the per-op profile — and the stack is forced
+        bin-monotone (the `safe_stack` convention: moving rows toward
+        JEDEC/standard only adds margin).
+
+        A region table stores PER-BIN index maps; the deployed state
+        re-compresses per module with ONE map shared across bins
+        (`compression.compress_stack`, the same deployment form
+        `safe_stack_regions` uses) so bin-monotone enforcement and
+        cross-bin tighten propagation act directly on unique rows."""
         m, nb = tbl.params.shape[:2]
         banks = tbl.n_banks
-        rows = np.empty((m, nb, banks, 6), np.float32)
-        rows[..., :4] = tbl.params.astype(np.float32)
         trefi = np.minimum(tbl.safe_trefi_read,
                            tbl.safe_trefi_write).astype(np.float32)
-        rows[..., 4] = trefi[:, None, None]
-        rows[..., 5] = T.DDR3_1600.tcl
-        return self._monotone(rows)
+        if not tbl.per_region:
+            rows = np.empty((m, nb, banks, 6), np.float32)
+            rows[..., :4] = tbl.params.astype(np.float32)
+            rows[..., 4] = trefi[:, None, None]
+            rows[..., 5] = T.DDR3_1600.tcl
+            return self._monotone(rows), None
+        from repro.runtime.compression import compress_stack
+        rg = tbl.regions
+        g_ = banks * rg
+        dense = np.empty((m, nb, g_, 6), np.float32)
+        dense[..., :4] = tbl.expand_regions().reshape(m, nb, g_, 4)
+        dense[..., 4] = trefi[:, None, None]
+        dense[..., 5] = T.DDR3_1600.tcl
+        stores, idxs = [], []
+        for i in range(m):
+            u_rows, idx = compress_stack(dense[i])
+            stores.append(u_rows)
+            idxs.append(idx)
+        u_max = max(s.shape[1] for s in stores)
+        rows = np.empty((m, nb, u_max, 6), np.float32)
+        for i, s in enumerate(stores):
+            rows[i, :, :s.shape[1]] = s
+            rows[i, :, s.shape[1]:] = s[:, -1:]   # pad: repeat last row
+        idx_map = np.stack(idxs).reshape(m, banks, rg).astype(np.int32)
+        return self._monotone(rows), idx_map
+
+    @staticmethod
+    def _dense(rows_u: np.ndarray, idx: np.ndarray) -> np.ndarray:
+        """Gather a [modules, U, 6] unique-row epoch state through the
+        [modules, banks, regions] index map to the dense [modules,
+        banks, regions, 6] view (probe layout)."""
+        from repro.runtime.compression import decompress_rows
+        m, banks, rg = idx.shape
+        return decompress_rows(rows_u, idx.reshape(m, -1)
+                               ).reshape(m, banks, rg, 6)
+
+    @staticmethod
+    def _unique_mask(fail: np.ndarray, idx: np.ndarray,
+                     n_unique: int) -> np.ndarray:
+        """Scatter a dense [modules, banks, regions] fail mask through
+        the index map to the [modules, U] unique-row mask the guardband
+        moves operate on — a failing (bank, region) implicates its
+        unique row, and tightening that row heals EVERY region sharing
+        it."""
+        m = idx.shape[0]
+        um = np.zeros((m, n_unique), bool)
+        np.logical_or.at(um, (np.arange(m)[:, None],
+                              idx.reshape(m, -1)), fail.reshape(m, -1))
+        return um
 
     @staticmethod
     def _monotone(rows: np.ndarray) -> np.ndarray:
@@ -271,36 +339,71 @@ class FleetEngine:
             SimSpec(traces=traces, timings=timings, n_banks=banks),
             reps=reps)
 
-    def _install(self, table: TimingTable,
-                 rows_bins: np.ndarray) -> TimingTable:
+    def _install(self, table: TimingTable, rows_bins: np.ndarray,
+                 idx: np.ndarray | None = None) -> TimingTable:
         """Deploy `rows_bins` as a new table VERSION via
         `TimingTable.patch`.  The module-envelope view is updated
         conservatively (elementwise max over the bank rows — always
         >= every bank row, though not necessarily a profiled grid
         point), and the scalar per-module safe-tREFI fields track the
-        shortest deployed interval."""
+        shortest deployed interval.  For a region fleet `rows_bins` is
+        the unique-row store and `idx` its shared index map: the patch
+        installs the store as `params` (the unique axis may resize —
+        the one resize `TimingTable._check_patch` allows), broadcasts
+        the shared map into the per-bin `region_index`, and rebuilds
+        the carried bank/module envelope views from the dense
+        gather."""
+        if idx is None:
+            trefi_min = rows_bins[..., 4].min(axis=(1, 2))
+            return table.patch(
+                params=rows_bins[..., :4].copy(),
+                params_module=rows_bins[..., :4].max(axis=2),
+                safe_trefi_read=np.minimum(table.safe_trefi_read,
+                                           trefi_min).astype(np.float32),
+                safe_trefi_write=np.minimum(table.safe_trefi_write,
+                                            trefi_min).astype(np.float32))
+        m, nb = rows_bins.shape[:2]
+        banks, rg = idx.shape[1:]
+        from repro.runtime.compression import decompress_rows
+        dense = decompress_rows(
+            rows_bins,
+            np.broadcast_to(idx.reshape(m, 1, -1), (m, nb, banks * rg))
+        ).reshape(m, nb, banks, rg, 6)
+        params_bank = dense[..., :4].max(axis=3)
         trefi_min = rows_bins[..., 4].min(axis=(1, 2))
         return table.patch(
             params=rows_bins[..., :4].copy(),
-            params_module=rows_bins[..., :4].max(axis=2),
+            region_index=np.broadcast_to(
+                idx.reshape(m, 1, banks, rg), (m, nb, banks, rg)
+            ).astype(np.int32).copy(),
+            params_bank=params_bank,
+            params_module=params_bank.max(axis=2),
             safe_trefi_read=np.minimum(table.safe_trefi_read,
                                        trefi_min).astype(np.float32),
             safe_trefi_write=np.minimum(table.safe_trefi_write,
                                         trefi_min).astype(np.float32))
 
     def _full_recal(self, table: TimingTable, dpop: Population
-                    ) -> tuple[TimingTable, np.ndarray, np.ndarray]:
+                    ) -> tuple[TimingTable, np.ndarray, np.ndarray,
+                               np.ndarray | None]:
         """Re-profile the DRIFTED population end to end (one refresh
         campaign + one fused timing campaign) and deploy it as a new
-        version.  Returns (table, rows_bins, floor_bins) — the fresh
-        profile is also the new relaxation floor."""
+        version.  Returns (table, rows_bins, floor_bins, idx) — the
+        fresh profile is also the new relaxation floor (and, for a
+        region fleet, the new shared index map: drift may have made
+        regions diverge, so the unique-row axis legitimately
+        resizes)."""
         fresh = self.controller.profile(dpop)
-        rows_bins = self._rows_from_table(fresh)
-        table = table.patch(params=fresh.params,
-                            params_module=fresh.params_module,
-                            safe_trefi_read=fresh.safe_trefi_read,
-                            safe_trefi_write=fresh.safe_trefi_write)
-        return table, rows_bins, rows_bins.copy()
+        rows_bins, idx = self._rows_from_table(fresh)
+        updates = dict(params=fresh.params,
+                       params_module=fresh.params_module,
+                       safe_trefi_read=fresh.safe_trefi_read,
+                       safe_trefi_write=fresh.safe_trefi_write)
+        if fresh.per_region:
+            updates["region_index"] = fresh.region_index
+            updates["params_bank"] = fresh.params_bank
+        table = table.patch(**updates)
+        return table, rows_bins, rows_bins.copy(), idx
 
     # ---------------------------------------------------------- stragglers
     @staticmethod
@@ -335,10 +438,19 @@ class FleetEngine:
         m = self.pop.n_modules
         banks = self.pop.n_banks
 
+        rg = spec.regions
         table = self.controller.profile(self.pop)
-        rows_bins = self._rows_from_table(table)
+        rows_bins, idx = self._rows_from_table(table)
         floor_bins = rows_bins.copy()
         state = self.drift.init_state()
+
+        def probe_rows(dpop_, rows, temp_):
+            """Scrub the epoch's deployed rows: a region fleet probes
+            the DENSE gather of its unique store (per (bank, region)
+            granularity); `idx` rebinds across recals."""
+            return self.monitor.probe(
+                dpop_, rows if idx is None else self._dense(rows, idx),
+                temp_)
 
         hb = HeartbeatMonitor(m, interval_ms=100.0,
                               static_miss_budget=spec.heartbeat_budget)
@@ -361,7 +473,8 @@ class FleetEngine:
         rec = {k: np.zeros(e_) for k in
                ("temp_c", "lat_jedec_ns", "lat_fleet_ns", "eff_lat_ns",
                 "corr_events", "unc_events", "scrub_corr",
-                "served_detected", "served_silent", "served_wd_trips")}
+                "served_detected", "served_silent", "served_wd_trips",
+                "compression_ratio")}
         rec_i = {k: np.zeros(e_, np.int64) for k in
                  ("tighten_steps", "version", "dead_modules",
                   "straggler_fallbacks", "jedec_fallbacks")}
@@ -393,13 +506,16 @@ class FleetEngine:
                     hb.beat(mod, now)
             dead = np.array([hb.dead(mod, now) for mod in range(m)])
             alive = ~dead
+            # alive broadcast to the probe's spatial axes (bank[, region])
+            av = alive[:, None] if rg == 1 else alive[:, None, None]
 
             # -------- deployed rows for this epoch's temperature bin
             bi = int(np.searchsorted(bins, temp, side="left"))
             over = bi >= nb
-            rows_e = (np.broadcast_to(self._jrow, (m, banks, 6)).copy()
-                      if over else rows_bins[:, bi].copy())
-            probe = self.monitor.probe(dpop, rows_e, temp)
+            rows_e = (np.broadcast_to(
+                self._jrow, (m,) + rows_bins.shape[2:]).copy()
+                if over else rows_bins[:, bi].copy())
+            probe = probe_rows(dpop, rows_e, temp)
             observed = probe            # pre-reaction scrub observation
             tighten = 0
             straggler_fb = 0
@@ -408,57 +524,67 @@ class FleetEngine:
             # -------- policy reaction (before traffic is served)
             if (spec.policy == "periodic" and e > 0
                     and e % spec.recal_period == 0):
-                table, rows_bins, floor_bins = self._full_recal(table, dpop)
+                table, rows_bins, floor_bins, idx = self._full_recal(
+                    table, dpop)
                 recal_epochs.append(e)
                 slow = self._slow_recals(rng, cluster, det) & alive
                 rows_e = (rows_bins[:, bi].copy() if not over
-                          else rows_e)
+                          else np.broadcast_to(
+                              self._jrow,
+                              (m,) + rows_bins.shape[2:]).copy())
                 if slow.any():
                     rows_e[slow] = self._jrow
                     straggler_fb = int(slow.sum())
-                probe = self.monitor.probe(dpop, rows_e, temp)
+                probe = probe_rows(dpop, rows_e, temp)
             elif spec.policy == "error" and not over:
-                fail = probe.fail_mask() & alive[:, None]
+                fail = probe.fail_mask() & av
                 if f_on and (det_prev > 0).any():
                     # in-scan telemetry: modules whose SERVED traffic
                     # detected errors last epoch are implicated for
                     # (at least) one tighten step — subsequent loop
                     # iterations re-check with fresh scrub evidence
-                    fail = fail | ((det_prev > 0)[:, None]
-                                   & alive[:, None])
+                    dv = ((det_prev > 0)[:, None] if rg == 1
+                          else (det_prev > 0)[:, None, None])
+                    fail = fail | (dv & av)
                 if fail.any():
                     clean_streak = 0
                     while fail.any() and tighten < spec.max_tighten_steps:
+                        # region fleet: the dense fail mask scatters to
+                        # UNIQUE rows — one tighten heals every region
+                        # sharing the implicated row
+                        tmask = (fail if idx is None else
+                                 self._unique_mask(fail, idx,
+                                                   rows_bins.shape[2]))
                         new_rows, _ = guardband.tighten_rows(
-                            rows_bins[:, bi], mask=fail)
+                            rows_bins[:, bi], mask=tmask)
                         rows_bins[:, bi] = new_rows
                         self._monotone(rows_bins)
                         tighten += 1
                         rows_e = rows_bins[:, bi].copy()
-                        probe = self.monitor.probe(dpop, rows_e, temp)
-                        fail = probe.fail_mask() & alive[:, None]
+                        probe = probe_rows(dpop, rows_e, temp)
+                        fail = probe.fail_mask() & av
                     if fail.any():
                         # tightening ran out of authority: escalate to
                         # a full re-profile of the drifted population
-                        table, rows_bins, floor_bins = self._full_recal(
-                            table, dpop)
+                        table, rows_bins, floor_bins, idx = \
+                            self._full_recal(table, dpop)
                         recal_epochs.append(e)
                         slow = self._slow_recals(rng, cluster, det) & alive
                         rows_e = rows_bins[:, bi].copy()
                         if slow.any():
                             rows_e[slow] = self._jrow
                             straggler_fb = int(slow.sum())
-                        probe = self.monitor.probe(dpop, rows_e, temp)
-                        fail = probe.fail_mask() & alive[:, None]
+                        probe = probe_rows(dpop, rows_e, temp)
+                        fail = probe.fail_mask() & av
                         if fail.any():
                             # beyond even a fresh profile: the module
                             # retires to JEDEC rows for this epoch
-                            bad = fail.any(axis=1)
+                            bad = fail.reshape(m, -1).any(axis=1)
                             rows_e[bad] = self._jrow
                             jedec_fb = int(bad.sum())
-                            probe = self.monitor.probe(dpop, rows_e, temp)
+                            probe = probe_rows(dpop, rows_e, temp)
                     else:
-                        table = self._install(table, rows_bins)
+                        table = self._install(table, rows_bins, idx)
                 else:
                     clean_streak += 1
                     at_floor = bool(
@@ -466,14 +592,14 @@ class FleetEngine:
                     if clean_streak >= spec.relax_after and not at_floor:
                         cand = guardband.relax_rows(rows_bins[:, bi],
                                                     floor_bins[:, bi])
-                        p2 = self.monitor.probe(dpop, cand, temp)
+                        p2 = probe_rows(dpop, cand, temp)
                         clean_streak = 0
                         if p2.clean:
                             # probe-confirmed: deploy the relaxed rows
                             rows_bins[:, bi] = cand
                             rows_e = cand.copy()
                             probe = p2
-                            table = self._install(table, rows_bins)
+                            table = self._install(table, rows_bins, idx)
                             relax_epochs.append(e)
                         else:
                             # drift already consumed the reclaimed
@@ -488,8 +614,13 @@ class FleetEngine:
             # engine convention) and the counters come back per lane.
             if f_on:
                 timings = np.empty((m + 1, 6), np.float32)
-                env = rows_e.max(axis=1)
-                env[:, 4] = rows_e[:, :, 4].min(axis=1)
+                # envelope over the rows that actually serve: the
+                # DENSE gather for a region fleet (pad rows in the
+                # unique store are stale copies, never served)
+                dr = (rows_e if idx is None
+                      else self._dense(rows_e, idx).reshape(m, -1, 6))
+                env = dr.max(axis=1)
+                env[:, 4] = dr[:, :, 4].min(axis=1)
                 timings[:m] = env
                 timings[m] = self._jrow          # JEDEC fallback LAST
                 res = self.sim.run(SimSpec(traces=traces,
@@ -510,26 +641,53 @@ class FleetEngine:
                 rec["served_silent"][e] = float(sil_m[alive].sum())
                 rec["served_wd_trips"][e] = float(trp_m[alive].sum())
             else:
-                timings = np.empty((1 + m, banks, 6), np.float32)
+                timings = np.empty((1 + m,) + rows_e.shape[1:],
+                                   np.float32)
                 timings[0] = self._jrow
                 timings[1:] = rows_e
+                spec_kw = {}
+                if idx is not None:
+                    # the unique stores ride the timing axis with one
+                    # index map per lane (JEDEC lane: constant rows,
+                    # map 0) — still ONE replay dispatch
+                    rmaps = np.empty((1 + m, banks * rg), np.int32)
+                    rmaps[0] = 0
+                    rmaps[1:] = idx.reshape(m, -1)
+                    spec_kw["region_map"] = rmaps
                 res = self.sim.run(SimSpec(traces=traces,
                                            timings=timings,
-                                           n_banks=banks))
+                                           n_banks=banks, **spec_kw))
                 lat = res.mean_latency_ns        # [T, 1, 1 + m]
                 lat_j = float(lat[:, 0, 0].mean())
                 lat_f = float(lat[:, 0, 1:][:, alive].mean())
 
             # -------- ECC events of the served traffic, charged
             # against the rows that actually served
-            f_served = np.where(alive[:, None], probe.fail_counts, 0)
-            corr, unc = ecc_events(f_served, self.ecc)
-            pen = event_penalty_ns(corr, unc, self.ecc)
+            # a (module, bank)'s accesses split evenly across its
+            # regions, so a region fleet prices collisions against the
+            # failing cells of the REGION an access actually lands in
+            acc = self.ecc.accesses_per_epoch / rg
+            f_served = np.where(av, probe.fail_counts, 0)
+            corr, unc = ecc_events(f_served, self.ecc, accesses=acc)
+            pen = event_penalty_ns(corr, unc, self.ecc, accesses=acc)
             # scrub detections are themselves corrected correctable
             # events — only the error-driven policy actually scrubs
             # (for the others the probe is simulation observability)
-            scrub = (float((observed.fail_counts * alive[:, None]).sum())
+            scrub = (float((observed.fail_counts * av).sum())
                      if spec.policy == "error" else 0.0)
+
+            # -------- compression telemetry: distinct served rows /
+            # dense (bank x region) slots, mean over modules — the
+            # deployability curve as drift makes regions diverge
+            if idx is not None:
+                d_ = self._dense(rows_e, idx).reshape(m, banks * rg, 6)
+                rec["compression_ratio"][e] = float(np.mean(
+                    [np.unique(d_[i], axis=0).shape[0]
+                     for i in range(m)])) / (banks * rg)
+            else:
+                rec["compression_ratio"][e] = float(np.mean(
+                    [np.unique(rows_e[i], axis=0).shape[0]
+                     for i in range(m)])) / banks
 
             rec["temp_c"][e] = temp
             rec["lat_jedec_ns"][e] = lat_j

@@ -40,7 +40,8 @@ def _pad_rows(timings_t: jnp.ndarray, bs: int) -> jnp.ndarray:
 def replay_grid(arrival, bank, row, is_write, valid, timings, closed,
                 n_banks: int = 8, mlp_window: int = 8,
                 impl: str = "auto", bs: int | None = None,
-                chan=(1, 1, 5.0), ileave=None, fault=None):
+                chan=(1, 1, 5.0), ileave=None, fault=None,
+                region_map=None):
     """arrival/bank/row/is_write: [T, P, N]; valid: [T, N]; timings:
     [S, 6] or per-bank [S, banks, 6]; closed: [P] bool; `chan`
     (static) = (n_channels, n_ranks, t_burst_ns) channel geometry and
@@ -53,6 +54,12 @@ def replay_grid(arrival, bank, row, is_write, valid, timings, closed,
     [6], uniforms [T, N]) — per-LANE fault scenarios, same contract as
     `ref.replay_grid`; the returns then gain a [T, P, S,
     faults.N_COUNTERS] int32 counter grid.
+
+    `region_map` (optional int32, `ref.replay_grid`'s contract)
+    switches `timings` to the mask-compressed [S, U, 6] unique-row
+    stack — a [G] map shared across lanes or an [S, G] per-lane map
+    (G = banks * regions); the kernel path tiles it to [G, S_pad] and
+    gathers through it in VMEM.
     """
     check_prefix_valid(valid, "replay_grid")
     if impl == "auto":
@@ -61,7 +68,7 @@ def replay_grid(arrival, bank, row, is_write, valid, timings, closed,
         return ref.replay_grid(arrival, bank, row, is_write, valid,
                                timings, closed, n_banks, mlp_window,
                                chan=tuple(chan), ileave=ileave,
-                               fault=fault)
+                               fault=fault, region_map=region_map)
 
     bs = bs or replay.BLOCK_ROWS
     t, p, n = arrival.shape
@@ -98,12 +105,20 @@ def replay_grid(arrival, bank, row, is_write, valid, timings, closed,
             jnp.asarray(u, jnp.float32)[:, None, :],
             (t, p, n)).reshape(g, n)
         k_fault = (flt_t, jed_col, u_g)
+    k_map = None
+    if region_map is not None:
+        # [S, G] per-lane map -> [G, S]; [G] shared map broadcasts;
+        # lane padding replicates lane 0 (outputs sliced off anyway)
+        rm = jnp.asarray(region_map, jnp.int32)
+        rm_t = (rm.T if rm.ndim == 2
+                else jnp.broadcast_to(rm[:, None], (rm.shape[0], s)))
+        k_map = _pad_rows(rm_t, bs)
 
     out = replay.replay_blocks(
         closed_col, il_col, arrival_g, bank_g, row_g, wr_g, val_g,
         tim_t, n_banks=n_banks, mlp_window=mlp_window,
         interpret=(impl == "pallas_interpret"), bs=bs,
-        chan=tuple(chan), fault=k_fault)
+        chan=tuple(chan), fault=k_fault, region_map=k_map)
     lat, total = out[:2]
     # [G, N, S_pad] -> [T, P, S, N]
     lat = lat[:, :, :s].reshape(t, p, n, s).transpose(0, 1, 3, 2)
@@ -130,7 +145,7 @@ def replay_grid_adaptive(arrival, bank, row, is_write, valid, tables,
                          bins, scns, tcfg, closed, n_banks: int = 8,
                          mlp_window: int = 8, impl: str = "auto",
                          bs: int | None = None, emit_raw: bool = False,
-                         fault=None):
+                         fault=None, region_map=None):
     """Adaptive-campaign counterpart of `replay_grid`: arrival/bank/
     row/is_write: [T, P, N]; valid: [T, N]; tables: [K, S+1, 6] or
     per-bank [K, S+1, banks, 6] (JEDEC fallback row last); bins: [S];
@@ -156,6 +171,13 @@ def replay_grid_adaptive(arrival, bank, row, is_write, valid, tables,
     grid output gains a trailing F axis (before N/banks) and the
     return gains a 7th element, the [T, P, K, C, F, faults.N_COUNTERS]
     int32 counter grid.
+
+    `region_map` (optional int32, `ref.replay_grid_adaptive`'s
+    contract) switches `tables` to the mask-compressed [K, S+1, U, 6]
+    unique-column stacks — a [G] map shared by every stack or a
+    [K, G] per-stack map; the kernel path tiles it onto the lane axis
+    (the map rides each stack's C*F lanes) and gathers through it in
+    VMEM.
     """
     check_prefix_valid(valid, "replay_grid_adaptive")
     if impl == "auto":
@@ -163,7 +185,8 @@ def replay_grid_adaptive(arrival, bank, row, is_write, valid, tables,
     if impl == "ref":
         out = ref.replay_grid_adaptive(
             arrival, bank, row, is_write, valid, tables, bins, scns,
-            tcfg, closed, n_banks, mlp_window, fault=fault)
+            tcfg, closed, n_banks, mlp_window, fault=fault,
+            region_map=region_map)
         lat, total, temps, bin_sel, bank_heat = out[:5]
         if fault is None:
             return lat, total, temps, bin_sel, bank_heat, None
@@ -210,6 +233,15 @@ def replay_grid_adaptive(arrival, bank, row, is_write, valid, tables,
             jnp.asarray(u, jnp.float32)[:, None, :],
             (t, p, n)).reshape(g, n)
         k_fault = (flt_t, u_g)
+    k_map = None
+    if region_map is not None:
+        # [K, G] per-stack map -> [G, K] repeated onto each stack's
+        # C*F lanes; [G] shared map broadcasts across the lane axis
+        rm = jnp.asarray(region_map, jnp.int32)
+        rm_t = (jnp.repeat(rm.T, c * nf, axis=-1) if rm.ndim == 2
+                else jnp.broadcast_to(rm[:, None],
+                                      (rm.shape[0], length)))
+        k_map = _pad_rows(rm_t, bs)
     b_arr = jnp.asarray(bins, jnp.float32)
     if b_arr.shape[0] == 0:
         # empty bin-edge set (JEDEC-only table): a +inf row keeps the
@@ -223,7 +255,7 @@ def replay_grid_adaptive(arrival, bank, row, is_write, valid, tables,
         closed_col, arrival_g, bank_g, row_g, wr_g, val_g, tab_t,
         scn_t, bins_t, tcfg_col, n_banks=n_banks,
         mlp_window=mlp_window, interpret=(impl == "pallas_interpret"),
-        bs=bs, emit_raw=emit_raw, fault=k_fault)
+        bs=bs, emit_raw=emit_raw, fault=k_fault, region_map=k_map)
     lat, total, tmax, tmean, switches, bank_heat = out[:6]
 
     if fault is None:

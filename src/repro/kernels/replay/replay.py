@@ -59,7 +59,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import faults
-from repro.core.dram_sim import chan_rank, service_math
+from repro.core.dram_sim import chan_rank, region_of, service_math
 from repro.core.power import access_energy_from_terms
 from repro.core.thermal import ambient_at
 
@@ -70,7 +70,15 @@ BLOCK_ROWS = 128
 def _kernel(closed_ref, il_ref, arr_ref, bank_ref, row_ref, wr_ref,
             val_ref, tim_ref, *refs, n_banks: int,
             mlp_window: int, n_req: int, banked: bool = False,
-            chan=(1, 1, 5.0), faulted: bool = False):
+            chan=(1, 1, 5.0), faulted: bool = False,
+            regioned: bool = False):
+    if regioned:
+        # mask-compressed spatial tables: tim_ref is the [U, 6, bs]
+        # UNIQUE-row tile and map_ref the [G, bs] int32 index-map tile
+        # (G = banks * regions; per-lane maps ride the lane axis,
+        # shared maps broadcast) — the request's (bank, region) slot
+        # resolves to a unique row via two chained one-hot reduces
+        map_ref, *refs = refs
     if faulted:
         # extra inputs: lane-tiled fault rows [F_COLS, bs], the JEDEC
         # fallback column [6, 1], per-cell issue-order uniforms [1, N];
@@ -94,6 +102,12 @@ def _kernel(closed_ref, il_ref, arr_ref, bank_ref, row_ref, wr_ref,
                                      tim_ref[5, :])
     bank_iota = jax.lax.broadcasted_iota(jnp.int32, (nb_tot, bs), 0)
     ring_iota = jax.lax.broadcasted_iota(jnp.int32, (mlp_window, bs), 0)
+    if regioned:
+        n_map = map_ref.shape[0]
+        n_regions = n_map // n_banks
+        map_iota = jax.lax.broadcasted_iota(jnp.int32, (n_map, bs), 0)
+        uniq_iota = jax.lax.broadcasted_iota(
+            jnp.int32, (tim_ref.shape[0], bs), 0)
     if multi:
         il = il_ref[0, 0]
         # the timing tile stays keyed on the rank-level bank id
@@ -145,7 +159,17 @@ def _kernel(closed_ref, il_ref, arr_ref, bank_ref, row_ref, wr_ref,
             # channel bus contention joins the issue gate
             cf_b = jnp.sum(jnp.where(cm, cf_s[...], 0.0), axis=0)
             gate = jnp.maximum(gate, cf_b)
-        if banked:
+        if regioned:
+            # chained one-hot gather: (bank, region) slot -> unique
+            # row index (per lane, via the map tile) -> timing lanes
+            g_id = b * n_regions + region_of(r_i, n_regions)
+            u_lane = jnp.sum(jnp.where(map_iota == g_id, map_ref[...],
+                                       0), axis=0)         # [bs] int32
+            umb = uniq_iota == u_lane[None, :]
+            tim_b = jnp.sum(jnp.where(umb[:, None, :], tim_ref[...],
+                                      0.0), axis=0)         # [6, bs]
+            tc = (tim_b[0], tim_b[1], tim_b[2], tim_b[3], tim_b[5])
+        elif banked:
             # per-bank timing tile [n_banks, 6, bs]: select the
             # request's bank with the same one-hot sublane mask
             bmb = bank_iota_b == b if multi else bm
@@ -224,7 +248,7 @@ def _adaptive_kernel(closed_ref, arr_ref, bank_ref, row_ref, wr_ref,
                      val_ref, tim_ref, scn_ref, bins_ref, tcfg_ref,
                      *refs, n_banks: int, mlp_window: int, n_req: int,
                      banked: bool, emit_raw: bool,
-                     faulted: bool = False):
+                     faulted: bool = False, regioned: bool = False):
     """Closed-loop (adaptive) replay cell: the static kernel's layout
     plus the `dram_sim.AdaptiveState` carried in VMEM scratch — per-
     bank RC heat [n_banks, lanes], current bin + last arrival [1,
@@ -245,8 +269,20 @@ def _adaptive_kernel(closed_ref, arr_ref, bank_ref, row_ref, wr_ref,
     sensor/watchdog state as extra scratch, and the five fault
     counters as accumulator output tiles next to temp_max /
     bin_switches — mirroring `dram_sim.replay_adaptive(fault=...)`
-    operation for operation."""
+    operation for operation.
+
+    `regioned` (static) switches `tim_ref` to the mask-compressed
+    [U, S+1, 6, bs] UNIQUE-column tile with a [G, bs] int32 index-map
+    tile (`map_ref`, G = banks * regions) as an extra input right
+    after `tcfg_ref`: the request's (bank, region) slot resolves to a
+    unique column via two chained one-hot reduces, and that column
+    mask replaces the bank mask ONLY where TIMINGS are gathered (the
+    bin-row select and the faulted JEDEC gather) — the bank-state and
+    heat tiles stay keyed on the physical bank."""
     refs = list(refs)
+    if regioned:
+        map_ref = refs[0]
+        del refs[0]
     if faulted:
         flt_ref, u_ref = refs[:2]
         del refs[:2]
@@ -277,6 +313,12 @@ def _adaptive_kernel(closed_ref, arr_ref, bank_ref, row_ref, wr_ref,
     bank_iota = jax.lax.broadcasted_iota(jnp.int32, (n_banks, bs), 0)
     ring_iota = jax.lax.broadcasted_iota(jnp.int32, (mlp_window, bs), 0)
     bin_iota = jax.lax.broadcasted_iota(jnp.int32, (n_bins, bs), 0)
+    if regioned:
+        n_map = map_ref.shape[0]
+        n_regions = n_map // n_banks
+        map_iota = jax.lax.broadcasted_iota(jnp.int32, (n_map, bs), 0)
+        uniq_iota = jax.lax.broadcasted_iota(
+            jnp.int32, (tim_ref.shape[0], bs), 0)
 
     # scratch persists across grid steps — re-arm controller + thermal
     open_s[...] = jnp.full((n_banks, bs), -1.0, jnp.float32)
@@ -347,10 +389,20 @@ def _adaptive_kernel(closed_ref, arr_ref, bank_ref, row_ref, wr_ref,
             use_bin = new_bin
 
         # timing row select: one-hot bin sublane mask (x bank mask on
-        # per-bank tiles), same masked-reduce idiom as the bank state
+        # per-bank tiles, x unique-column mask on region-compressed
+        # tiles), same masked-reduce idiom as the bank state
         sel = bin_iota == use_bin[None, :]               # [S+1, bs]
+        if regioned:
+            # chained one-hot gather: (bank, region) slot -> unique
+            # column index (per lane, via the map tile) -> bin row
+            g_id = b * n_regions + region_of(row_ref[0, k], n_regions)
+            u_lane = jnp.sum(jnp.where(map_iota == g_id, map_ref[...],
+                                       0), axis=0)       # [bs] int32
+            tmask = uniq_iota == u_lane[None, :]
+        else:
+            tmask = bm
         if banked:
-            m = bm[:, None, :] & sel[None, :, :]         # [B, S+1, bs]
+            m = tmask[:, None, :] & sel[None, :, :]      # [B, S+1, bs]
             tim_b = jnp.sum(jnp.where(m[:, :, None, :], tim_ref[...],
                                       0.0), axis=(0, 1))   # [6, bs]
         else:
@@ -361,7 +413,7 @@ def _adaptive_kernel(closed_ref, arr_ref, bank_ref, row_ref, wr_ref,
             # margin-conditioned error draw: reduction of the SERVED
             # row vs JEDEC + the TRUE temperature's excess over the
             # served bin's edge (dram_sim.replay_adaptive's bins_ext)
-            jed = (jnp.sum(jnp.where(bm[:, None, :], jall, 0.0),
+            jed = (jnp.sum(jnp.where(tmask[:, None, :], jall, 0.0),
                            axis=0) if banked else jed_full)  # [6, bs]
             jsum = jed[0] + jed[1] + jed[2] + jed[3]
             red = jnp.maximum(
@@ -471,7 +523,8 @@ def adaptive_blocks(closed_col, arrival, bank, row, is_write, valid,
                     tables_t, scn_t, bins_t, tcfg_col,
                     n_banks: int = 8, mlp_window: int = 8,
                     interpret: bool = False, bs: int = BLOCK_ROWS,
-                    emit_raw: bool = False, fault=None):
+                    emit_raw: bool = False, fault=None,
+                    region_map=None):
     """Adaptive-campaign kernel launch.  closed_col: [G, 1] float32;
     arrival: [G, N] float32; bank/row/is_write/valid: [G, N] int32;
     tables_t: [S+1, 6, L] (or PER-BANK [n_banks, S+1, 6, L]) — lane l
@@ -483,22 +536,28 @@ def adaptive_blocks(closed_col, arrival, bank, row, is_write, valid,
     `emit_raw`, the raw (temps [G, N, L], bins [G, N, L] int32), plus,
     when `fault` = (fault tile [F_COLS, L], uniforms [G, N]) is given,
     the five [G, L] int32 fault counters (detected, silent, trips,
-    degraded, probes)."""
+    degraded, probes).
+
+    `region_map` (optional int32 [banks*regions, L] lane-tiled index
+    map) switches `tables_t` to the mask-compressed PER-REGION
+    [U, S+1, 6, L] unique-column tile — each lane's requests gather
+    their table column through the lane's map column in-kernel."""
     g, n = arrival.shape
     banked = tables_t.ndim == 4
     faulted = fault is not None
+    regioned = region_map is not None
     length = tables_t.shape[-1]
     n_bins = tables_t.shape[-3]
     assert tables_t.shape[-2] == 6 and length % bs == 0, \
         (tables_t.shape, bs)
-    if banked:
+    if banked and not regioned:
         assert tables_t.shape[0] == n_banks, (tables_t.shape, n_banks)
     grid = (g, length // bs)
     kernel = functools.partial(_adaptive_kernel, n_banks=n_banks,
                                mlp_window=mlp_window, n_req=n,
                                banked=banked, emit_raw=emit_raw,
-                               faulted=faulted)
-    tab_spec = (pl.BlockSpec((n_banks, n_bins, 6, bs),
+                               faulted=faulted, regioned=regioned)
+    tab_spec = (pl.BlockSpec((tables_t.shape[0], n_bins, 6, bs),
                              lambda i, j: (0, 0, 0, j))
                 if banked else
                 pl.BlockSpec((n_bins, 6, bs), lambda i, j: (0, 0, j)))
@@ -517,6 +576,10 @@ def adaptive_blocks(closed_col, arrival, bank, row, is_write, valid,
     ]
     inputs = [closed_col, arrival, bank, row, is_write, valid,
               tables_t, scn_t, bins_t, tcfg_col]
+    if regioned:
+        in_specs.append(pl.BlockSpec((region_map.shape[0], bs),
+                                     lambda i, j: (0, j)))
+        inputs.append(region_map)
     out_specs = [
         pl.BlockSpec((1, n, bs), lambda i, j: (i, 0, j)),   # lat
         pl.BlockSpec((1, bs), lambda i, j: (i, j)),         # total
@@ -577,7 +640,8 @@ def adaptive_blocks(closed_col, arrival, bank, row, is_write, valid,
 def replay_blocks(closed_col, ileave_col, arrival, bank, row, is_write,
                   valid, timings_t, n_banks: int = 8,
                   mlp_window: int = 8, interpret: bool = False,
-                  bs: int = BLOCK_ROWS, chan=(1, 1, 5.0), fault=None):
+                  bs: int = BLOCK_ROWS, chan=(1, 1, 5.0), fault=None,
+                  region_map=None):
     """closed_col: [G, 1] float32 (1.0 = closed page); ileave_col:
     [G, 1] int32 per-cell interleave code (`dram_sim.ILEAVE_CODES`,
     inert on a single-channel launch); arrival: [G, N] float32;
@@ -591,21 +655,28 @@ def replay_blocks(closed_col, ileave_col, arrival, bank, row, is_write,
     G = flattened (trace x policy) cells.  Returns (latency [G, N, S],
     total runtime [G, S]); with `fault` = (fault tile [F_COLS, S],
     JEDEC column [6, 1], uniforms [G, N]) also the five [G, S] int32
-    fault counters (detected, silent, trips, degraded, probes)."""
+    fault counters (detected, silent, trips, degraded, probes).
+
+    `region_map` (optional int32 [banks*regions, S] lane-tiled index
+    map) switches `timings_t` to the mask-compressed PER-REGION
+    [U, 6, S] unique-row tile — each lane's requests gather their
+    timing row through the lane's map column in-kernel."""
     g, n = arrival.shape
     banked = timings_t.ndim == 3
     faulted = fault is not None
+    regioned = region_map is not None
     s = timings_t.shape[-1]
     nb_tot = chan[0] * chan[1] * n_banks
     assert timings_t.shape[-2] == 6 and s % bs == 0, (timings_t.shape, bs)
-    if banked:
+    if banked and not regioned:
         assert timings_t.shape[0] == n_banks, (timings_t.shape, n_banks)
     grid = (g, s // bs)
     kernel = functools.partial(_kernel, n_banks=n_banks,
                                mlp_window=mlp_window, n_req=n,
                                banked=banked, chan=chan,
-                               faulted=faulted)
-    tim_spec = (pl.BlockSpec((n_banks, 6, bs), lambda i, j: (0, 0, j))
+                               faulted=faulted, regioned=regioned)
+    tim_spec = (pl.BlockSpec((timings_t.shape[0], 6, bs),
+                             lambda i, j: (0, 0, j))
                 if banked else
                 pl.BlockSpec((6, bs), lambda i, j: (0, j)))
     in_specs = [
@@ -620,6 +691,10 @@ def replay_blocks(closed_col, ileave_col, arrival, bank, row, is_write,
     ]
     inputs = [closed_col, ileave_col, arrival, bank, row, is_write,
               valid, timings_t]
+    if regioned:
+        in_specs.append(pl.BlockSpec((region_map.shape[0], bs),
+                                     lambda i, j: (0, j)))
+        inputs.append(region_map)
     out_specs = [
         pl.BlockSpec((1, n, bs), lambda i, j: (i, 0, j)),
         pl.BlockSpec((1, bs), lambda i, j: (i, j)),

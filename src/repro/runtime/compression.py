@@ -1,6 +1,7 @@
-"""Gradient compression for the slow cross-pod tier.
+"""Compression utilities.
 
-Two compressors for the 'pod' axis all-reduce (DESIGN.md §6):
+Gradient compression for the slow cross-pod tier — two compressors for
+the 'pod' axis all-reduce (DESIGN.md §6):
   * top-k sparsification with error feedback (memory of the residual is
     added back next step, preserving convergence),
   * int8 block quantisation (per-block absmax scales).
@@ -8,6 +9,15 @@ Two compressors for the 'pod' axis all-reduce (DESIGN.md §6):
 Both are pure-jnp pytree transforms so they compose with pjit; tests
 assert the EF invariant (compressed + residual == original) and the
 quantisation error bound.
+
+Plus the LOSSLESS unique-rows + index-map compressor the spatial
+timing hierarchy stores its region tables in (`compress_rows` /
+`decompress_rows`): a [..., G, D] row table whose G spatial slots
+(banks x subarray regions) mostly share rows collapses to a
+[..., U, D] unique-row store and an int [..., G] index map, with U the
+MAXIMUM unique count over the leading axes so the store stays
+rectangular.  Round-trip is bit-exact — unlike the gradient
+compressors above, this one is a storage layout, not an approximation.
 """
 
 from __future__ import annotations
@@ -16,6 +26,7 @@ from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 class TopKState(NamedTuple):
@@ -94,3 +105,73 @@ def int8_error_bound(g: jnp.ndarray, block: int = 256) -> float:
     pad = (-flat.size) % block
     flat = jnp.pad(flat, (0, pad))
     return float((flat.reshape(-1, block).max(1) / 254.0).max())
+
+
+# ---------------------------------------------------------------------
+# Lossless unique-rows + index-map compression (spatial timing tables)
+# ---------------------------------------------------------------------
+
+def compress_rows(rows, min_u: int = 1):
+    """Compress a [..., G, D] row table to (unique [..., U, D],
+    index [..., G] int32).
+
+    Each leading-axis slice is deduplicated independently
+    (`np.unique(axis=0)`, so unique rows sort lexicographically —
+    deterministic layout); U is the max unique count over all slices,
+    floored at `min_u`, and shorter slices pad by REPEATING their last
+    unique row (the pad rows are real, just never indexed, so a
+    downstream consumer that scans the whole store sees only valid
+    timing rows).  `decompress_rows(unique, index)` is bit-exact.
+    """
+    rows = np.asarray(rows)
+    assert rows.ndim >= 2, rows.shape
+    lead = rows.shape[:-2]
+    g, d = rows.shape[-2], rows.shape[-1]
+    flat = rows.reshape(-1, g, d)
+    uniqs, idxs = [], []
+    for sl in flat:
+        u, inv = np.unique(sl, axis=0, return_inverse=True)
+        uniqs.append(u)
+        idxs.append(inv.astype(np.int32).reshape(g))
+    u_max = max(min_u, max(u.shape[0] for u in uniqs))
+    store = np.empty((flat.shape[0], u_max, d), rows.dtype)
+    for i, u in enumerate(uniqs):
+        store[i, :u.shape[0]] = u
+        store[i, u.shape[0]:] = u[-1]            # pad: repeat last row
+    index = np.stack(idxs).reshape(lead + (g,))
+    return store.reshape(lead + (u_max, d)), index
+
+
+def decompress_rows(unique, index):
+    """Exact inverse of `compress_rows`: gather [..., U, D] unique rows
+    through the int [..., G] index map back to [..., G, D]."""
+    unique = np.asarray(unique)
+    index = np.asarray(index)
+    return np.take_along_axis(unique, index[..., None], axis=-2)
+
+
+def compress_stack(rows):
+    """Compress a [S, G, D] row STACK to (unique [S, U, D], index [G]
+    int32) with ONE index map shared across the leading stack axis —
+    the deployment form the replay kernels gather through (the map
+    rides the dispatch once; the selected stack row varies in-scan, so
+    the map must not vary with it).  Two spatial slots share a unique
+    column only if their rows agree at EVERY stack position, so U here
+    is >= any single slice's unique count.  Bit-exact round trip:
+    `decompress_rows(unique.transpose(1, 0, 2).reshape(U, -1),
+    index)` rebuilds the transposed stack."""
+    rows = np.asarray(rows)
+    assert rows.ndim == 3, rows.shape
+    s, g, d = rows.shape
+    cols = rows.transpose(1, 0, 2).reshape(g, s * d)
+    uq, idx = compress_rows(cols)
+    return (np.ascontiguousarray(
+        uq.reshape(-1, s, d).transpose(1, 0, 2)), idx)
+
+
+def rows_compression_ratio(unique, index) -> float:
+    """Stored-rows / dense-rows ratio of a compressed table: U / G.
+    < 1.0 means the unique store beats materializing every (bank,
+    region) row; the fleet tracks this as regions diverge under
+    drift."""
+    return float(unique.shape[-2]) / float(index.shape[-1])

@@ -128,7 +128,8 @@ class TestECC:
         eng = FleetEngine(pop, FleetSpec(n_epochs=1),
                           var_cfg=tiny_cfg())
         table = eng.controller.profile(pop)
-        rows = eng._rows_from_table(table)
+        rows, idx = eng._rows_from_table(table)
+        assert idx is None          # per-bank fleet: dense row state
         pr = ErrorMonitor(engine=eng.controller.engine).probe(
             pop, rows[:, 0], float(table.temp_bins[0]))
         assert pr.clean
@@ -212,6 +213,90 @@ class TestFleetEngine:
 def eng_cluster(eng):
     from repro.runtime.straggler import ClusterModel
     return ClusterModel(n_nodes=eng.pop.n_modules)
+
+
+class TestRegionFleet:
+    """regions > 1 fleet: the deployed state is the mask-compressed
+    unique-row store + shared index map, probes run at (bank, region)
+    granularity, tightening acts on unique rows (healing every region
+    that shares one), and compression telemetry rides the record."""
+
+    def test_unique_mask_scatters_shared_rows(self):
+        idx = np.array([[[0, 0], [1, 2]]], np.int32)     # [1, 2, 2]
+        fail = np.zeros((1, 2, 2), bool)
+        fail[0, 0, 1] = True          # (bank 0, region 1) shares row 0
+        um = FleetEngine._unique_mask(fail, idx, 3)
+        assert um.shape == (1, 3)
+        assert um[0].tolist() == [True, False, False]
+        fail[0, 1, 0] = True          # (bank 1, region 0) -> row 1
+        um = FleetEngine._unique_mask(fail, idx, 3)
+        assert um[0].tolist() == [True, True, False]
+
+    def test_drift_region_accel_scales_rates(self):
+        """`region_accel` multiplies the per-cell rates by the
+        row-position factor — same seed, same jitter, so 0.0 is
+        bit-exactly the pre-hierarchy trajectory."""
+        from repro.core.charge import row_positions
+        cfg = tiny_cfg(3, 4)
+        pop = tiny_pop(3, 4)
+        dm0 = DriftModel(pop, DriftConfig(), var_cfg=cfg, seed=5)
+        dm1 = DriftModel(pop, DriftConfig(region_accel=2.0),
+                         var_cfg=cfg, seed=5)
+        pos = np.asarray(row_positions(4), np.float64)
+        np.testing.assert_allclose(
+            dm1.rates, dm0.rates * (1.0 + 2.0 * pos)[:, None],
+            rtol=1e-12)
+
+    def test_probe_region_axis_consistent_with_dense(self):
+        from repro.core.timing import DDR3_1600
+        pop = tiny_pop(3, 4)
+        m, bk = pop.n_modules, pop.n_banks
+        rows3 = np.broadcast_to(DDR3_1600.as_row(),
+                                (m, bk, 6)).astype(np.float32).copy()
+        mon = ErrorMonitor()
+        p3 = mon.probe(pop, rows3, 55.0)
+        assert p3.fail_counts.shape == (m, bk)
+        # rg=1 region layout is value-identical to the dense probe
+        p41 = mon.probe(pop, rows3[:, :, None, :], 55.0)
+        assert p41.fail_counts.shape == (m, bk, 1)
+        assert np.array_equal(p41.fail_counts[..., 0], p3.fail_counts)
+        assert np.array_equal(p41.worst_margin[..., 0],
+                              p3.worst_margin)
+        # rg=2 with region-constant rows partitions the same cells
+        p42 = mon.probe(pop, np.broadcast_to(
+            rows3[:, :, None, :], (m, bk, 2, 6)).copy(), 55.0)
+        assert p42.fail_counts.shape == (m, bk, 2)
+        assert np.array_equal(p42.fail_counts.sum(axis=2),
+                              p3.fail_counts)
+        assert np.array_equal(p42.worst_margin.min(axis=2),
+                              p3.worst_margin)
+
+    @pytest.mark.slow
+    def test_region_fleet_closed_loop(self):
+        """End-to-end regions=2 error-policy month: one replay
+        dispatch per epoch, a per-region deployed table, and the
+        compression-ratio telemetry on the served rows."""
+        cfg = tiny_cfg(4, 8)
+        pop = tiny_pop(4, 8)
+        spec = FleetSpec(policy="error", n_epochs=5, n_requests=96,
+                         workload_rows=(0,), temp_bins=(55.0, 85.0),
+                         regions=2, seed=0)
+        eng = FleetEngine(pop, spec, var_cfg=cfg,
+                          drift_cfg=DriftConfig(region_accel=3.0))
+        res = eng.run()
+        assert res.replay_dispatches == spec.n_epochs
+        assert res.table.per_region and res.table.regions == 2
+        assert res.compression_ratio.shape == (spec.n_epochs,)
+        assert ((res.compression_ratio > 0.0)
+                & (res.compression_ratio <= 1.0)).all()
+        s = res.summary()
+        assert 0.0 < s["mean_compression_ratio"] <= 1.0
+        assert s["final_compression_ratio"] == res.compression_ratio[-1]
+        # the deployed state round-trips: unique store + shared map
+        rows, idx = eng._rows_from_table(res.table)
+        assert idx is not None and idx.shape == (4, pop.n_banks, 2)
+        dense = FleetEngine._dense(rows[:, 0], idx)
+        assert dense.shape == (4, pop.n_banks, 2, 6)
 
 
 class TestEpochAutotune:
